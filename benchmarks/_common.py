@@ -1,0 +1,87 @@
+"""Shared benchmark utilities: a cached briefly-trained reduced model and
+the TPU-v5e analytic communication-time model."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.config.base import SPDPlanConfig, replace
+from repro.configs import get_config
+from repro.core import model as M, simtp
+from repro.data.synthetic import calibration_batches, cloze_suite
+from repro.optim.adamw import adamw_init, adamw_update
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "bench_models")
+
+# hardware constants (TPU v5e targets; see EXPERIMENTS.md §Roofline)
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_gbps": 819e9,
+    "ici_link_gbps": 50e9,      # HBW analog (intra-pod ICI)
+    "dcn_gbps": 1.5e9,          # LBW analog (cross-pod DCN per chip)
+    "hbw_eff": 50e9,            # paper HBW=300GB/s NVLink -> ICI 50GB/s
+    "lbw_eff": 10e9,            # paper LBW=10GB/s -> same constant
+}
+
+
+def ring_all_reduce_time(payload_bytes: float, n: int, bw: float) -> float:
+    """Ring all-reduce wall time: 2 (n-1)/n * payload / bw."""
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * payload_bytes / bw
+
+
+def train_reduced(arch="smollm-360m", steps=80, tp=2, seed=0, seq=48,
+                  batch=8, lr=3e-3):
+    """Train (or load cached) a reduced model on the synthetic corpus."""
+    cfg = replace(get_config(arch, reduced=True), dtype="float32")
+    ckpt_dir = os.path.join(BENCH_DIR, f"{arch}_s{steps}_v2")
+    plan = SPDPlanConfig.none(cfg.n_layers)
+    params0 = M.init_model(jax.random.PRNGKey(seed), cfg)
+    res = load_checkpoint(ckpt_dir, tree_like=params0)
+    if res is not None:
+        return cfg, res[1]
+    split = simtp.prepare_params(params0, cfg, plan, tp)
+    gfn = simtp.make_grad_fn(cfg, plan, tp, q_chunk=64)
+    opt = adamw_init(split)
+    from repro.data.synthetic import make_batch_iterator
+    it = make_batch_iterator(cfg.vocab_size, batch, seq, seed=seed)
+    for i in range(steps):
+        b = next(it)
+        bb = {k: jnp.asarray(v) for k, v in b.items()
+              if not k.startswith("_")}
+        _, g = gfn(split, bb)
+        split, opt = adamw_update(g, opt, split, lr=lr)
+    merged = simtp.merge_stacked(split, cfg, plan, tp)
+    canonical = M.unstack_segments(merged, cfg, plan)
+    save_checkpoint(ckpt_dir, steps, canonical)
+    return cfg, canonical
+
+
+def quality(cfg, padded_or_canonical, plan, tp, calib, suite=None,
+            q_chunk=64, already_padded=False):
+    """(ppl, cloze accuracy) on the synthetic eval suites."""
+    if already_padded:
+        from repro.core.spd import prepare_deployment
+        split = prepare_deployment(cfg, padded_or_canonical, plan, tp)
+    else:
+        split = simtp.prepare_params(padded_or_canonical, cfg, plan, tp)
+    lf = simtp.make_loss_fn(cfg, plan, tp, q_chunk=q_chunk)
+    ppl = simtp.eval_ppl(lf, split, calib)
+    acc = None
+    if suite is not None:
+        lgf = simtp.make_logits_fn(cfg, plan, tp, q_chunk=q_chunk)
+        acc = simtp.eval_cloze(lgf, split, suite)
+    return ppl, acc
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def us(self, calls=1):
+        return (time.perf_counter() - self.t0) * 1e6 / max(calls, 1)

@@ -1,0 +1,140 @@
+"""Analytic per-device FLOP / HBM-byte models for the roofline terms.
+
+WHY ANALYTIC: XLA's compiled cost_analysis() counts a lax.scan body ONCE,
+not per trip — at 80 layers × 16 microbatches the module totals are off
+by 2-4 orders of magnitude (the dry-run records them; roofline.py shows
+the cross-check column).  The collective term does NOT have this problem:
+the trace-time ledger is scan-aware.  Compute and memory terms therefore
+come from first-principles models of the exact code we lowered:
+
+FLOPs (global; /chips for the per-device term):
+  matmul base       train 6·N_act·T, prefill 2·N_act·T, decode 2·N_act·B
+  attention extra   causal: Σ_layers B·S·W_eff·H·(dh_qk+dh_v)·(3 if train)
+                    (W_eff = min(S, window or S); decode: S·… per token)
+  SSD extra         T·chunk·H·(P+2N)·(3 if train)
+
+HBM bytes/device/step (what the weights+cache+activations force through
+the 819 GB/s pipe — the roofline LOWER BOUND on traffic):
+  decode   params_local + kv_cache_local          (weight/cache-bound)
+  prefill  params_local + c_act·L·T_loc·d         (c_act ≈ 8 B r/w)
+  train    (1+mb)·params_local·B_p + 3·opt_slice + c_act·L·T_loc·d·3
+           (forward read per microbatch via FSDP gather, backward grads,
+            AdamW slice read/write; activation traffic ×3 for fwd+bwd+
+            remat recompute)
+"""
+from dataclasses import dataclass
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.core.layer_kinds import layer_kinds
+
+
+def attn_extra_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Quadratic attention + SSD-chunk flops NOT captured by 2·N·D."""
+    kinds = layer_kinds(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    mult = 3.0 if shape.kind == "train" else 1.0
+    total = 0.0
+    for k in kinds:
+        if k.mixer in ("gqa", "hybrid"):
+            dh_qk = dh_v = cfg.d_head
+            h = cfg.n_heads
+            w_eff = min(s, k.window) if k.window else s
+            if shape.kind == "decode":
+                per = b * 1 * w_eff * h * (dh_qk + dh_v)
+            else:
+                per = b * s * (w_eff / 2) * h * (dh_qk + dh_v)
+            total += 2 * per * mult
+        if k.mixer == "mla":
+            m = cfg.mla
+            h = cfg.n_heads
+            dh_qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            dh_v = m.v_head_dim
+            if shape.kind == "decode":
+                per = b * 1 * s * h * (dh_qk + dh_v)
+            else:
+                per = b * s * (s / 2) * h * (dh_qk + dh_v)
+            total += 2 * per * mult
+        if k.mixer in ("ssm", "hybrid") and cfg.ssm is not None:
+            ss = cfg.ssm
+            from repro.core.blocks import ssm_heads
+            h = ssm_heads(cfg)
+            toks = b * (1 if shape.kind == "decode" else s)
+            q = 1 if shape.kind == "decode" else min(ss.chunk_size, s)
+            per = toks * q * h * (ss.head_dim + 2 * ss.d_state)
+            total += 2 * per * mult
+    return total
+
+
+def step_flops_global(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        base = 6.0 * n_act * shape.tokens
+    elif shape.kind == "prefill":
+        base = 2.0 * n_act * shape.tokens
+    else:
+        base = 2.0 * n_act * shape.global_batch
+    return base + attn_extra_flops(cfg, shape)
+
+
+def model_flops_global(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """'Useful' 6ND/2ND reference (no attention term) for the
+    MODEL_FLOPS/HLO ratio."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.tokens
+    return 2.0 * n_act * shape.global_batch
+
+
+@dataclass
+class MemModel:
+    params_local: float
+    cache_local: float
+    act_traffic: float
+    opt_traffic: float
+    total: float
+
+
+def kv_cache_bytes_global(cfg: ModelConfig, shape: ShapeConfig, tp: int,
+                          kv_bytes: float = 2.0) -> float:
+    from repro.config.base import SPDPlanConfig
+    from repro.core import model as M
+    plan = SPDPlanConfig.none(cfg.n_layers)
+    structs = M.cache_struct(cfg, plan, shape.global_batch, shape.seq_len, tp)
+    tot = 0.0
+    import jax
+    for leaf in jax.tree.leaves(structs):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        tot += n * (kv_bytes if leaf.dtype.itemsize == 2 else
+                    leaf.dtype.itemsize * kv_bytes / 2)
+    return tot
+
+
+def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, *, chips: int,
+                         tp: int, microbatches: int = 1, fsdp: bool = True,
+                         param_bytes: float = 2.0, kv_bytes: float = 2.0,
+                         act_bytes: float = 2.0) -> MemModel:
+    dp = chips // tp
+    n_total = cfg.param_count()
+    params_local = n_total * param_bytes / tp
+    t_loc = shape.tokens / dp if shape.kind != "decode" else \
+        shape.global_batch / min(dp, shape.global_batch)
+    d = cfg.d_model
+    L = cfg.n_layers
+    cache_local = 0.0
+    act = opt = 0.0
+    if shape.kind == "decode":
+        cache_local = kv_cache_bytes_global(cfg, shape, tp, kv_bytes) / chips
+        total = params_local + cache_local
+    elif shape.kind == "prefill":
+        act = 8.0 * L * t_loc * d * act_bytes / 2
+        total = params_local + act
+    else:
+        opt = 3.0 * 4.0 * n_total / tp / dp          # fp32 m/v/master slices
+        wtraffic = (1 + microbatches) * params_local
+        act = 3.0 * 6.0 * L * t_loc * d * act_bytes / 2
+        total = wtraffic + opt + act
+    return MemModel(params_local, cache_local, act, opt, total)

@@ -1,0 +1,164 @@
+"""Table 1 analog: SPD MLP-output residual-design ablation.
+
+1a (no bias): attention-output residual Y_i added BEFORE the MLP
+all-reduce (paper design: output = X + ΣY + ΣZ) vs AFTER (output =
+X + Y_i + ΣZ: the unsynced Y_i is missing (tp-1)/tp of the heads).
+1b (bias): bias residual added AFTER the all-reduce (paper design:
+counted once) vs BEFORE (counted tp times).
+
+Measured as WikiText2-analog perplexity with SPD on the FIRST block only,
+everything else TP — exactly the paper's setting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._common import Timer, quality, train_reduced
+from repro.config.base import SPDPlanConfig
+from repro.core import model as M, simtp
+from repro.core.blocks import (gqa_mixer_seq, layer_specs, pad_layer)
+from repro.core.layer_kinds import layer_kinds
+from repro.data.synthetic import calibration_batches
+from repro.models.common import layernorm, rmsnorm
+from repro.parallel.layout import make_gqa_layout
+
+
+def _variant_block(cfg, kind, split, x, tp, variant):
+    """Per-shard manual SPD block with a chosen residual design."""
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    lay = make_gqa_layout(cfg.n_heads, cfg.n_kv_heads, tp)
+
+    def norm(h, p):
+        if cfg.norm == "layernorm":
+            return layernorm(h, p["w"], p["b"], cfg.norm_eps)
+        return rmsnorm(h, p["w"], cfg.norm_eps)
+
+    def mixer(p):
+        h = norm(x, p["ln1"])
+        part, _ = gqa_mixer_seq(cfg, kind, p["attn"], h, pos, lay, "model",
+                                q_chunk=64)
+        return part
+
+    parts = jax.vmap(mixer, axis_name="model")(split)        # (tp,B,S,d) P_i
+    bo = split["attn"]["bo"][0] if "bo" in split["attn"] else None
+
+    def ffn(p, u):
+        h2 = norm(u, p["ln2"])
+        up = h2 @ p["mlp"]["wu"]
+        if cfg.mlp_bias:
+            up = up + p["mlp"]["bu"]
+        if cfg.gated_mlp:
+            g = h2 @ p["mlp"]["wg"]
+            hid = jax.nn.silu(g) * up
+        else:
+            hid = jax.nn.relu(up) if cfg.act == "relu" else jax.nn.gelu(up)
+        return hid @ p["mlp"]["wd"]
+
+    y_i = parts + (bo if bo is not None else 0.0)
+    u = x[None] + y_i
+    z = jax.vmap(ffn, in_axes=(0, 0))(split, u)
+    bd = split["mlp"]["bd"][0] if cfg.mlp_bias else 0.0
+
+    if variant == "attn_before_ar":       # paper design (Fig 3a/3b)
+        out = x + parts.sum(0) + z.sum(0) + (bo if bo is not None else 0.0)
+    elif variant == "attn_after_ar":      # Table 1a wrong choice
+        out = x + parts[0] + z.sum(0) + (bo if bo is not None else 0.0)
+    elif variant == "bias_after_ar":      # paper design for 1b == 3b
+        out = x + parts.sum(0) + bo + z.sum(0)
+    elif variant == "bias_before_ar":     # Table 1b wrong: b summed tp times
+        out = x + (parts + bo).sum(0) + z.sum(0)
+    else:
+        raise ValueError(variant)
+    return out + bd
+
+
+def _ppl_with_block0_variant(cfg, canonical, tp, calib, variant):
+    """Full-model ppl with block 0 replaced by a variant SPD block."""
+    kind = layer_kinds(cfg)[0]
+    plan = SPDPlanConfig.none(cfg.n_layers)
+    split_model = simtp.prepare_params(canonical, cfg, plan, tp)
+    split_l0 = simtp._split_with_offset(
+        pad_layer(canonical["layers"][0], cfg, kind, tp),
+        layer_specs(cfg, kind), tp, 0)
+
+    tot_ce = tot_n = 0.0
+    from repro.core.spd import capture_block_inputs
+    padded = M.pad_model(canonical, cfg, tp)
+    for batch in calib:
+        toks = jnp.asarray(batch["tokens"])
+        # embedding
+        hid = capture_block_inputs(cfg, padded, tp, [batch], q_chunk=64)[0]
+        x0 = jnp.asarray(hid[0])
+        x1 = _variant_block(cfg, kind, split_l0, x0, tp, variant)
+        # remaining layers in TP via per-layer block fns
+        x = x1
+        b, s = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        for li in range(1, cfg.n_layers):
+            k_i = layer_kinds(cfg)[li]
+            sp = simtp._split_with_offset(
+                pad_layer(canonical["layers"][li], cfg, k_i, tp),
+                layer_specs(cfg, k_i), tp, 0)
+            fn = simtp.make_block_fn(cfg, k_i, tp, drop=False, q_chunk=64)
+            x = fn(sp, x, pos)
+        # head + ce (single device math on full logits)
+        from repro.models.common import layernorm as ln, rmsnorm as rn
+        lnf = canonical["lnf"]
+        xf = (ln(x, lnf["w"], lnf["b"], cfg.norm_eps)
+              if cfg.norm == "layernorm" else rn(x, lnf["w"], cfg.norm_eps))
+        w = canonical["emb"].T if cfg.tie_embeddings else canonical["head"]
+        logits = (xf @ w).astype(jnp.float32)
+        lbl = jnp.asarray(batch["labels"])
+        lse = jax.nn.logsumexp(logits, -1)
+        pick = jnp.take_along_axis(logits, lbl[..., None], -1)[..., 0]
+        tot_ce += float(jnp.sum(lse - pick))
+        tot_n += lbl.size
+    return float(np.exp(tot_ce / tot_n))
+
+
+def run(csv):
+    rows = []
+    # Table 1a: no-bias model (llama2 analog)
+    cfg_a, canon_a = train_reduced("llama2-7b", steps=80)
+    calib = calibration_batches(cfg_a.vocab_size, 8, 48, batch=8)[:1]
+    base_plan = SPDPlanConfig.none(cfg_a.n_layers)
+    ppl_base, _ = quality(cfg_a, canon_a, base_plan, 2, calib)
+    csv("ablation/1a_no_spd", 0, f"ppl={ppl_base:.3f}")
+    for variant in ("attn_before_ar", "attn_after_ar"):
+        t = Timer()
+        ppl = _ppl_with_block0_variant(cfg_a, canon_a, 2, calib, variant)
+        csv(f"ablation/1a_{variant}", t.us(), f"ppl={ppl:.3f}")
+        rows.append({"table": "1a", "variant": variant, "ppl": ppl})
+    assert rows[0]["ppl"] <= rows[1]["ppl"], rows   # paper's choice wins
+
+    # Table 1b: bias model (OPT analog).  At reduced scale the LEARNED
+    # out-proj bias is near zero after 80 steps, so the two designs tie;
+    # the paper's 70x effect (13.07 vs 332.60 ppl) comes from a trained
+    # 6.7B bias.  We therefore test the MECHANISM structurally: boost the
+    # bias to a realistic magnitude — counting it tp x (before-AR, wrong)
+    # must then clearly lose to counting it once (after-AR, paper design).
+    cfg_b, canon_b = train_reduced("opt-6.7b", steps=80)
+    calib_b = calibration_batches(cfg_b.vocab_size, 8, 48, batch=8)[:1]
+    ppl_base_b, _ = quality(cfg_b, canon_b,
+                            SPDPlanConfig.none(cfg_b.n_layers), 2, calib_b)
+    csv("ablation/1b_no_spd", 0, f"ppl={ppl_base_b:.3f}")
+    import jax as _jax
+    boosted = dict(canon_b)
+    layers = list(canon_b["layers"])
+    l0 = _jax.tree.map(lambda x: x, layers[0])
+    a0 = dict(l0["attn"])
+    key = _jax.random.PRNGKey(5)
+    a0["bo"] = a0["bo"] + 0.2 * _jax.random.normal(key, a0["bo"].shape,
+                                                   a0["bo"].dtype)
+    l0 = dict(l0); l0["attn"] = a0
+    layers[0] = l0
+    boosted["layers"] = layers
+    got = []
+    for variant in ("bias_after_ar", "bias_before_ar"):
+        t = Timer()
+        ppl = _ppl_with_block0_variant(cfg_b, boosted, 2, calib_b, variant)
+        csv(f"ablation/1b_{variant}", t.us(), f"ppl={ppl:.3f}")
+        got.append({"table": "1b", "variant": variant, "ppl": ppl})
+    rows += got
+    assert got[0]["ppl"] < got[1]["ppl"], got       # paper's choice wins
+    return rows

@@ -1,0 +1,59 @@
+"""Fig 7/8 analog: quality vs SPD budget for ZS / ZS+B2B / ZS+B2B+HG.
+
+Reduced scale (CPU container): perplexity + induction-cloze accuracy on
+the synthetic suites, SPD budgets {25, 50, 75, 100}% of blocks, ranked by
+measured sensitivity (Algorithm 1).  The paper's qualitative claims under
+test: ZS holds quality in the in-sensitive region then degrades; B2B
+recovers SBs; HG+B2B adds recovery on top for ESBs."""
+import numpy as np
+
+from benchmarks._common import Timer, quality, train_reduced
+from repro.config.base import SPDPlanConfig
+from repro.core import model as M
+from repro.core import sensitivity as S
+from repro.core import simtp, spd as SPD
+from repro.data.synthetic import calibration_batches, cloze_suite
+
+
+def run(csv):
+    cfg, canonical = train_reduced("smollm-360m", steps=400, seq=64)
+    tp = 2
+    calib = calibration_batches(cfg.vocab_size, 16, 64, batch=8)[:2]
+    suite = cloze_suite(cfg.vocab_size, 128, 64)
+    plan0 = SPDPlanConfig.none(cfg.n_layers)
+    ppl0, acc0 = quality(cfg, canonical, plan0, tp, calib, suite)
+    csv("accuracy/baseline", 0.0, f"ppl={ppl0:.3f} cloze={acc0:.3f}")
+
+    split0 = simtp.prepare_params(canonical, cfg, plan0, tp)
+    sens = S.measure_sensitivity(cfg, split0, calib, tp, q_chunk=64)
+
+    rows = [{"budget": 0.0, "strategy": "TP", "ppl": ppl0, "acc": acc0}]
+    for budget in (0.25, 0.5, 0.75, 1.0):
+        n_spd = int(round(cfg.n_layers * budget))
+        plan = S.plan_from_ranking(sens, n_spd, cfg.n_layers)
+
+        t = Timer()
+        ppl_zs, acc_zs = quality(cfg, canonical, plan, tp, calib, suite)
+        csv(f"accuracy/zs@{int(budget*100)}", t.us(),
+            f"ppl={ppl_zs:.3f} cloze={acc_zs:.3f}")
+        rows.append({"budget": budget, "strategy": "ZS", "ppl": ppl_zs,
+                     "acc": acc_zs})
+
+        for strat, taus in (("ZS+B2B", (-1e18, 1e18)),
+                            ("ZS+B2B+HG", (-1e18, -1e17))):
+            # tau1=-inf -> every chosen block at least distills;
+            # tau2 below min sensitivity -> every chosen block is ESB
+            tau1, tau2 = taus
+            t = Timer()
+            padded, plan2, rep = SPD.apply_spd(
+                cfg, canonical, calib, tp, n_spd=n_spd, tau1=tau1,
+                tau2=tau2, lr=5e-4, epochs=3, q_chunk=64)
+            ppl_r, acc_r = quality(cfg, padded, plan2, tp, calib, suite,
+                                   already_padded=True)
+            csv(f"accuracy/{strat.lower()}@{int(budget*100)}", t.us(),
+                f"ppl={ppl_r:.3f} cloze={acc_r:.3f} "
+                f"distilled={len(rep.distill_losses)} "
+                f"grouped={len(rep.grouping)}")
+            rows.append({"budget": budget, "strategy": strat, "ppl": ppl_r,
+                         "acc": acc_r})
+    return rows

@@ -1,0 +1,189 @@
+"""§Roofline: the three terms per (arch × shape × mesh) cell.
+
+  compute term    = step_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HBM_bytes_per_device / HBM_bw
+  collective term = Σ_axis ring_time(ledger payload, group, link bw)
+
+Sources (see benchmarks/analytic.py header for WHY the first two are
+analytic): step_FLOPs and HBM bytes from first-principles models of the
+exact lowered code; collective payloads from the dry-run's scan-aware
+trace ledger; the dry-run JSON's compiled cost_analysis()/memory_analysis
+values are shown as the HLO cross-check (they undercount while-loop
+bodies, recorded as-is).
+
+Output: per-cell terms, dominant bottleneck, MODEL/step-FLOP ratio, and
+the roofline fraction = compute_term / max(all terms) — i.e. how close
+the step is to being compute-bound at peak.
+"""
+import argparse
+import glob
+import json
+import os
+
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_gbps": 819e9,
+    "ici_bw": 50e9,
+    "dcn_bw": 1.5e9,
+}
+
+
+def ring_time(payload, n, bw, op="all-reduce"):
+    """Ring-collective wall time from the op's INPUT payload bytes.
+
+    all-reduce:       2 (n-1)/n · p / bw
+    reduce-scatter:     (n-1)/n · p / bw      (p = full input)
+    all-gather:         (n-1)   · p / bw      (p = local slice; output n·p)
+    collective-permute:           p / bw
+    """
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n * payload / bw
+    if op == "reduce-scatter":
+        return (n - 1) / n * payload / bw
+    if op == "all-gather":
+        return (n - 1) * payload / bw
+    return payload / bw
+
+
+def collective_term(rec):
+    """Ledger payloads (per-device bytes) -> seconds, per mesh axis."""
+    tp = rec["tp"]
+    n = rec["n_devices"]
+    multi = rec["mesh"] == "multi"
+    dp_ici = n // tp // (2 if multi else 1)
+    t = 0.0
+    detail = {}
+    for key, payload in rec["ledger_bytes_per_device"].items():
+        op, axis = key.split("@")
+        if axis == "model":
+            tt = ring_time(payload, tp, HW["ici_bw"], op)
+        elif axis == "data":
+            tt = ring_time(payload, dp_ici, HW["ici_bw"], op)
+        elif axis == "pod":
+            tt = ring_time(payload, 2, HW["dcn_bw"], op)
+        else:  # "pod+data" composite: ICI stage + DCN stage
+            tt = (ring_time(payload, dp_ici, HW["ici_bw"], op)
+                  + ring_time(payload, 2, HW["dcn_bw"], op))
+        t += tt
+        detail[key] = tt
+    return t, detail
+
+
+def analyze(rec):
+    if not rec.get("applicable", True):
+        return None
+    from repro.config.base import SHAPES
+    from repro.configs import get_config
+    from benchmarks.analytic import (hbm_bytes_per_device,
+                                     model_flops_global, step_flops_global)
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+    tp = rec["tp"]
+    dp = chips // tp
+    mb = max(1, shape.global_batch // dp) if shape.kind == "train" else 1
+
+    flops = step_flops_global(cfg, shape)
+    t_comp = flops / (chips * HW["peak_flops_bf16"])
+    # beyond-paper variants change the byte model, not the flop model
+    pb = 1.06 if rec.get("w_int8") else 2.0     # int8 + per-col scales
+    kb = 1.12 if rec.get("kv_int8") else 2.0    # int8 + per-(pos,head) scale
+    mem = hbm_bytes_per_device(cfg, shape, chips=chips, tp=tp,
+                               microbatches=mb, param_bytes=pb,
+                               kv_bytes=kb)
+    t_mem = mem.total / HW["hbm_gbps"]
+    t_coll, detail = collective_term(rec)
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    mf = model_flops_global(cfg, shape)
+    step_time = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "spd": rec["spd"], "sync_q8": rec.get("sync_q8", False),
+        "kv_int8": rec.get("kv_int8", False),
+        "w_int8": rec.get("w_int8", False),
+        "t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
+        "dominant": dom[1],
+        "step_time_est": step_time,
+        "roofline_frac": t_comp / step_time if step_time > 0 else 0.0,
+        "model_flops": mf, "step_flops": flops,
+        "useful_ratio": mf / flops,
+        "hlo_flops_crosscheck": rec["flops_total"],
+        "mem_model": {"params_local": mem.params_local,
+                      "cache_local": mem.cache_local,
+                      "act": mem.act_traffic, "opt": mem.opt_traffic,
+                      "total": mem.total},
+        "mem_hlo_crosscheck": rec["mem_per_device"],
+        "hlo_collectives": rec["hlo_collective_op_counts"],
+        "coll_detail": detail,
+        "tokens_or_batch": rec["tokens"],
+        "kind": rec["kind"],
+    }
+
+
+def load_cells(dr_dir):
+    out = []
+    for p in sorted(glob.glob(os.path.join(dr_dir, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(rows, spd=None, mesh="single"):
+    out = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "dominant | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r is None or r["mesh"] != mesh:
+            continue
+        if spd is not None and abs(r["spd"] - spd) > 1e-9:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['t_compute']*1e3:.3f} | {r['t_memory']*1e3:.3f} "
+            f"| {r['t_collective']*1e3:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} |")
+    return "\n".join(out)
+
+
+def run(csv, dr_dir="results/dryrun2"):
+    rows = [analyze(c) for c in load_cells(dr_dir)]
+    for r in rows:
+        if r is None:
+            continue
+        csv(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/"
+            f"spd{int(r['spd']*100)}",
+            r["step_time_est"] * 1e6,
+            f"dom={r['dominant']} comp={r['t_compute']*1e3:.3f}ms "
+            f"mem={r['t_memory']*1e3:.3f}ms "
+            f"coll={r['t_collective']*1e3:.3f}ms "
+            f"frac={r['roofline_frac']:.2f}")
+    return [r for r in rows if r is not None]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dr-dir", default="results/dryrun2")
+    ap.add_argument("--md")
+    ap.add_argument("--json")
+    args = ap.parse_args()
+    rows = [analyze(c) for c in load_cells(args.dr_dir)]
+    md = []
+    for mesh in ("single", "multi"):
+        for spd in (0.0, 0.7):
+            md.append(f"\n### mesh={mesh}, SPD={int(spd*100)}%\n")
+            md.append(table(rows, spd=spd, mesh=mesh))
+    text = "\n".join(md)
+    print(text)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([r for r in rows if r], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

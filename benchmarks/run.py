@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+prints ``name,us_per_call,derived`` CSV lines.
+
+  bench_transfer     Fig 2   data-transfer time vs SPD% (HBW/LBW model)
+  bench_sensitivity  Fig 6   block sensitivity profile + ISB fraction
+  bench_accuracy     Fig 7/8 quality vs SPD budget x strategy
+  bench_ablation     Table 1 residual-design ablations (1a no-bias, 1b bias)
+  roofline           --      SRoofline terms from the dry-run artifacts
+"""
+import argparse
+import json
+import os
+import sys
+import traceback
+
+
+def _csv(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    from benchmarks import (bench_ablation, bench_accuracy,
+                            bench_sensitivity, bench_speedup,
+                            bench_transfer, roofline)
+    suites = {
+        "transfer": bench_transfer.run,
+        "sensitivity": bench_sensitivity.run,
+        "accuracy": bench_accuracy.run,
+        "ablation": bench_ablation.run,
+        "speedup": bench_speedup.run,
+        "roofline": roofline.run,
+    }
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name not in args.only:
+            continue
+        try:
+            rows = fn(_csv)
+            with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+        except Exception:
+            failures += 1
+            print(f"{name},0,FAILED")
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+from repro.config.base import (
+    MLAConfig,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    MULTI_POD,
+    SHAPES,
+    SINGLE_POD,
+    SMOKE_SHAPES,
+    SPDPlanConfig,
+    SSMConfig,
+    ShapeConfig,
+    replace,
+)
+
+__all__ = [
+    "MLAConfig", "MeshConfig", "ModelConfig", "MoEConfig", "MULTI_POD",
+    "SHAPES", "SINGLE_POD", "SMOKE_SHAPES", "SPDPlanConfig", "SSMConfig",
+    "ShapeConfig", "replace",
+]

@@ -1,0 +1,324 @@
+"""Configuration system for the SPD framework.
+
+Frozen dataclasses describe models, input shapes, meshes and SPD plans.
+Everything is hashable/static so configs can parameterize jit'd functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts feed-forward configuration."""
+
+    n_routed: int                 # number of routed experts
+    n_shared: int                 # number of always-on shared experts
+    top_k: int                    # routed experts per token
+    d_ff_expert: int              # hidden dim of each routed/shared expert
+    capacity_factor: float = 1.25  # EP dispatch capacity factor
+    router_jitter: float = 0.0
+    # some models (deepseek) keep the first layer(s) dense
+    n_dense_layers: int = 0
+    d_ff_dense: int = 0           # d_ff of the dense layers (0 -> use model d_ff)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 => full-rank queries (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 256
+    # hybrid archs attach SSM heads in parallel with attention heads
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. `family` selects the block type."""
+
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0               # 0 => d_model // n_heads
+
+    # attention options
+    attn_backend: str = "xla"     # xla | pallas (flash kernel; interpret on CPU)
+    kv_dtype: str = "model"       # "model" (= compute dtype) | "int8"
+    weight_dtype: str = "model"   # "model" | "int8" (serve-path weight-only
+                                  # quant; per-output-column scales)
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    o_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0    # stablelm: partial rotary
+    attn_window: int = 0          # 0 => full causal; >0 sliding window
+    global_attn_layers: Tuple[int, ...] = ()  # layers that ignore attn_window
+
+    # mlp options
+    mlp_bias: bool = False
+    gated_mlp: bool = True        # True: SwiGLU-style; False: plain 2-layer MLP
+    act: str = "silu"             # silu | gelu | relu
+
+    # norm / embedding
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    max_seq_len: int = 1 << 20
+    pos_emb: str = "rope"         # rope | learned (OPT)
+
+    # modality frontend stubs (audio/vlm): precomputed embeddings are
+    # projected and prepended; see models/frontend notes in DESIGN.md
+    frontend_dim: int = 0
+    frontend_len: int = 0
+
+    # family-specific
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: Optional[str] = None  # audio_stub | vision_stub (modality stubs)
+
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.d_head == 0 and self.n_heads > 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        if self.n_heads and self.n_kv_heads:
+            assert self.n_heads % self.n_kv_heads == 0, (
+                f"{self.name}: n_heads={self.n_heads} not divisible by "
+                f"n_kv_heads={self.n_kv_heads}")
+
+    # ---------------- derived quantities ----------------
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def spd_applicable(self) -> bool:
+        """SPD needs a second sync point (the MLP/MoE combine) to defer the
+        attention partial-sum to. Pure-SSM blocks have a single sync point."""
+        return not self.attn_free
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context without a dense KV cache?"""
+        if self.family == "ssm":
+            return True
+        if self.family == "hybrid" and self.attn_window > 0:
+            return True
+        return False
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-flops)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab_size
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            per_layer = (
+                d * (2 * d_in + 2 * s.n_groups * s.d_state + d_in // s.head_dim)
+                + s.d_conv * (d_in + 2 * s.n_groups * s.d_state)
+                + d_in * d + d_in  # out proj + norm-ish
+            )
+        else:
+            if self.mla is not None:
+                m = self.mla
+                q_dim = self.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                per_layer += d * q_dim if m.q_lora_rank == 0 else (
+                    d * m.q_lora_rank + m.q_lora_rank * q_dim)
+                per_layer += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                per_layer += m.kv_lora_rank * self.n_heads * (
+                    m.qk_nope_head_dim + m.v_head_dim)
+                per_layer += self.n_heads * m.v_head_dim * d
+            else:
+                kvd = self.n_kv_heads * self.d_head
+                qd = self.n_heads * self.d_head
+                per_layer += d * (qd + 2 * kvd) + qd * d
+            if self.family == "hybrid" and self.ssm is not None:
+                s = self.ssm
+                d_in = self.n_heads * self.d_head
+                per_layer += d * (d_in + 2 * s.n_groups * s.d_state
+                                  + d_in // s.head_dim)
+                per_layer += s.d_conv * (d_in + 2 * s.n_groups * s.d_state)
+            # MLP / MoE
+            if self.moe is not None:
+                mo = self.moe
+                dense_layers = mo.n_dense_layers
+                moe_layers = L - dense_layers
+                d_ff_dense = mo.d_ff_dense or self.d_ff
+                expert = 3 * d * mo.d_ff_expert if self.gated_mlp else 2 * d * mo.d_ff_expert
+                per_moe = (mo.n_routed + mo.n_shared) * expert + d * mo.n_routed
+                per_dense = (3 if self.gated_mlp else 2) * d * d_ff_dense
+                return emb + L * per_layer + moe_layers * per_moe + dense_layers * per_dense
+            else:
+                per_layer += (3 if self.gated_mlp else 2) * d * self.d_ff
+        return emb + L * per_layer
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k + shared experts)."""
+        if self.moe is None:
+            return self.param_count()
+        mo = self.moe
+        full = self.param_count()
+        expert = (3 if self.gated_mlp else 2) * self.d_model * mo.d_ff_expert
+        moe_layers = self.n_layers - mo.n_dense_layers
+        inactive = moe_layers * (mo.n_routed - mo.top_k) * expert
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """A (seq_len, global_batch, kind) workload cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# reduced shapes for smoke tests
+SMOKE_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 64, 4, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 128, 2, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 128, 4, "decode"),
+    "long_500k": ShapeConfig("long_500k", 512, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh / parallelism
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def tp(self) -> int:
+        return self.shape[self.axes.index("model")] if "model" in self.axes else 1
+
+    @property
+    def dp(self) -> int:
+        n = 1
+        for ax, s in zip(self.axes, self.shape):
+            if ax in ("data", "pod"):
+                n *= s
+        return n
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+@dataclass(frozen=True)
+class SPDPlanConfig:
+    """Which blocks drop their attention-output sync point.
+
+    `drop_mask` is a tuple of per-layer booleans (True = SPD block).
+    """
+
+    drop_mask: Tuple[bool, ...]
+
+    @property
+    def n_dropped(self) -> int:
+        return sum(self.drop_mask)
+
+    @property
+    def fraction(self) -> float:
+        return self.n_dropped / max(len(self.drop_mask), 1)
+
+    @staticmethod
+    def none(n_layers: int) -> "SPDPlanConfig":
+        return SPDPlanConfig(tuple([False] * n_layers))
+
+    @staticmethod
+    def full(n_layers: int) -> "SPDPlanConfig":
+        return SPDPlanConfig(tuple([True] * n_layers))
+
+    @staticmethod
+    def first_k(n_layers: int, k: int) -> "SPDPlanConfig":
+        return SPDPlanConfig(tuple([i < k for i in range(n_layers)]))
+
+    @staticmethod
+    def from_ranking(ranking, n_spd: int, n_layers: int) -> "SPDPlanConfig":
+        drop = [False] * n_layers
+        for idx in list(ranking)[:n_spd]:
+            drop[int(idx)] = True
+        return SPDPlanConfig(tuple(drop))
+
+    def segments(self):
+        """Contiguous runs of equal drop-flag: [(start, length, dropped)].
+
+        The model stacks per-segment params so lax.scan keeps the HLO small
+        even for heterogeneous plans."""
+        segs = []
+        if not self.drop_mask:
+            return segs
+        start, cur = 0, self.drop_mask[0]
+        for i, flag in enumerate(self.drop_mask[1:], 1):
+            if flag != cur:
+                segs.append((start, i - start, cur))
+                start, cur = i, flag
+        segs.append((start, len(self.drop_mask) - start, cur))
+        return segs
+
+
+def replace(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,45 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Ten assigned architectures + the paper's own LLaMA2/OPT configs.
+Every entry exposes `config()` (full, dry-run only) and `reduced()`
+(smoke-testable on CPU).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config.base import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    # assigned pool
+    "smollm-360m": "repro.configs.smollm_360m",
+    "qwen3-1.7b": "repro.configs.qwen3_1p7b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "stablelm-1.6b": "repro.configs.stablelm_1p6b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2p7b",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    # paper's own models
+    "llama2-7b": "repro.configs.llama2_7b",
+    "opt-6.7b": "repro.configs.opt_6p7b",
+}
+
+ASSIGNED: List[str] = list(_MODULES)[:10]
+ALL: List[str] = list(_MODULES)
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name.endswith("-reduced"):
+        name, reduced = name[: -len("-reduced")], True
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.reduced() if reduced else mod.config()
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)

@@ -1,0 +1,29 @@
+"""musicgen-medium — decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+The EnCodec frontend is a STUB per instructions: `input_specs()` provides
+precomputed frame embeddings. The backbone is a standard pre-LN transformer
+decoder with biased linear layers -> exercises SPD's bias block variant (Fig 3b).
+"""
+from repro.config.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium", family="audio",
+        n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+        d_ff=6144, vocab_size=2048,
+        qkv_bias=True, o_bias=True, mlp_bias=True,
+        gated_mlp=False, act="gelu", norm="layernorm",
+        frontend="audio_stub", frontend_dim=768, frontend_len=64,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium-reduced", family="audio",
+        n_layers=4, d_model=128, n_heads=8, n_kv_heads=8,
+        d_ff=384, vocab_size=256,
+        qkv_bias=True, o_bias=True, mlp_bias=True,
+        gated_mlp=False, act="gelu", norm="layernorm",
+        frontend="audio_stub", frontend_dim=32, frontend_len=4,
+    )

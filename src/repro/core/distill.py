@@ -1,0 +1,76 @@
+"""SPD-aware block-to-block distillation — the paper's §4.2.3 / Eq 1.
+
+Student = the block executed with SPD wiring and its OWN parameter copy
+θ_spd (initialized from θ); teacher = the same block executed as TP with
+the frozen original θ.  Loss = MSE(SPD(θ_spd, x), TP(θ, x)) on hidden
+states x captured at the block's input with all earlier blocks in TP mode
+(App. C.1 guarantees those inputs are numerically identical to the
+original model).
+
+Gradients are taken inside the vmapped shard axis (grad-inside-map); the
+parameter update runs directly on the stacked (tp, ...) leaves.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks as B
+from repro.core import model as M
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.parallel.collectives import MODEL_AXIS
+
+
+def make_distill_step(cfg, kind, tp: int, *, lr: float, q_chunk: int = 1024):
+    """Returns jit fn(student_split, opt_state, teacher_split, x, pos) ->
+    (student_split, opt_state, loss)."""
+    lay = M._gqa_layout_or_none(cfg, tp)
+
+    def per_shard(student_p, teacher_p, x, pos):
+        shard_idx = jax.lax.axis_index(MODEL_AXIS)
+
+        def mse(sp):
+            out_s, _, _ = B.block_seq(cfg, kind, lay, sp, x, pos, drop=True,
+                                      tp=tp, shard_idx=shard_idx,
+                                      axis=MODEL_AXIS, q_chunk=q_chunk)
+            out_t, _, _ = B.block_seq(cfg, kind, lay, teacher_p, x, pos,
+                                      drop=False, tp=tp, shard_idx=shard_idx,
+                                      axis=MODEL_AXIS, q_chunk=q_chunk)
+            d = (out_s - jax.lax.stop_gradient(out_t)).astype(jnp.float32)
+            return jnp.mean(d * d)
+
+        return jax.value_and_grad(mse)(student_p)
+
+    def step(student_split, opt_state, teacher_split, x, pos):
+        loss, grads = jax.vmap(per_shard, in_axes=(0, 0, None, None),
+                               axis_name=MODEL_AXIS)(
+            student_split, teacher_split, x, pos)
+        new_p, opt_state = adamw_update(grads, opt_state, student_split,
+                                        lr=lr, weight_decay=0.0)
+        return new_p, opt_state, loss[0]
+
+    return jax.jit(step)
+
+
+def b2b_distill(cfg, kind, tp: int, teacher_split, hidden_inputs: Sequence,
+                *, lr: float, epochs: int = 10, q_chunk: int = 1024):
+    """Distill one block.  hidden_inputs: list of (B,S,d) arrays (the
+    calibration mini-batches' hidden states at this block's input).
+
+    Returns (student_split, losses)."""
+    student = jax.tree.map(lambda x: x, teacher_split)   # θ_spd := θ
+    opt_state = adamw_init(student, master=True)
+    step = make_distill_step(cfg, kind, tp, lr=lr, q_chunk=q_chunk)
+    losses = []
+    for _ in range(epochs):
+        for x in hidden_inputs:
+            x = jnp.asarray(x)
+            b, s = x.shape[:2]
+            pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            student, opt_state, loss = step(student, opt_state,
+                                            teacher_split, x, pos)
+            losses.append(float(loss))
+    return student, losses

@@ -1,0 +1,374 @@
+"""SPD-aware attention head grouping — the paper's §4.2.4 (ESB recovery).
+
+Two steps, both realized as WEIGHT PERMUTATIONS (runtime code unchanged):
+
+* Head scattering (Eq 2): partition heads into tp groups maximizing the
+  intra-group sum of pairwise euclidean distances between per-head
+  attention-score vectors (anti-clustering -> functionally diverse heads
+  land on every device).
+* MLP matching (Eq 3): assign head groups to MLP shards maximizing
+  Σ ||MLP_m(A_i)|| via an exact bitmask-DP assignment (tp ≤ 16).
+
+GQA adaptation: the movable unit is a KV GROUP (a kv head moves together
+with all its query heads) — anything else breaks sharded GQA math.  This
+reduces to the paper's per-head method when n_kv == n_heads (the paper's
+MHA models).  For MLA the unit is a head (the latent KV is shared).
+Unsupported families (kv < tp replication, hybrid, ssm) return the
+identity grouping with `supported=False`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.core.layer_kinds import LayerKind
+from repro.models.common import act_fn, apply_rope, rmsnorm, layernorm
+
+
+@dataclass
+class GroupingResult:
+    supported: bool
+    groups: List[List[int]]        # per device: unit indices
+    assignment: List[int]          # assignment[m] = group index on MLP shard m
+    score: float
+
+
+# ---------------------------------------------------------------------------
+# Per-head attention-score features (canonical weights, direct math)
+# ---------------------------------------------------------------------------
+
+def _norm1(x, p, cfg):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+    return rmsnorm(x, p["ln1"]["w"], cfg.norm_eps)
+
+
+def head_score_features(cfg: ModelConfig, kind: LayerKind, layer_p: dict,
+                        x, *, max_pos: int = 64) -> np.ndarray:
+    """x (B,S,d) block input (calibration).  Returns (H, F) per-head
+    attention-score vectors (softmax probs, subsampled to max_pos rows)."""
+    h = _norm1(jnp.asarray(x), layer_p, cfg)
+    b, s, d = h.shape
+    sp = min(s, max_pos)
+    a = layer_p["attn"]
+    if cfg.mla is not None:
+        m = cfg.mla
+        hq = cfg.n_heads
+        q = (h @ a["wq"]).reshape(b, s, hq, -1)
+        qn, qr = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        qr = apply_rope(qr, pos, cfg.rope_theta)
+        ckr = h @ a["wdkv"]
+        c = rmsnorm(ckr[..., : m.kv_lora_rank], a["lnorm"], cfg.norm_eps)
+        kr = apply_rope(ckr[..., None, m.kv_lora_rank:], pos, cfg.rope_theta)
+        kn = (c @ a["wuk"]).reshape(b, s, hq, m.qk_nope_head_dim)
+        q_full = jnp.concatenate([qn, qr], -1)
+        k_full = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr, qr.shape[:2] + (hq, m.qk_rope_head_dim))], -1)
+        scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    else:
+        dh = cfg.d_head
+        q = (h @ a["wq"])
+        k = (h @ a["wk"])
+        if cfg.qkv_bias:
+            q, k = q + a["bq"], k + a["bk"]
+        q = q.reshape(b, s, cfg.n_heads, dh)
+        k = k.reshape(b, s, cfg.n_kv_heads, dh)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.qk_norm:
+            q = rmsnorm(q, a["qn"], cfg.norm_eps)
+            k = rmsnorm(k, a["kn"], cfg.norm_eps)
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_fraction)
+        g = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        q_full, k_full = q, k
+        scale = dh ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q_full[:, :sp].astype(jnp.float32),
+                        k_full[:, :sp].astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((sp, sp), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)          # (B,H,sp,sp)
+    feats = probs.transpose(1, 0, 2, 3).reshape(cfg.n_heads, -1)
+    return np.asarray(feats)
+
+
+# ---------------------------------------------------------------------------
+# Eq 2: head scattering (greedy anti-clustering over movable units)
+# ---------------------------------------------------------------------------
+
+def scatter_units(features: np.ndarray, n_groups: int) -> List[List[int]]:
+    """features (U, F) -> n_groups lists of U/n_groups unit indices
+    maximizing intra-group pairwise distance sums (Eq 2's anti-cluster):
+    greedy construction + pairwise-swap local search to a local optimum."""
+    u = features.shape[0]
+    assert u % n_groups == 0, (u, n_groups)
+    cap = u // n_groups
+    d2 = ((features[:, None] - features[None]) ** 2).sum(-1)
+    dist = np.sqrt(np.maximum(d2, 0.0))
+    order = np.argsort(-dist.sum(1), kind="stable")     # most distinct first
+    groups: List[List[int]] = [[] for _ in range(n_groups)]
+    for unit in order:
+        best, best_gain = None, -np.inf
+        for gi, g in enumerate(groups):
+            if len(g) >= cap:
+                continue
+            gain = sum(dist[unit, m] for m in g)
+            # prefer emptier groups on ties to spread seeds
+            gain -= 1e-9 * len(g)
+            if gain > best_gain:
+                best, best_gain = gi, gain
+        groups[best].append(int(unit))
+
+    # ---- swap refinement: exchange units across groups while the total
+    # intra-group distance improves (terminates: objective is bounded) ----
+    assign = np.empty(u, np.int64)
+    for gi, g in enumerate(groups):
+        for m in g:
+            assign[m] = gi
+
+    def contrib(m, gi):
+        return sum(dist[m, x] for x in range(u)
+                   if assign[x] == gi and x != m)
+
+    improved = True
+    it = 0
+    while improved and it < 20:
+        improved = False
+        it += 1
+        for a_ in range(u):
+            for b_ in range(a_ + 1, u):
+                ga, gb = assign[a_], assign[b_]
+                if ga == gb:
+                    continue
+                # a joins gb\{b}, b joins ga\{a}:
+                delta = ((contrib(a_, gb) - dist[a_, b_])
+                         + (contrib(b_, ga) - dist[a_, b_])
+                         - contrib(a_, ga) - contrib(b_, gb))
+                if delta > 1e-12:
+                    assign[a_], assign[b_] = gb, ga
+                    improved = True
+    groups = [[int(m) for m in range(u) if assign[m] == gi]
+              for gi in range(n_groups)]
+    return groups
+
+
+def intra_group_distance(features: np.ndarray,
+                         groups: List[List[int]]) -> float:
+    tot = 0.0
+    for g in groups:
+        for i in range(len(g)):
+            for j in range(i + 1, len(g)):
+                tot += float(np.linalg.norm(features[g[i]] - features[g[j]]))
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# Eq 3: MLP matching (exact max-assignment via bitmask DP)
+# ---------------------------------------------------------------------------
+
+def max_assignment(score: np.ndarray) -> List[int]:
+    """score (G, M) -> assignment a with a[m] = group for MLP shard m,
+    maximizing sum_m score[a[m], m].  Exact DP over subsets (G == M ≤ 16)."""
+    g, m = score.shape
+    assert g == m
+    full = 1 << g
+    dp = np.full(full, -np.inf)
+    par = np.full((full,), -1, np.int64)
+    dp[0] = 0.0
+    for mask in range(full):
+        if dp[mask] == -np.inf:
+            continue
+        mi = bin(mask).count("1")       # next MLP shard to fill
+        if mi == m:
+            continue
+        for gi in range(g):
+            if mask & (1 << gi):
+                continue
+            nm = mask | (1 << gi)
+            val = dp[mask] + score[gi, mi]
+            if val > dp[nm]:
+                dp[nm] = val
+                par[nm] = gi
+    out = [0] * m
+    mask = full - 1
+    for mi in range(m - 1, -1, -1):
+        gi = int(par[mask])
+        out[mi] = gi
+        mask ^= 1 << gi
+    return out
+
+
+def mlp_match_scores(cfg: ModelConfig, kind: LayerKind, layer_p: dict, x,
+                     groups: List[List[int]], units_to_heads) -> np.ndarray:
+    """score[gi, m] = mean ||MLP_m(norm2(x + Y_{A_gi}))||.
+
+    Y_{A} = attention output restricted to group A's heads (their wo rows);
+    MLP_m = the m-th 1/tp slice of the MLP weights."""
+    xj = jnp.asarray(x)
+    b, s, d = xj.shape
+    tp = len(groups)
+    a = layer_p["attn"]
+    # full attention output per head (B,S,H,dh_v)
+    h = _norm1(xj, layer_p, cfg)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.mla is not None:
+        m = cfg.mla
+        from repro.core.blocks import mla_mixer_seq  # canonical = tp1 local
+        # compute per-head outputs directly
+        hq = cfg.n_heads
+        q = (h @ a["wq"]).reshape(b, s, hq, -1)
+        qn_, qr = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+        qr = apply_rope(qr, pos, cfg.rope_theta)
+        ckr = h @ a["wdkv"]
+        c = rmsnorm(ckr[..., : m.kv_lora_rank], a["lnorm"], cfg.norm_eps)
+        kr = apply_rope(ckr[..., None, m.kv_lora_rank:], pos, cfg.rope_theta)
+        kn = (c @ a["wuk"]).reshape(b, s, hq, m.qk_nope_head_dim)
+        v = (c @ a["wuv"]).reshape(b, s, hq, m.v_head_dim)
+        qf = jnp.concatenate([qn_, qr], -1)
+        kf = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr, qr.shape[:2] + (hq, m.qk_rope_head_dim))], -1)
+        from repro.models.attention import attend, causal_mask
+        o = attend(qf, kf, v, causal_mask(pos, pos),
+                   (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+        dh_v = m.v_head_dim
+    else:
+        dh = cfg.d_head
+        q = h @ a["wq"]
+        k = h @ a["wk"]
+        v = h @ a["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + a["bq"], k + a["bk"], v + a["bv"]
+        q = q.reshape(b, s, cfg.n_heads, dh)
+        k = k.reshape(b, s, cfg.n_kv_heads, dh)
+        v = v.reshape(b, s, cfg.n_kv_heads, dh)
+        if cfg.qk_norm:
+            q = rmsnorm(q, a["qn"], cfg.norm_eps)
+            k = rmsnorm(k, a["kn"], cfg.norm_eps)
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_fraction)
+        from repro.models.attention import attend, causal_mask
+        o = attend(q, k, v, causal_mask(pos, pos))
+        dh_v = dh
+    wo = a["wo"].reshape(cfg.n_heads, dh_v, d)
+    mlp = layer_p["mlp"]
+    ff = mlp["wu"].shape[1]
+    ffl = ff // tp
+    act = act_fn(cfg.act)
+    out = np.zeros((tp, tp))
+    for gi, grp in enumerate(groups):
+        heads = [hh for u in grp for hh in units_to_heads[u]]
+        hsel = jnp.asarray(sorted(heads))
+        y = jnp.einsum("bshv,hvd->bsd", o[:, :, hsel].astype(jnp.float32),
+                       wo[hsel].astype(jnp.float32))
+        u_in = xj + y.astype(xj.dtype)
+        if cfg.norm == "layernorm":
+            h2 = layernorm(u_in, layer_p["ln2"]["w"], layer_p["ln2"]["b"],
+                           cfg.norm_eps)
+        else:
+            h2 = rmsnorm(u_in, layer_p["ln2"]["w"], cfg.norm_eps)
+        for mi in range(tp):
+            sl = slice(mi * ffl, (mi + 1) * ffl)
+            up = h2 @ mlp["wu"][:, sl]
+            if cfg.mlp_bias:
+                up = up + mlp["bu"][sl]
+            if cfg.gated_mlp:
+                g_ = h2 @ mlp["wg"][:, sl]
+                if cfg.mlp_bias and "bg" in mlp:
+                    g_ = g_ + mlp["bg"][sl]
+                hid = act(g_) * up
+            else:
+                hid = act(up)
+            z = hid @ mlp["wd"][sl]
+            out[gi, mi] = float(jnp.mean(
+                jnp.linalg.norm(z.astype(jnp.float32), axis=-1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Driver + weight permutation
+# ---------------------------------------------------------------------------
+
+def _units(cfg: ModelConfig):
+    """Movable units -> list of q-head lists (kv-group granularity)."""
+    if cfg.mla is not None:
+        return [[h] for h in range(cfg.n_heads)]
+    g = cfg.n_heads // cfg.n_kv_heads
+    return [list(range(kv * g, (kv + 1) * g)) for kv in range(cfg.n_kv_heads)]
+
+
+def group_heads(cfg: ModelConfig, kind: LayerKind, layer_p: dict, x,
+                tp: int) -> GroupingResult:
+    ident = GroupingResult(False, [], list(range(tp)), 0.0)
+    if kind.mixer not in ("gqa", "mla") or kind.ffn != "mlp":
+        return ident
+    units = _units(cfg)
+    if len(units) % tp != 0:
+        return ident            # kv-replication case: documented fallback
+    feats = head_score_features(cfg, kind, layer_p, x)
+    unit_feats = np.stack([feats[u].mean(0) for u in units])
+    groups = scatter_units(unit_feats, tp)
+    score = mlp_match_scores(cfg, kind, layer_p, x, groups, units)
+    assignment = max_assignment(score)
+    total = float(sum(score[assignment[m], m] for m in range(tp)))
+    return GroupingResult(True, groups, assignment, total)
+
+
+def apply_grouping(layer_p: dict, cfg: ModelConfig, res: GroupingResult,
+                   tp: int) -> dict:
+    """Permute canonical attention weights so head group res.groups[a[m]]
+    lands on device m (MLP weights untouched)."""
+    if not res.supported:
+        return layer_p
+    units = _units(cfg)
+    new_head_order = []
+    for m in range(tp):
+        grp = res.groups[res.assignment[m]]
+        for u in grp:
+            new_head_order.extend(units[u])
+    idx = np.asarray(new_head_order)
+    a = dict(layer_p["attn"])
+    d = cfg.d_model
+
+    def perm_cols(w, n_heads, dh):
+        return w.reshape(w.shape[0], n_heads, dh)[:, idx_for(n_heads)] \
+                .reshape(w.shape[0], -1)
+
+    def idx_for(n_heads):
+        if n_heads == cfg.n_heads:
+            return idx
+        # kv heads: unit order at kv granularity
+        kv_idx = []
+        for m in range(tp):
+            grp = res.groups[res.assignment[m]]
+            kv_idx.extend(grp)
+        return np.asarray(kv_idx)
+
+    if cfg.mla is not None:
+        m_ = cfg.mla
+        qd = m_.qk_nope_head_dim + m_.qk_rope_head_dim
+        a["wq"] = perm_cols(a["wq"], cfg.n_heads, qd)
+        a["wuk"] = perm_cols(a["wuk"], cfg.n_heads, m_.qk_nope_head_dim)
+        a["wuv"] = perm_cols(a["wuv"], cfg.n_heads, m_.v_head_dim)
+        wo = a["wo"].reshape(cfg.n_heads, m_.v_head_dim, d)
+        a["wo"] = wo[idx].reshape(-1, d)
+    else:
+        dh = cfg.d_head
+        a["wq"] = perm_cols(a["wq"], cfg.n_heads, dh)
+        a["wk"] = perm_cols(a["wk"], cfg.n_kv_heads, dh)
+        a["wv"] = perm_cols(a["wv"], cfg.n_kv_heads, dh)
+        wo = a["wo"].reshape(cfg.n_heads, dh, d)
+        a["wo"] = wo[idx].reshape(-1, d)
+        if cfg.qkv_bias:
+            a["bq"] = a["bq"].reshape(cfg.n_heads, dh)[idx].reshape(-1)
+            kvi = idx_for(cfg.n_kv_heads)
+            a["bk"] = a["bk"].reshape(cfg.n_kv_heads, dh)[kvi].reshape(-1)
+            a["bv"] = a["bv"].reshape(cfg.n_kv_heads, dh)[kvi].reshape(-1)
+    out = dict(layer_p)
+    out["attn"] = a
+    return out

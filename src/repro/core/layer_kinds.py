@@ -1,0 +1,59 @@
+"""Layer-kind descriptors: which mixer/FFN a given layer index uses.
+
+Segments of consecutive layers with the same (kind, spd-flag) stack their
+params for a lax.scan, keeping the HLO small at 80 layers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.config.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class LayerKind:
+    mixer: str           # gqa | mla | ssm | hybrid
+    ffn: str             # mlp | moe | none
+    window: int = 0      # 0 = full causal attention
+    d_ff: int = 0        # per-layer mlp width override (deepseek dense layer)
+
+
+def layer_kinds(cfg: ModelConfig) -> Tuple[LayerKind, ...]:
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            kinds.append(LayerKind(mixer="ssm", ffn="none"))
+            continue
+        mixer = "gqa"
+        if cfg.mla is not None:
+            mixer = "mla"
+        if cfg.family == "hybrid":
+            mixer = "hybrid"
+        window = cfg.attn_window
+        if window and i in cfg.global_attn_layers:
+            window = 0
+        if cfg.moe is not None and i >= cfg.moe.n_dense_layers:
+            kinds.append(LayerKind(mixer=mixer, ffn="moe", window=window))
+        else:
+            d_ff = cfg.d_ff
+            if cfg.moe is not None and cfg.moe.d_ff_dense:
+                d_ff = cfg.moe.d_ff_dense
+            kinds.append(LayerKind(mixer=mixer, ffn="mlp", window=window,
+                                   d_ff=d_ff))
+    return tuple(kinds)
+
+
+def plan_segments(cfg: ModelConfig, drop_mask: Tuple[bool, ...]):
+    """Runs of consecutive layers sharing (kind, dropped):
+    [(start, length, kind, dropped)]."""
+    kinds = layer_kinds(cfg)
+    assert len(drop_mask) == cfg.n_layers
+    segs = []
+    start = 0
+    for i in range(1, cfg.n_layers + 1):
+        if (i == cfg.n_layers or kinds[i] != kinds[start]
+                or drop_mask[i] != drop_mask[start]):
+            segs.append((start, i - start, kinds[start], drop_mask[start]))
+            start = i
+    return segs

@@ -1,0 +1,243 @@
+"""Simulated tensor parallelism: the TP shard axis as a vmap axis.
+
+``vmap(fn, axis_name="model")`` over a leading (tp, ...) parameter axis
+executes EXACTLY the distributed math on one CPU device: `lax.psum` over
+the vmapped axis is the all-reduce, a dropped sync point keeps the axis
+divergent.  All of the paper's algorithms (sensitivity sweep, Algorithm 1
+tiering, block-to-block distillation, head grouping, quality evals) run on
+this engine; tests assert its outputs match the shard_map engine
+bit-for-bit (same weights, same inputs).
+
+Gradients are ALWAYS taken inside the vmapped function (grad-inside-map):
+the custom-VJP collectives are only correct in that regime.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, SPDPlanConfig
+from repro.core import blocks as B
+from repro.core import model as M
+from repro.core.layer_kinds import layer_kinds, plan_segments
+from repro.parallel.collectives import MODEL_AXIS
+from repro.parallel.layout import REPLICATED, merge_leaf, split_leaf
+
+
+# ---------------------------------------------------------------------------
+# Param splitting: stacked/padded tree -> leading (tp, ...) axis per leaf
+# ---------------------------------------------------------------------------
+
+def _split_with_offset(tree, specs, tp, offset):
+    def one(w, a):
+        if a == REPLICATED:
+            return jnp.broadcast_to(w[None], (tp,) + w.shape)
+        return split_leaf(w, a + offset, tp)
+    return jax.tree.map(one, tree, specs)
+
+
+def split_stacked(stacked: dict, cfg: ModelConfig, plan: SPDPlanConfig,
+                  tp: int) -> dict:
+    specs = M.stacked_specs(cfg, plan)
+    out = {}
+    for k, v in stacked.items():
+        if k == "segs":
+            out["segs"] = [
+                _split_with_offset(sv, ss, tp, offset=1)
+                for sv, ss in zip(v, specs["segs"])]
+        else:
+            out[k] = _split_with_offset(v, specs[k], tp, offset=0)
+    return out
+
+
+def merge_stacked(split: dict, cfg: ModelConfig, plan: SPDPlanConfig,
+                  tp: int) -> dict:
+    specs = M.stacked_specs(cfg, plan)
+
+    def one(w, a):
+        if a == REPLICATED:
+            return w[0]
+        return merge_leaf(w, a + 0, tp)   # adjusted below per group
+
+    out = {}
+    for k, v in split.items():
+        if k == "segs":
+            out["segs"] = [
+                jax.tree.map(
+                    lambda w, a: w[0] if a == REPLICATED
+                    else merge_leaf(w, a + 1, tp), sv, ss)
+                for sv, ss in zip(v, specs["segs"])]
+        else:
+            out[k] = jax.tree.map(
+                lambda w, a: w[0] if a == REPLICATED else merge_leaf(w, a, tp),
+                v, specs[k])
+    return out
+
+
+def prepare_params(canonical: dict, cfg: ModelConfig, plan: SPDPlanConfig,
+                   tp: int) -> dict:
+    """canonical -> padded -> stacked -> split (ready for the sim engine)."""
+    padded = M.pad_model(canonical, cfg, tp)
+    stacked = M.stack_segments(padded, cfg, plan)
+    return split_stacked(stacked, cfg, plan, tp)
+
+
+# ---------------------------------------------------------------------------
+# Engine functions (all vmapped over the model axis)
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg, plan, tp, *, q_chunk=1024, remat=False, dual=False):
+    """jit fn(split_params, batch[, dual_flags]) -> (loss, metrics)."""
+
+    def per_shard(p, batch, flags):
+        return M.loss_fn(cfg, p, plan, batch, tp=tp, q_chunk=q_chunk,
+                         remat=remat, dual_flags=flags)
+
+    if dual:
+        def fn(split_params, batch, dual_flags):
+            loss, met = jax.vmap(per_shard, in_axes=(0, None, None),
+                                 axis_name=MODEL_AXIS)(
+                split_params, batch, dual_flags)
+            return loss[0], jax.tree.map(lambda x: x[0], met)
+        return jax.jit(fn)
+
+    def fn(split_params, batch):
+        loss, met = jax.vmap(lambda p, b: per_shard(p, b, None),
+                             in_axes=(0, None), axis_name=MODEL_AXIS)(
+            split_params, batch)
+        return loss[0], jax.tree.map(lambda x: x[0], met)
+    return jax.jit(fn)
+
+
+def make_grad_fn(cfg, plan, tp, *, q_chunk=1024, remat=False):
+    """jit fn(split_params, batch) -> (loss, grads) — grad inside vmap."""
+
+    def per_shard(p, batch):
+        def lf(pp):
+            return M.loss_fn(cfg, pp, plan, batch, tp=tp, q_chunk=q_chunk,
+                             remat=remat)[0]
+        return jax.value_and_grad(lf)(p)
+
+    def fn(split_params, batch):
+        loss, grads = jax.vmap(per_shard, in_axes=(0, None),
+                               axis_name=MODEL_AXIS)(split_params, batch)
+        return loss[0], grads
+    return jax.jit(fn)
+
+
+def make_logits_fn(cfg, plan, tp, *, q_chunk=1024):
+    """jit fn(split_params, tokens[, embeds]) -> full logits (B,S,V) fp32."""
+
+    def per_shard(p, tokens, embeds):
+        x, _, _, prefix = M.forward_seq(cfg, p, plan, tokens, tp=tp,
+                                        embeds=embeds, q_chunk=q_chunk)
+        return M.lm_logits(p, cfg, x[:, prefix:], MODEL_AXIS)
+
+    def fn(split_params, tokens, embeds=None):
+        lg = jax.vmap(per_shard, in_axes=(0, None, None),
+                      axis_name=MODEL_AXIS)(split_params, tokens, embeds)
+        tp_, b, s, vl = lg.shape
+        full = jnp.moveaxis(lg, 0, 2).reshape(b, s, tp_ * vl)
+        return full[..., : cfg.vocab_size]
+    return jax.jit(fn)
+
+
+def make_collect_fn(cfg, plan, tp, *, q_chunk=1024):
+    """jit fn(split_params, tokens) -> per-layer block INPUTS
+    (L+1, B, S, d) — entry L is the final-layer output (pre final norm).
+    Replicated across shards, so shard 0's copy is returned."""
+    segs = plan_segments(cfg, plan.drop_mask)
+    kinds = layer_kinds(cfg)
+
+    def per_shard(p, tokens):
+        shard_idx = jax.lax.axis_index(MODEL_AXIS)
+        lay = M._gqa_layout_or_none(cfg, tp)
+        x = M.embed_tokens(p["emb"], tokens, MODEL_AXIS, shard_idx)
+        b, s = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        outs = [x]
+        for seg_i, (start, length, kind, dropped) in enumerate(segs):
+            sp = p["segs"][seg_i]
+
+            def body(xc, layer_p, kind=kind, dropped=dropped):
+                out, _, _ = B.block_seq(cfg, kind, lay, layer_p, xc, pos,
+                                        drop=dropped, tp=tp,
+                                        shard_idx=shard_idx, axis=MODEL_AXIS,
+                                        q_chunk=q_chunk)
+                return out, out
+
+            x, ys = jax.lax.scan(body, x, sp)
+            outs.append(ys)                      # (length, B, S, d)
+        first = outs[0][None]
+        rest = [o for o in outs[1:]]
+        return jnp.concatenate([first] + rest, 0)
+
+    def fn(split_params, tokens):
+        h = jax.vmap(per_shard, in_axes=(0, None),
+                     axis_name=MODEL_AXIS)(split_params, tokens)
+        return h[0]
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Single-block apply (distillation & ablations)
+# ---------------------------------------------------------------------------
+
+def split_layer(layer_params: dict, cfg, kind, tp: int) -> dict:
+    padded = B.pad_layer(layer_params, cfg, kind, tp)
+    specs = B.layer_specs(cfg, kind)
+    return _split_with_offset(padded, specs, tp, offset=0)
+
+
+def merge_layer(split: dict, cfg, kind, tp: int) -> dict:
+    """Inverse of split_layer up to head padding (padded canonical)."""
+    specs = B.layer_specs(cfg, kind)
+    return jax.tree.map(
+        lambda w, a: w[0] if a == REPLICATED else merge_leaf(w, a, tp),
+        split, specs)
+
+
+def make_block_fn(cfg, kind, tp, *, drop: bool, q_chunk=1024):
+    """jit fn(split_layer_params, x (B,S,d), pos) -> block output (B,S,d)."""
+    lay = M._gqa_layout_or_none(cfg, tp)
+
+    def per_shard(p, x, pos):
+        shard_idx = jax.lax.axis_index(MODEL_AXIS)
+        out, _, _ = B.block_seq(cfg, kind, lay, p, x, pos, drop=drop, tp=tp,
+                                shard_idx=shard_idx, axis=MODEL_AXIS,
+                                q_chunk=q_chunk)
+        return out
+
+    def fn(split_p, x, pos):
+        out = jax.vmap(per_shard, in_axes=(0, None, None),
+                       axis_name=MODEL_AXIS)(split_p, x, pos)
+        return out[0]
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Quality evaluation
+# ---------------------------------------------------------------------------
+
+def eval_ppl(loss_fn, split_params, batches, dual_flags=None) -> float:
+    tot_ce, tot_n = 0.0, 0.0
+    for b in batches:
+        batch = {k: jnp.asarray(v) for k, v in b.items() if not k.startswith("_")}
+        if dual_flags is not None:
+            _, met = loss_fn(split_params, batch, dual_flags)
+        else:
+            _, met = loss_fn(split_params, batch)
+        tot_ce += float(met["sum_ce"])
+        tot_n += float(met["n_tok"])
+    return float(np.exp(tot_ce / max(tot_n, 1.0)))
+
+
+def eval_cloze(logits_fn, split_params, suite) -> float:
+    lg = logits_fn(split_params, jnp.asarray(suite["tokens"]))
+    qp = suite["query_pos"]
+    pred = np.asarray(jnp.argmax(lg[np.arange(len(qp)), qp], -1))
+    return float((pred == suite["answer"]).mean())

@@ -1,0 +1,123 @@
+"""Algorithm 1: sensitivity-ranked, multi-tier SPD application.
+
+Given a trained model (canonical params), a calibration set, a TP degree
+and a budget N_spd, this driver:
+
+  1. measures block-wise sync sensitivity (core/sensitivity.py),
+  2. ranks blocks ascending, takes the first N_spd,
+  3. classifies each into ISB / SB / ESB via (τ1, τ2),
+  4. ISB  -> zero-shot drop,
+     SB   -> SPD-aware block-to-block distillation (core/distill.py),
+     ESB  -> head-grouping init (core/grouping.py) + distillation,
+  5. returns deployment-ready PADDED per-layer params (distilled SPD
+     weights are TP-degree-specific, hence padded space) + the plan.
+
+The working representation is `pad_model` output (padded, per-layer list);
+engines consume it via stack_segments + split/shard.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.config.base import ModelConfig, SPDPlanConfig
+from repro.core import distill as D
+from repro.core import grouping as G
+from repro.core import model as M
+from repro.core import sensitivity as S
+from repro.core import simtp
+from repro.core.blocks import layer_specs, pad_layer
+from repro.core.layer_kinds import layer_kinds
+
+
+@dataclass
+class SPDReport:
+    sensitivity: np.ndarray
+    ppl_suffix: np.ndarray
+    ranking: np.ndarray
+    categories: List[str]              # per chosen block (ranking order)
+    chosen: List[int]
+    distill_losses: Dict[int, List[float]] = field(default_factory=dict)
+    grouping: Dict[int, "G.GroupingResult"] = field(default_factory=dict)
+
+
+def capture_block_inputs(cfg, padded, tp, calib_batches, *, q_chunk=1024):
+    """Hidden states at every block's input, all-TP mode, per calib batch.
+    Returns list over batches of (L+1,B,S,d) arrays."""
+    plan = SPDPlanConfig.none(cfg.n_layers)
+    stacked = M.stack_segments(padded, cfg, plan)
+    split = simtp.split_stacked(stacked, cfg, plan, tp)
+    collect = simtp.make_collect_fn(cfg, plan, tp, q_chunk=q_chunk)
+    outs = []
+    for b in calib_batches:
+        outs.append(np.asarray(collect(split, np.asarray(b["tokens"]))))
+    return outs
+
+
+def apply_spd(cfg: ModelConfig, canonical: dict, calib_batches, tp: int, *,
+              n_spd: int, tau1: float, tau2: float, lr: float = 5e-5,
+              epochs: int = 10, strategies=("ZS", "B2B", "HG"),
+              q_chunk: int = 1024):
+    """Returns (padded_params_final, plan, report)."""
+    kinds = layer_kinds(cfg)
+    padded = M.pad_model(canonical, cfg, tp)
+    if not cfg.spd_applicable:
+        plan = SPDPlanConfig.none(cfg.n_layers)
+        rep = SPDReport(np.zeros(cfg.n_layers), np.zeros(cfg.n_layers + 1),
+                        np.arange(cfg.n_layers), [], [])
+        return padded, plan, rep
+
+    # ---- 1-2: sensitivity + ranking ----
+    plan0 = SPDPlanConfig.none(cfg.n_layers)
+    stacked0 = M.stack_segments(padded, cfg, plan0)
+    split0 = simtp.split_stacked(stacked0, cfg, plan0, tp)
+    res = S.measure_sensitivity(cfg, split0, calib_batches, tp,
+                                q_chunk=q_chunk)
+    chosen = [int(i) for i in res.ranking[:n_spd]]
+    cats = S.classify(res.sensitivity[chosen], tau1, tau2)
+    plan = SPDPlanConfig.from_ranking(res.ranking, n_spd, cfg.n_layers)
+    report = SPDReport(res.sensitivity, res.ppl_suffix, res.ranking,
+                       cats, chosen)
+
+    need_recovery = [i for i, c in zip(chosen, cats) if c != S.ISB]
+    if not need_recovery or "B2B" not in strategies:
+        return padded, plan, report
+
+    # ---- hidden states at block inputs (TP mode, App C.1) ----
+    hiddens = capture_block_inputs(cfg, padded, tp, calib_batches,
+                                   q_chunk=q_chunk)
+
+    new_layers = list(padded["layers"])
+    for bi, cat in zip(chosen, cats):
+        if cat == S.ISB:
+            continue
+        kind = kinds[bi]
+        layer_canonical = canonical["layers"][bi]
+        if cat == S.ESB and "HG" in strategies:
+            xs0 = hiddens[0][bi]
+            gres = G.group_heads(cfg, kind, layer_canonical, xs0, tp)
+            report.grouping[bi] = gres
+            layer_canonical = G.apply_grouping(layer_canonical, cfg, gres, tp)
+        # teacher = (possibly permuted) TP weights
+        teacher_padded = pad_layer(layer_canonical, cfg, kind, tp)
+        teacher_split = simtp._split_with_offset(
+            teacher_padded, layer_specs(cfg, kind), tp, offset=0)
+        xs = [h[bi] for h in hiddens]
+        student_split, losses = D.b2b_distill(
+            cfg, kind, tp, teacher_split, xs, lr=lr, epochs=epochs,
+            q_chunk=q_chunk)
+        report.distill_losses[bi] = losses
+        new_layers[bi] = simtp.merge_layer(student_split, cfg, kind, tp)
+
+    out = dict(padded)
+    out["layers"] = new_layers
+    return out, plan, report
+
+
+def prepare_deployment(cfg, padded, plan, tp):
+    """Padded per-layer params + plan -> sim-engine-ready split tree."""
+    stacked = M.stack_segments(padded, cfg, plan)
+    return simtp.split_stacked(stacked, cfg, plan, tp)

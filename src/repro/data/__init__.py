@@ -1,0 +1,5 @@
+from repro.data.synthetic import (SyntheticLM, calibration_batches,
+                                  cloze_suite, make_batch_iterator)
+
+__all__ = ["SyntheticLM", "calibration_batches", "cloze_suite",
+           "make_batch_iterator"]

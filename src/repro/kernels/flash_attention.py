@@ -1,0 +1,109 @@
+"""Causal flash attention — Pallas TPU kernel.
+
+TPU-native adaptation (not a CUDA port): the online-softmax accumulators
+live in VMEM scratch; the grid is (batch*q_heads, q_blocks, k_blocks)
+with the k dimension minor-most — TPU grids execute sequentially over the
+minor dimension, so scratch carries (m, l, acc) across k blocks and the
+output is finalized on the last one.  Block shapes default to 128×128,
+matching the MXU systolic tile; GQA is handled in the BlockSpec index
+maps (the kv block for q-head h comes from kv-head h // group — no
+materialized head broadcast in HBM).
+
+Validated on CPU via interpret=True against ref.py (tests sweep shapes
+and dtypes); the model's XLA path (models/attention.py) is the same
+contraction and serves as the non-TPU fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, block_q: int, block_k: int, causal: bool,
+                  n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (bq, d)
+    k = k_ref[0].astype(jnp.float32)               # (bk, d)
+    v = v_ref[0].astype(jnp.float32)               # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                               # (bq, bk)
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        cols = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = rows >= cols
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev[:, 0] - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    if causal:
+        p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * corr[:, None] + jnp.sum(p, axis=1)[:, None]
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_cur[:, None]
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, sm_scale=None, causal=True,
+                         block_q=128, block_k=128, interpret=False):
+    """q (BH, Sq, D); k/v (BHkv, Sk, D), BH % BHkv == 0, heads-major
+    packing so that q row b uses kv row b // group (see ops.py).
+    Requires Sq % block_q == Sk % block_k == 0 (ops.py pads)."""
+    bh, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    assert bh % bhkv == 0, (bh, bhkv)
+    group = bh // bhkv
+    sm_scale = float(sm_scale if sm_scale is not None else d ** -0.5)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    n_q = sq // block_q
+    n_k = sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+        causal=causal, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, qi, ki, g=group: (b // g, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, qi, ki, g=group: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+        ],
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, sm_scale=None, causal=True):
+    """q (BH,Sq,D), k/v (BHkv,Sk,D) heads-major GQA packing."""
+    bh, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    g = bh // bhkv
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def fused_residual_rmsnorm_ref(x, r, w, eps: float = 1e-5):
+    """(x + r) -> rmsnorm -> * w ; returns (normed, x + r)."""
+    s = (x.astype(jnp.float32) + r.astype(jnp.float32))
+    var = jnp.mean(s * s, axis=-1, keepdims=True)
+    y = s * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype), s.astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, a, bm, cm, dd, *, chunk: int):
+    """Single-(batch*head) SSD oracle.  x (S,P), dt (S,), a scalar,
+    bm/cm (S,N), dd scalar.  Returns y (S,P)."""
+    from repro.models.ssm import ssd_chunked
+    y, _ = ssd_chunked(x[None, :, None], dt[None, :, None], a[None],
+                       bm[None, :, None], cm[None, :, None], dd[None],
+                       chunk=chunk)
+    return y[0, :, 0]

@@ -1,0 +1,90 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+One (batch*head) stream per grid row; the chunk dimension is the
+minor-most grid axis, so the recurrent state (P, N) lives in VMEM scratch
+and is carried across sequential chunk iterations (TPU grid order
+guarantee) — the HBM traffic is exactly one read of (x, dt, B, C) and one
+write of y per token, with the quadratic intra-chunk work done on MXU
+tiles in VMEM.  This is the TPU-native shape of the SSD algorithm: the
+CUDA version's warp-level segsum becomes a (chunk × chunk) masked matmul.
+
+Validated in interpret mode against kernels/ref.py::ssd_scan_ref (itself
+cross-checked against the O(S) sequential recurrence in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref, *,
+            chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, 1)
+    a = a_ref[0].astype(jnp.float32)        # (1, 1) scalar decay rate
+    bm = b_ref[0].astype(jnp.float32)       # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)       # (Q, N)
+    dd = d_ref[0].astype(jnp.float32)       # (1, 1) skip
+
+    da = dt[:, 0] * a[0, 0]                 # (Q,)
+    csum = jnp.cumsum(da)                   # (Q,)
+    # intra-chunk decay matrix L[i,j] = exp(csum_i - csum_j) for i >= j
+    diff = csum[:, None] - csum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.where(rows >= cols, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = scores * l_mat * dt[:, 0][None, :]          # (Q, Q)
+    y_intra = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter-chunk: y += exp(csum) * C @ state  (state (P, N))
+    state = state_ref[...]
+    y_inter = jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(csum)[:, None]
+    y = y_intra + y_inter + x * dd[0, 0]
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update: S <- exp(total) S + sum_j exp(total - csum_j) dt_j x_j B_j^T
+    total = csum[-1]
+    w = (jnp.exp(total - csum) * dt[:, 0])               # (Q,)
+    upd = jax.lax.dot_general(x * w[:, None], bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = jnp.exp(total) * state + upd
+
+
+def ssd_scan(x, dt, a, bm, cm, dd, *, chunk: int = 128, interpret=False):
+    """x (BH, S, P); dt (BH, S); a (BH,); bm/cm (BH, S, N); dd (BH,).
+    S % chunk == 0 (ops.py pads).  Returns y (BH, S, P)."""
+    bh, s, p = x.shape
+    n = bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+        name="ssd_scan",
+    )(x, dt[..., None], a[:, None, None], bm, cm, dd[:, None, None])

@@ -1,0 +1,79 @@
+"""Training driver: ``python -m repro.launch.train --arch smollm-360m-reduced
+--steps 200 --tp 2 --dp 2``.
+
+Full-scale configs target the production mesh (see dryrun.py); on this
+CPU container use the ``-reduced`` configs.  The driver wires the
+synthetic data pipeline, the shard_map train step (FSDP or ZeRO-1), the
+checkpoint manager and the fault-tolerant loop (runtime/trainer.py).
+"""
+import argparse
+import json
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host platform device count (CPU)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--spd", type=float, default=0.0,
+                    help="fraction of blocks dropped (structural plan; use "
+                         "examples/train_sensitivity_spd.py for the "
+                         "sensitivity-ranked pipeline)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dtype", default="float32")
+    args = ap.parse_args()
+
+    n_dev = args.devices or (args.tp * args.dp)
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.config.base import SPDPlanConfig, replace
+    from repro.configs import get_config
+    from repro.core import model as M
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim.schedule import make_schedule
+    from repro.parallel import tp as TP
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = replace(get_config(args.arch), dtype=args.dtype)
+    mesh = make_test_mesh(args.dp, args.tp)
+    k = int(round(cfg.n_layers * args.spd)) if cfg.spd_applicable else 0
+    plan = SPDPlanConfig.first_k(cfg.n_layers, k)
+
+    params = M.init_model(jax.random.PRNGKey(args.seed), cfg)
+    ts = TP.TrainStepConfig(microbatches=args.microbatches, remat=True,
+                            q_chunk=min(1024, args.seq), lr=args.lr,
+                            fsdp=args.fsdp)
+    sched = make_schedule("cosine", base_lr=args.lr, warmup=10,
+                          total=args.steps)
+    tc = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, seed=args.seed,
+                       batch=args.batch, seq=args.seq)
+    trainer = Trainer(cfg, plan, mesh, ts, tc, lr_schedule=sched)
+    state = trainer.init_state(params)
+    restored = trainer.restore(state_like=state)
+    if restored is not None:
+        print(f"resumed from step {restored['step']}")
+        state = restored
+    state = trainer.run(state)
+    last = trainer.metrics_log[-1] if trainer.metrics_log else {}
+    print(json.dumps({"final_step": state["step"],
+                      "final_loss": last.get("loss"),
+                      "stragglers": len(trainer.straggler_events)}))
+
+
+if __name__ == "__main__":
+    main()

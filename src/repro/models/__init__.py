@@ -1,0 +1,1 @@
+"""Pure-JAX model zoo shared by both execution engines."""

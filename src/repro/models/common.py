@@ -1,0 +1,75 @@
+"""Shared model components: norms, activations, RoPE, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x, w, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def layernorm(x, w, b, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * w + b
+
+
+def norm_apply(x, p, cfg):
+    """Dispatch on cfg.norm; p is {"w": ...} or {"w":..., "b":...}."""
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_rot: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, d_rot, 2, dtype=np.float32) / d_rot))
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., S, H, Dh); positions: (..., S) int32.  Rotates the first
+    `fraction` of Dh (stablelm partial rotary), rotate-half convention."""
+    dh = x.shape[-1]
+    d_rot = int(dh * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    inv = jnp.asarray(rope_freqs(d_rot, theta))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, d_rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]   # broadcast over heads
+    sin = sin[..., None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., : d_rot // 2], xr[..., d_rot // 2:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (deterministic per-leaf from a path hash)
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def fold_path(key, path: str):
+    h = np.uint32(abs(hash(path)) % (2 ** 31))
+    return jax.random.fold_in(key, h)

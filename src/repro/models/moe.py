@@ -1,0 +1,102 @@
+"""Mixture-of-experts FFN — shard-local math with EP on the TP axis.
+
+Experts are sharded over the "model" mesh axis (EP degree == TP degree).
+Activations entering the block are replicated over that axis, so there is
+no all-to-all: every shard routes all tokens, runs its LOCAL experts on
+the tokens routed to them (capacity-bounded gather dispatch), and the
+weighted combine rides the block's single output all-reduce — which is
+exactly the sync point SPD's deferred attention residual is added to.
+
+Shard-local expert weights: wg/wu (E_l, d, ff), wd (E_l, ff, d) where
+E_l = padded_experts / tp (zero-padded experts route nothing: the router
+logit rows for padding experts are -inf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn
+
+
+def route(h, w_router, top_k: int, n_routed: int):
+    """h (T,d) fp32 router input; w_router (d, E_pad).
+
+    Returns gates (T,k), expert ids (T,k) in PADDED global numbering, plus
+    the aux load-balance loss.  Padding experts (col >= n_routed) are
+    masked to -inf so they never win top-k."""
+    logits = h.astype(jnp.float32) @ w_router.astype(jnp.float32)  # (T,E)
+    e_pad = logits.shape[-1]
+    if e_pad > n_routed:
+        pad_mask = jnp.arange(e_pad) >= n_routed
+        logits = jnp.where(pad_mask[None], -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)                       # (T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # switch-style aux loss: E * sum_e f_e * P_e  (over real experts)
+    t = h.shape[0]
+    onehot = jax.nn.one_hot(idx, e_pad, dtype=jnp.float32)         # (T,k,E)
+    f_e = onehot.sum((0, 1)) / (t * top_k)
+    p_e = probs.mean(0)
+    aux = n_routed * jnp.sum(f_e * p_e)
+    return gates, idx, aux
+
+
+def dispatch_local(idx, gates, e_lo, e_l: int, capacity: int):
+    """Build gather/scatter plans for this shard's experts [e_lo, e_lo+e_l).
+
+    `e_lo` may be a traced shard offset (axis_index * e_l); `e_l` and
+    `capacity` are static.  idx/gates (T,k).  Returns:
+      slot_token (E_l, C) int32   token index feeding each expert slot
+                                  (T = padding row -> zero input),
+      tok_slot   (T, k)  int32    flat slot (e_l*C + c) for each assignment
+                                  or -1 if not local / over capacity,
+    """
+    t, k = idx.shape
+    local = (idx >= e_lo) & (idx < e_lo + e_l)              # (T,k)
+    lid = jnp.where(local, idx - e_lo, 0)                   # (T,k)
+    # position of each assignment within its expert's queue (row-major order)
+    onehot = jnp.where(local[..., None],
+                       jax.nn.one_hot(lid, e_l, dtype=jnp.int32), 0)  # (T,k,E_l)
+    flat = onehot.reshape(t * k, e_l)
+    pos = jnp.cumsum(flat, axis=0) - flat                   # (T*k, E_l)
+    pos = (pos * flat).sum(-1).reshape(t, k)                # (T,k)
+    ok = local & (pos < capacity)
+    # scatter token ids into slots
+    slot = jnp.where(ok, lid * capacity + pos, e_l * capacity)  # overflow bin
+    slot_token = jnp.full((e_l * capacity + 1,), t, jnp.int32)
+    slot_token = slot_token.at[slot.reshape(-1)].set(
+        jnp.repeat(jnp.arange(t, dtype=jnp.int32), k), mode="drop")
+    slot_token = slot_token[:-1].reshape(e_l, capacity)
+    tok_slot = jnp.where(ok, lid * capacity + pos, -1)
+    return slot_token, tok_slot
+
+
+def expert_ffn(xe, wg, wu, wd, act: str, gated: bool):
+    """xe (E_l, C, d); batched expert MLP -> (E_l, C, d)."""
+    a = act_fn(act)
+    up = jnp.einsum("ecd,edf->ecf", xe, wu)
+    if gated:
+        gate = jnp.einsum("ecd,edf->ecf", xe, wg)
+        hidden = a(gate) * up
+    else:
+        hidden = a(up)
+    return jnp.einsum("ecf,efd->ecd", hidden, wd)
+
+
+def moe_local(h, gates, tok_slot, slot_token, wg, wu, wd, act: str,
+              gated: bool):
+    """Run local experts and combine back to token order.
+
+    h (T,d); returns partial (T,d) = Σ_local-assignments gate * expert_out.
+    """
+    t, d = h.shape
+    e_l, cap = slot_token.shape
+    hp = jnp.concatenate([h, jnp.zeros((1, d), h.dtype)], 0)  # padding row
+    xe = hp[slot_token.reshape(-1)].reshape(e_l, cap, d)
+    ye = expert_ffn(xe, wg, wu, wd, act, gated)               # (E_l,C,d)
+    ye_flat = jnp.concatenate(
+        [ye.reshape(e_l * cap, d), jnp.zeros((1, d), ye.dtype)], 0)
+    picked = ye_flat[tok_slot]                                # (T,k,d) (-1 -> pad row)
+    picked = jnp.where((tok_slot >= 0)[..., None], picked, 0.0)
+    return jnp.einsum("tk,tkd->td", gates.astype(picked.dtype), picked)

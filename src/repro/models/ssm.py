@@ -1,0 +1,132 @@
+"""Mamba2 SSD (state-space duality) — shard-local math.
+
+Chunked quadratic-dual form (arXiv:2405.21060): within a chunk the output
+is an attention-like masked contraction; across chunks a small recurrent
+state (H, P, N) is carried by a scan.  This file is the pure-jnp oracle;
+kernels/ssd_scan.py is the Pallas TPU version of the same contraction.
+
+Shapes (shard-local):
+  x  (B, S, H, P)   per-head inputs          H = local heads, P = head_dim
+  dt (B, S, H)      softplus-activated step sizes
+  A  (H,)           negative decay rates
+  Bm (B, S, G, N)   input projections        G = groups (shared across heads)
+  Cm (B, S, G, N)   output projections
+  D  (H,)           skip connection
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(a):
+    """log-decay segment sums: a (..., Q) -> L (..., Q, Q) with
+    L[i,j] = sum_{k=j+1..i} a[k] for i>=j, -inf otherwise."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _group_expand(m, h):
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group over its heads."""
+    g = m.shape[2]
+    rep = h // g
+    return jnp.repeat(m, rep, axis=2)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int, initial_state=None):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)). fp32 internally."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xd = x.astype(f32)
+    dt = dt.astype(f32)
+    Bh = _group_expand(Bm.astype(f32), h)     # (B,S,H,N)
+    Ch = _group_expand(Cm.astype(f32), h)
+    dA = dt * A.astype(f32)                   # (B,S,H) log-decay per step
+
+    # chunk views: (nc, B, Q, ...)
+    def chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, Bc, Cc, dAc = map(chunks, (xd, dt, Bh, Ch, dA))
+
+    def body(state, inp):
+        xq, dtq, bq, cq, daq = inp            # (B,Q,H,...)
+        csum = jnp.cumsum(daq, axis=1)        # (B,Q,H)
+        # ---- intra-chunk (quadratic dual form) ----
+        L = jnp.exp(segsum(daq.transpose(0, 2, 1)))          # (B,H,Q,Q)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", cq, bq) * L   # (B,H,Q,Q)
+        y_intra = jnp.einsum("bhqk,bkh,bkhp->bqhp", scores, dtq, xq)
+        # ---- inter-chunk: contribution of carried state ----
+        decay_in = jnp.exp(csum)                             # (B,Q,H)
+        y_inter = jnp.einsum("bqhn,bhpn,bqh->bqhp", cq, state, decay_in)
+        # ---- state update ----
+        total = csum[:, -1]                                  # (B,H)
+        decay_out = jnp.exp(total[:, None] - csum)           # (B,Q,H)
+        upd = jnp.einsum("bqh,bqh,bqhp,bqhn->bhpn", decay_out, dtq, xq, bq)
+        state = jnp.exp(total)[..., None, None] * state + upd
+        return state, y_intra + y_inter
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), f32)
+    state, yc = jax.lax.scan(body, initial_state.astype(f32), (xc, dtc, Bc, Cc, dAc))
+    y = yc.swapaxes(0, 1).reshape(b, s, h, p)
+    y = y + xd * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, D, state):
+    """One-token recurrence. x (B,1,H,P), state (B,H,P,N) ->
+    (y (B,1,H,P), new_state)."""
+    b, _, h, p = x.shape
+    f32 = jnp.float32
+    xd = x[:, 0].astype(f32)                  # (B,H,P)
+    dt0 = dt[:, 0].astype(f32)                # (B,H)
+    Bh = _group_expand(Bm.astype(f32), h)[:, 0]   # (B,H,N)
+    Ch = _group_expand(Cm.astype(f32), h)[:, 0]
+    decay = jnp.exp(dt0 * A.astype(f32))      # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt0, xd, Bh)
+    state = decay[..., None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + xd * D.astype(f32)[None, :, None]
+    return y[:, None].astype(x.dtype), state
+
+
+def ssd_reference(x, dt, A, Bm, Cm, D, initial_state=None):
+    """O(S) sequential oracle (used only in tests to validate the chunked
+    form and the Pallas kernel)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    Bh = _group_expand(Bm.astype(jnp.float32), h)
+    Ch = _group_expand(Cm.astype(jnp.float32), h)
+    state = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step(
+            x[:, t:t + 1], dt[:, t:t + 1], A, Bm[:, t:t + 1], Cm[:, t:t + 1],
+            D, state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state
+
+
+def causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x (B,S,C), w (K,C).  If `state` (B,K-1,C) is
+    given, runs in streaming mode and returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : k - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)           # (B, S+K-1, C)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(k)[None, :]
+    win = xp[:, idx]                                  # (B,S,K,C)
+    y = jnp.einsum("bskc,kc->bsc", win.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state

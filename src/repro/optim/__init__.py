@@ -1,0 +1,6 @@
+from repro.optim.adamw import (adamw_init, adamw_update, apply_updates,
+                               global_norm, clip_by_global_norm)
+from repro.optim.schedule import make_schedule
+
+__all__ = ["adamw_init", "adamw_update", "apply_updates", "global_norm",
+           "clip_by_global_norm", "make_schedule"]

@@ -1,0 +1,75 @@
+"""AdamW from scratch (pytree-based), with fp32 moments and optional
+fp32 master weights for low-precision params."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, *, master: bool = True):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+    }
+    if master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    """Returns (new_params, new_state). lr may be a scalar array."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        new = master - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                             + weight_decay * master)
+        return new, m, v
+
+    masters = state.get("master", jax.tree.map(
+        lambda p: p.astype(jnp.float32), params))
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(masters)
+    new_w, new_m, new_v = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        nw, nm, nv = upd(g, m, v, w)
+        new_w.append(nw)
+        new_m.append(nm)
+        new_v.append(nv)
+    new_master = jax.tree.unflatten(treedef, new_w)
+    new_state = {"step": step,
+                 "m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v)}
+    if "master" in state:
+        new_state["master"] = new_master
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), new_master, params)
+    return new_params, new_state
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm, *, precomputed_norm=None):
+    n = precomputed_norm if precomputed_norm is not None else global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), n

@@ -1,0 +1,21 @@
+"""LR schedules: linear warmup + {cosine, linear, constant} decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, *, base_lr: float, warmup: int = 0,
+                  total: int = 1, final_frac: float = 0.1):
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        w = jnp.maximum(warmup, 1)
+        warm = base_lr * jnp.minimum(s / w, 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        if kind == "cosine":
+            dec = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        elif kind == "linear":
+            dec = 1.0 - (1.0 - final_frac) * prog
+        else:
+            dec = 1.0
+        return jnp.where(s < warmup, warm, base_lr * dec)
+    return sched

@@ -1,0 +1,53 @@
+"""Int8 gradient compression for the DP all-reduce.
+
+Per-chunk absmax-scaled int8 quantization; the reduction is realized as
+all_gather(int8 shards + fp32 scales) + local dequant-sum — the quantized
+bytes are what crosses the wire (ledger-logged), cutting DP gradient
+traffic ~4x at <1% relative error on typical gradient distributions
+(bounds tested in tests/test_compression.py).  Off by default; parity
+runs keep exact psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.collectives import all_gather
+
+
+def quantize_int8(x, chunk: int = 256):
+    """x (N,) fp32 -> (q int8 (N,), scales fp32 (ceil(N/chunk),))."""
+    n = x.size
+    pad = (-n) % chunk
+    xp = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, chunk)
+    scale = jnp.max(jnp.abs(xp), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xp / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:n], scale
+
+
+def dequantize_int8(q, scale, n: int, chunk: int = 256):
+    pad = (-n) % chunk
+    qp = jnp.pad(q.astype(jnp.float32).reshape(-1), (0, pad)).reshape(-1, chunk)
+    return (qp * scale[:, None]).reshape(-1)[:n]
+
+
+def compressed_psum(x, axis: str, chunk: int = 256):
+    """Approximate psum over `axis` with int8 payloads.
+
+    Each shard quantizes its contribution; all_gather moves int8+scales;
+    every shard dequantizes and sums locally.  Returns fp32 like psum."""
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    q, scale = quantize_int8(flat, chunk)
+    qs = all_gather(q, axis)           # (n_shards, N) int8 on the wire
+    ss = all_gather(scale, axis)
+    n = flat.size
+
+    def deq(args):
+        qi, si = args
+        return dequantize_int8(qi, si, n, chunk)
+
+    total = jnp.sum(jax.vmap(lambda qi, si: dequantize_int8(qi, si, n, chunk))(
+        qs, ss), axis=0)
+    return total.reshape(shape)

@@ -1,0 +1,172 @@
+"""Tensor-parallel weight layout.
+
+Canonical parameter storage is "TP layout": every sharded axis is padded /
+replicated so that splitting it into `tp` equal parts yields exactly the
+shard-local weight. This makes the two execution engines trivially
+consistent:
+
+  * distributed engine: `shard_map` in_specs put mesh axis "model" on the
+    split axis -> each device sees its local shard;
+  * simulated engine: `split_leaf` reshapes the split axis to a leading
+    (tp, ...) axis -> `vmap(axis_name="model")` sees the same local shard.
+
+Spec trees mirror the param pytree with an int per leaf: the TP split axis,
+or REPLICATED (-1).
+
+GQA head padding rules (see DESIGN.md):
+  * KV >= tp: pad KV up to a multiple of tp (zero heads), pad Q to match.
+  * KV <  tp: pad KV up to a divisor of tp, replicate each KV head across
+    tp/KV_pad consecutive shards, pad q_per_kv to a multiple of tp/KV_pad.
+Zero-padded query heads have zero W_Q columns and zero W_O rows, so they
+contribute nothing to the block output.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPLICATED = -1
+
+
+@dataclass(frozen=True)
+class GQALayout:
+    n_heads: int          # original query heads
+    n_kv_heads: int       # original kv heads
+    tp: int
+    h_pad: int            # padded query heads (multiple of tp)
+    kv_pad: int           # padded *distinct* kv heads
+    kv_layout: int        # kv heads in TP layout (= replication * kv_pad)
+    q_local: int          # query heads per shard
+    kv_local: int         # kv heads per shard (in layout)
+    replication: int      # how many shards share one kv head
+
+    @property
+    def q_per_kv_pad(self) -> int:
+        return self.h_pad // self.kv_pad
+
+
+def make_gqa_layout(n_heads: int, n_kv_heads: int, tp: int) -> GQALayout:
+    assert n_heads >= 1 and n_kv_heads >= 1 and tp >= 1
+    if n_kv_heads >= tp:
+        kv_pad = -(-n_kv_heads // tp) * tp
+        q_per_kv = -(-n_heads // n_kv_heads)
+        h_pad = kv_pad * q_per_kv
+        replication = 1
+    else:
+        # smallest divisor of tp that is >= n_kv_heads
+        kv_pad = next(d for d in range(n_kv_heads, tp + 1) if tp % d == 0)
+        shards_per_kv = tp // kv_pad
+        q_per_kv = -(-n_heads // n_kv_heads)
+        q_per_kv_pad = -(-q_per_kv // shards_per_kv) * shards_per_kv
+        h_pad = kv_pad * q_per_kv_pad
+        replication = shards_per_kv
+    kv_layout = kv_pad * replication
+    assert h_pad % tp == 0 and kv_layout % tp == 0
+    return GQALayout(
+        n_heads=n_heads, n_kv_heads=n_kv_heads, tp=tp,
+        h_pad=h_pad, kv_pad=kv_pad, kv_layout=kv_layout,
+        q_local=h_pad // tp, kv_local=kv_layout // tp,
+        replication=replication,
+    )
+
+
+def q_head_to_kv(layout: GQALayout) -> np.ndarray:
+    """Map padded query-head index -> layout kv index it attends with."""
+    qpk = layout.h_pad // layout.kv_layout
+    return np.arange(layout.h_pad) // qpk
+
+
+def q_head_orig(layout: GQALayout) -> np.ndarray:
+    """Map padded query-head index -> original head index or -1 (padding).
+
+    Original head h (kv group g, slot r) is placed at padded position
+    g * q_per_kv_pad + r.
+    """
+    q_per_kv = -(-layout.n_heads // layout.n_kv_heads)
+    out = np.full(layout.h_pad, -1, dtype=np.int64)
+    qpk_pad = layout.q_per_kv_pad
+    for h in range(layout.n_heads):
+        g, r = divmod(h, q_per_kv)
+        out[g * qpk_pad + r] = h
+    return out
+
+
+def kv_head_orig(layout: GQALayout) -> np.ndarray:
+    """Map layout kv index -> original kv head index or -1 (padding).
+
+    Layout order with replication r: kv0 kv0 .. kv1 kv1 .. (consecutive
+    shards share a kv head)."""
+    out = np.full(layout.kv_layout, -1, dtype=np.int64)
+    for i in range(layout.kv_layout):
+        d = i // layout.replication
+        out[i] = d if d < layout.n_kv_heads else -1
+    return out
+
+
+def pad_heads(w: jax.Array, axis: int, src_map: np.ndarray, head_dim: int,
+              n_src: int) -> jax.Array:
+    """Expand `w` along `axis` from n_src packed heads to len(src_map) heads.
+
+    src_map[i] = source head for layout slot i, or -1 for a zero head.
+    The head axis is assumed packed as (n_src * head_dim) along `axis`.
+    """
+    shape = list(w.shape)
+    assert shape[axis] == n_src * head_dim, (shape, axis, n_src, head_dim)
+    w = jnp.moveaxis(w, axis, 0)
+    rest = w.shape[1:]
+    w = w.reshape((n_src, head_dim) + rest)
+    zero = jnp.zeros_like(w[0])
+    pieces = [w[s] if s >= 0 else zero for s in src_map]
+    out = jnp.stack(pieces, 0)
+    out = out.reshape((len(src_map) * head_dim,) + rest)
+    return jnp.moveaxis(out, 0, axis)
+
+
+def split_leaf(w: jax.Array, axis: int, tp: int) -> jax.Array:
+    """TP-layout full weight -> stacked per-shard weights (leading tp axis)."""
+    if axis == REPLICATED:
+        return jnp.broadcast_to(w[None], (tp,) + w.shape)
+    assert w.shape[axis] % tp == 0, (w.shape, axis, tp)
+    local = w.shape[axis] // tp
+    shape = w.shape[:axis] + (tp, local) + w.shape[axis + 1:]
+    w = w.reshape(shape)
+    return jnp.moveaxis(w, axis, 0)
+
+
+def merge_leaf(w: jax.Array, axis: int, tp: int) -> jax.Array:
+    """Inverse of split_leaf (replicated leaves: take shard 0)."""
+    if axis == REPLICATED:
+        return w[0]
+    w = jnp.moveaxis(w, 0, axis)
+    shape = (w.shape[:axis] + (w.shape[axis] * w.shape[axis + 1],)
+             + w.shape[axis + 2:])
+    return w.reshape(shape)
+
+
+def split_tree(params, specs, tp: int):
+    return jax.tree.map(lambda w, a: split_leaf(w, a, tp), params, specs)
+
+
+def merge_tree(params, specs, tp: int):
+    return jax.tree.map(lambda w, a: merge_leaf(w, a, tp), params, specs)
+
+
+def spec_tree_to_pspecs(specs, mesh_axis: str = "model",
+                        stacked: bool = False):
+    """Spec tree (ints) -> PartitionSpec tree.
+
+    `stacked=True`: leaves carry a leading layer-stack axis (lax.scan over
+    layers), shifting every split axis by one.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def one(axis):
+        if axis == REPLICATED:
+            return P()
+        a = axis + (1 if stacked else 0)
+        return P(*([None] * a + [mesh_axis]))
+
+    return jax.tree.map(one, specs)

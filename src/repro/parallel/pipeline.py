@@ -1,0 +1,72 @@
+"""Pipeline parallelism over a "pipe" mesh axis (paper App. C.2).
+
+GPipe-style fill-drain schedule realized as a lax.scan over
+n_micro + n_stages - 1 ticks; stage boundaries are collective_permutes.
+Each device holds a contiguous stage of layers (stacked, sharded on the
+leading stage axis).  Autodiff runs straight through the schedule
+(ppermute transposes to the reverse permute), so the same function
+trains — App. C.2's hybrid TP×PP story composes by nesting this inside
+the "model"-axis block math.
+
+This is the compatibility demonstration the appendix describes, not the
+production path (the production mesh is data×model); tests verify exact
+equivalence with the non-pipelined forward.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.collectives import ppermute
+
+PIPE_AXIS = "pipe"
+
+
+def pipeline_forward(stage_fn, stage_params, x_micro, *, n_stages: int,
+                     axis: str = PIPE_AXIS):
+    """Run microbatches through a stage pipeline.
+
+    stage_fn(stage_params, x (mb, ...)) -> (mb, ...)   [stage-local layers]
+    x_micro (n_micro, mb, ...) — replicated input (every stage sees it;
+    only stage 0 consumes it).
+    Returns (n_micro, mb, ...) outputs (valid on the LAST stage; other
+    stages return garbage — broadcast with a psum mask if needed).
+    """
+    n_micro = x_micro.shape[0]
+    stage = jax.lax.axis_index(axis)
+    ticks = n_micro + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def body(carry, t):
+        inflight = carry                 # (mb, ...) value entering this stage
+        mi = jnp.clip(t, 0, n_micro - 1)
+        feed = jax.lax.dynamic_index_in_dim(x_micro, mi, 0, keepdims=False)
+        inp = jnp.where(stage == 0, feed, inflight)
+        out = stage_fn(stage_params, inp)
+        nxt = ppermute(out, axis, perm)
+        return nxt, out
+
+    init = jnp.zeros_like(x_micro[0])
+    _, outs = jax.lax.scan(body, init, jnp.arange(ticks))
+    # last stage's valid outputs are at ticks [n_stages-1, ticks)
+    return outs[n_stages - 1:]
+
+
+def last_stage_value(v, *, n_stages: int, axis: str = PIPE_AXIS):
+    """Broadcast a last-stage value to all stages (psum of masked value).
+    FORWARD-ONLY: differentiating through this psum under check_vma=False
+    multiplies cotangents by n_stages — use `masked_last_stage` as the
+    loss for gradient computation instead."""
+    stage = jax.lax.axis_index(axis)
+    masked = jnp.where(stage == n_stages - 1, v, jnp.zeros_like(v))
+    return jax.lax.psum(masked, axis)
+
+
+def masked_last_stage(v, *, n_stages: int, axis: str = PIPE_AXIS):
+    """Per-shard loss that is v on the last stage and 0 elsewhere —
+    grad-safe (no collective on the loss path; gradients reach earlier
+    stages through the ppermute transposes)."""
+    stage = jax.lax.axis_index(axis)
+    return jnp.where(stage == n_stages - 1, v, jnp.zeros_like(v))

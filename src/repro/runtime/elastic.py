@@ -1,0 +1,80 @@
+"""Elastic scaling: rebuild the mesh from the live device set and re-shard.
+
+Policy: the TP degree is pinned (SPD plans and distilled θ_spd weights are
+TP-degree-specific), the DATA axis shrinks/grows with the fleet, snapped
+to a power of two.  Checkpoints store canonical/stacked params, so a
+re-mesh is: pick new (dp, tp) -> rebuild step fns -> device_put the same
+trees under the new NamedShardings.  SPD plans for a different TP degree
+are re-derived (or loaded from the plan store) by the caller.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.config.base import ModelConfig, SPDPlanConfig
+from repro.parallel import tp as TP
+
+
+def snap_pow2(n: int) -> int:
+    return 1 << (n.bit_length() - 1) if n > 0 else 0
+
+
+def choose_mesh_shape(n_devices: int, tp: int):
+    """Largest power-of-two dp such that dp*tp <= n_devices."""
+    assert n_devices >= tp, (n_devices, tp)
+    dp = snap_pow2(n_devices // tp)
+    return (dp, tp)
+
+
+def make_mesh_from(devices: List, tp: int):
+    dp, tp = choose_mesh_shape(len(devices), tp)
+    devs = np.asarray(devices[: dp * tp]).reshape(dp, tp)
+    from jax.sharding import Mesh
+    return Mesh(devs, ("data", "model"))
+
+
+@dataclass
+class ElasticEvent:
+    step: int
+    old_devices: int
+    new_devices: int
+    new_mesh_shape: tuple
+
+
+class ElasticController:
+    """Re-meshes a Trainer when the live device set changes.
+
+    `probe` returns the currently-healthy device list (tests inject
+    shrinking lists to simulate node loss)."""
+
+    def __init__(self, trainer_factory, tp: int, probe=None):
+        self.trainer_factory = trainer_factory
+        self.tp = tp
+        self.probe = probe or (lambda: jax.devices())
+        self.events: List[ElasticEvent] = []
+        self.mesh = make_mesh_from(self.probe(), tp)
+        self.trainer = trainer_factory(self.mesh)
+
+    def maybe_remesh(self, state, canonical_params):
+        devs = self.probe()
+        n_now = self.mesh.devices.size
+        dp, tp = choose_mesh_shape(len(devs), self.tp)
+        if dp * tp == n_now:
+            return state
+        old_n = n_now
+        self.mesh = make_mesh_from(devs, self.tp)
+        self.trainer = self.trainer_factory(self.mesh)
+        # re-shard from the last checkpoint (params travel via host)
+        restored = self.trainer.restore(
+            state_like=self.trainer.init_state(canonical_params))
+        state = restored if restored is not None \
+            else self.trainer.init_state(canonical_params)
+        self.events.append(ElasticEvent(
+            step=state["step"], old_devices=old_n,
+            new_devices=self.mesh.devices.size,
+            new_mesh_shape=tuple(self.mesh.devices.shape)))
+        return state

@@ -1,0 +1,166 @@
+"""Serving engines: the Server's model-execution backends.
+
+SimEngine  — vmap simulated TP (1 CPU device), for algorithm work + tests.
+ShardEngine — shard_map over a real device mesh (the production path).
+
+Both keep caches in their engine-native layout between calls and expose:
+    prefill(params, tokens, *, cache_len, lengths) -> (full logits, caches1)
+    decode(params, tokens, pos, caches) -> (next_tokens (B,1), caches)
+    blank_caches(batch, cache_len), insert_slot(caches, caches1, b)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, SPDPlanConfig
+from repro.core import model as M
+from repro.core import simtp
+from repro.parallel import tp as TP
+from repro.parallel.collectives import MODEL_AXIS
+from repro.parallel.layout import REPLICATED, split_leaf
+
+
+class SimEngine:
+    def __init__(self, cfg: ModelConfig, plan: SPDPlanConfig, tp: int,
+                 q_chunk: int = 1024):
+        self.cfg, self.plan, self.tp, self.q_chunk = cfg, plan, tp, q_chunk
+        self._prefill_c = {}
+        self._decode = None
+
+    # ---- cache layout: split form, leading (tp, ...) axis per leaf ----
+
+    def _cache_ints(self):
+        return M.cache_specs_tree(self.cfg, self.plan)
+
+    def blank_caches(self, batch: int, cache_len: int):
+        structs = M.cache_struct(self.cfg, self.plan, batch, cache_len,
+                                 self.tp)
+        ints = self._cache_ints()
+
+        def one(s, a):
+            if a == REPLICATED:
+                return jnp.zeros((self.tp,) + s.shape, s.dtype)
+            shp = list(s.shape)
+            shp[a] //= self.tp
+            return jnp.zeros((self.tp,) + tuple(shp), s.dtype)
+
+        return [jax.tree.map(one, s, i) for s, i in zip(structs, ints)]
+
+    def insert_slot(self, caches, caches1, b: int):
+        # batch axis is 2 in split form (tp, layer, batch, ...)
+        return jax.tree.map(lambda c, c1: c.at[:, :, b].set(c1[:, :, 0]),
+                            caches, caches1)
+
+    # ---- compiled paths ----
+
+    def prefill(self, params, tokens, *, cache_len: int, lengths=None,
+                embeds=None):
+        key = (tokens.shape, cache_len, embeds is not None)
+        if key not in self._prefill_c:
+            cfg, plan, tp, qc = self.cfg, self.plan, self.tp, self.q_chunk
+
+            def per_shard(p, toks, ln, emb):
+                return M.prefill(cfg, p, plan, toks, tp=tp, q_chunk=qc,
+                                 cache_len=cache_len, lengths=ln,
+                                 embeds=emb)
+
+            def fn(p, toks, ln, emb):
+                lg, caches = jax.vmap(per_shard, in_axes=(0, None, None, None),
+                                      axis_name=MODEL_AXIS)(p, toks, ln, emb)
+                b = lg.shape[1]
+                full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
+                return full[:, : cfg.vocab_size], caches
+            self._prefill_c[key] = jax.jit(fn)
+        return self._prefill_c[key](params, tokens, lengths, embeds)
+
+    def decode(self, params, tokens, pos, caches):
+        if self._decode is None:
+            cfg, plan, tp = self.cfg, self.plan, self.tp
+
+            def per_shard(p, toks, ps, cs):
+                lg, ncs = M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
+                return lg, ncs
+
+            def fn(p, toks, ps, cs):
+                lg, ncs = jax.vmap(per_shard, in_axes=(0, None, None, 0),
+                                   axis_name=MODEL_AXIS)(p, toks, ps, cs)
+                b = lg.shape[1]
+                full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
+                nxt = jnp.argmax(full[:, : cfg.vocab_size], -1)
+                return nxt[:, None].astype(jnp.int32), ncs
+            self._decode = jax.jit(fn)
+        return self._decode(params, tokens, pos, caches)
+
+
+class ShardEngine:
+    def __init__(self, cfg: ModelConfig, plan: SPDPlanConfig, mesh,
+                 q_chunk: int = 1024):
+        self.cfg, self.plan, self.mesh = cfg, plan, mesh
+        self.tp = mesh.shape[MODEL_AXIS]
+        self.q_chunk = q_chunk
+        self._prefill_c = {}
+        self._decode = TP.build_decode_step(cfg, plan, mesh)
+        self._c_pspecs = TP.cache_pspecs(cfg, plan, mesh)
+
+    def blank_caches(self, batch: int, cache_len: int):
+        structs = M.cache_struct(self.cfg, self.plan, batch, cache_len,
+                                 self.tp)
+        sh = TP.named(self.mesh, self._c_pspecs)
+        return [jax.tree.map(
+            lambda s, h: jax.device_put(jnp.zeros(s.shape, s.dtype), h),
+            st, shh) for st, shh in zip(structs, sh)]
+
+    def insert_slot(self, caches, caches1, b: int):
+        return jax.tree.map(lambda c, c1: c.at[:, b].set(c1[:, 0]),
+                            caches, caches1)
+
+    def prefill(self, params, tokens, *, cache_len: int, lengths=None,
+                embeds=None):
+        # pad the request batch to a multiple of the data axis (single
+        # requests on a dp>1 mesh); slice the result back out after
+        dpn = 1
+        for a_ in TP.dp_axes(self.mesh):
+            dpn *= self.mesh.shape[a_]
+        b0 = tokens.shape[0]
+        pad = (-b0) % dpn
+        if pad:
+            tokens = jnp.concatenate(
+                [tokens, jnp.zeros((pad,) + tokens.shape[1:], tokens.dtype)])
+            if lengths is not None:
+                lengths = jnp.concatenate(
+                    [lengths, jnp.ones((pad,), lengths.dtype)])
+            if embeds is not None:
+                embeds = jnp.concatenate(
+                    [embeds, jnp.zeros((pad,) + embeds.shape[1:],
+                                       embeds.dtype)])
+        key = (tokens.shape, cache_len, embeds is not None)
+        if key not in self._prefill_c:
+            cfg, plan, mesh, qc = self.cfg, self.plan, self.mesh, self.q_chunk
+            tp = self.tp
+            from jax.sharding import PartitionSpec as P
+            dpx = TP.dp_axes(mesh)
+            p_specs = TP.param_pspecs(cfg, plan)
+
+            def local(p, toks, ln, emb):
+                lg, caches = M.prefill(cfg, p, plan, toks, tp=tp, q_chunk=qc,
+                                       cache_len=cache_len, lengths=ln,
+                                       embeds=emb)
+                full = jax.lax.all_gather(lg, MODEL_AXIS, axis=1, tiled=True)
+                return full[:, : cfg.vocab_size], caches
+
+            self._prefill_c[key] = jax.jit(TP.shard_map(
+                local, mesh,
+                in_specs=(p_specs, P(dpx), P(dpx), P(dpx)),
+                out_specs=(P(dpx), self._c_pspecs)))
+        lg, caches = self._prefill_c[key](params, tokens, lengths, embeds)
+        if pad:
+            lg = lg[:b0]
+            caches = jax.tree.map(lambda c: c[:, :b0], caches)
+        return lg, caches
+
+    def decode(self, params, tokens, pos, caches):
+        return self._decode(params, tokens, pos, caches)

@@ -1,0 +1,115 @@
+"""Batched inference server with continuous batching (slot-based).
+
+Engine-agnostic: an Engine exposes
+    prefill(params, tokens (1, S)[, embeds]) -> (logits (1, V), caches)
+    decode(params, tokens (B, 1), pos (B,), caches) -> (next (B,1), caches)
+    blank_caches(batch, cache_len) -> zeroed cache pytree
+and the server handles request queueing, slot assignment, per-slot
+positions, EOS/max-token termination, and slot eviction.  Prompts are
+bucketed to power-of-two lengths to bound recompilation.
+
+Two engines implement the interface: SimEngine (vmap, 1 CPU device) and
+ShardEngine (shard_map over a real mesh) — runtime/engines.py.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 16
+    eos: int = -1                   # -1 => never
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    return max(minimum, 1 << math.ceil(math.log2(max(n, 1))))
+
+
+class Server:
+    def __init__(self, engine, params, *, max_batch: int, cache_len: int):
+        self.engine = engine
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)
+        self.cur = np.zeros((max_batch, 1), np.int32)
+        self.caches = engine.blank_caches(max_batch, cache_len)
+        self.completed: Dict[int, Request] = {}
+
+    # ---------------- request lifecycle ----------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for b in range(self.max_batch):
+            if self.slots[b] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            s = len(req.prompt)
+            sb = _bucket(s)
+            toks = np.zeros((1, sb), np.int32)
+            toks[0, :s] = req.prompt           # right-pad; exact: decode
+            # starts at pos=s and overwrites pad slots before they are
+            # ever causally visible (see M.prefill docstring).
+            logits, caches1 = self.engine.prefill(
+                self.params, jnp.asarray(toks), cache_len=self.cache_len,
+                lengths=jnp.asarray([s], jnp.int32))
+            first = int(np.argmax(np.asarray(logits)[0]))
+            req.out.append(first)
+            self.slots[b] = req
+            self.pos[b] = s
+            self.cur[b, 0] = first
+            self.caches = self.engine.insert_slot(self.caches, caches1, b)
+
+    def _evict(self, b: int):
+        req = self.slots[b]
+        req.done = True
+        self.completed[req.uid] = req
+        self.slots[b] = None
+        self.pos[b] = 0
+
+    # ---------------- main loop ----------------
+
+    def step(self):
+        """One decode step for all active slots."""
+        self._admit()
+        active = [b for b in range(self.max_batch) if self.slots[b] is not None]
+        if not active:
+            return False
+        nxt, self.caches = self.engine.decode(
+            self.params, jnp.asarray(self.cur), jnp.asarray(self.pos),
+            self.caches)
+        nxt = np.asarray(nxt)
+        for b in active:
+            req = self.slots[b]
+            tok = int(nxt[b, 0])
+            req.out.append(tok)
+            self.pos[b] += 1
+            self.cur[b, 0] = tok
+            if tok == req.eos or len(req.out) >= req.max_new:
+                self._evict(b)
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return self.completed

@@ -1,0 +1,44 @@
+"""Test fixtures.  8 CPU devices for real shard_map TP tests (set before
+the backend initializes; smoke tests simply don't use the mesh).  The
+512-device dry-run platform is NEVER set here — dryrun.py owns that in
+its own subprocess."""
+import jax
+
+jax.config.update("jax_num_cpu_devices", 8)
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.config.base import SPDPlanConfig, replace
+from repro.configs import get_config
+from repro.core import model as M
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_cfg(name, **kw):
+    return replace(get_config(name, reduced=True), dtype="float32", **kw)
+
+
+def make_batch(cfg, b=2, s=32, seed=0):
+    r = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(r.integers(0, cfg.vocab_size, (b, s))),
+             "labels": jnp.asarray(r.integers(0, cfg.vocab_size, (b, s))),
+             "mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.frontend_dim:
+        batch["embeds"] = jnp.asarray(
+            r.standard_normal((b, cfg.frontend_len, cfg.frontend_dim)),
+            jnp.float32)
+    return batch
+
+
+def leaves_allclose(a, b, atol=1e-5, rtol=1e-5):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=atol, rtol=rtol)

@@ -1,0 +1,85 @@
+"""Attention math: chunked vs dense oracle, windows, decode-from-cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+
+
+def _qkv(rng, b, s, hq, hkv, d):
+    q = jnp.asarray(rng.standard_normal((b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("q_chunk", [16, 32])
+def test_chunked_matches_dense(window, q_chunk):
+    rng = np.random.default_rng(0)
+    b, s, hq, hkv, d = 2, 64, 4, 2, 16
+    q, k, v = _qkv(rng, b, s, hq, hkv, d)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    dense = A.attend(q, k, v, A.causal_mask(pos, pos, window))
+    chunked = A.attend_chunked(q, k, v, pos, pos, window=window,
+                               q_chunk=q_chunk)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=1e-5)
+
+
+def test_decode_matches_prefill_full():
+    """Greedy decode t steps from cache == recomputing full attention."""
+    rng = np.random.default_rng(1)
+    b, s, hq, hkv, d = 2, 24, 4, 2, 16
+    q, k, v = _qkv(rng, b, s, hq, hkv, d)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full = A.attend(q, k, v, A.causal_mask(pos, pos))
+    # decode the last position from a cache of the first s-1
+    kc = jnp.zeros((b, s, hkv, d)).at[:, : s - 1].set(k[:, : s - 1])
+    vc = jnp.zeros((b, s, hkv, d)).at[:, : s - 1].set(v[:, : s - 1])
+    p = jnp.full((b,), s - 1, jnp.int32)
+    kc, vc = A.cache_update(kc, vc, k[:, -1:], v[:, -1:], p)
+    out = A.decode_attend(q[:, -1:], kc, vc, p)
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-5)
+
+
+def test_windowed_rolling_cache_decode():
+    """Rolling windowed cache: decode equals full windowed attention."""
+    rng = np.random.default_rng(2)
+    b, s, hq, hkv, d, w = 1, 40, 2, 2, 8, 16
+    q, k, v = _qkv(rng, b, s, hq, hkv, d)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full = A.attend(q, k, v, A.causal_mask(pos, pos, w))
+    # roll the cache forward token by token; check several positions
+    kc = jnp.zeros((b, w, hkv, d))
+    vc = jnp.zeros((b, w, hkv, d))
+    for t in range(s):
+        p = jnp.full((b,), t, jnp.int32)
+        kc, vc = A.cache_update(kc, vc, k[:, t:t + 1], v[:, t:t + 1], p,
+                                window=w)
+        if t in (0, 5, 15, 16, 17, 39):
+            out = A.decode_attend(q[:, t:t + 1], kc, vc, p, window=w)
+            np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                       np.asarray(full[:, t]), atol=1e-5,
+                                       err_msg=f"t={t}")
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.sampled_from([8, 16, 33]), hkv=st.sampled_from([1, 2]),
+       g=st.sampled_from([1, 3]))
+def test_gqa_reduction_property(s, hkv, g):
+    """GQA == MHA with kv heads explicitly repeated."""
+    rng = np.random.default_rng(s * 7 + hkv)
+    b, d = 1, 8
+    hq = hkv * g
+    q, k, v = _qkv(rng, b, s, hq, hkv, d)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    mask = A.causal_mask(pos, pos)
+    out = A.attend(q, k, v, mask)
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    out_r = A.attend(q, kr, vr, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), atol=1e-5)

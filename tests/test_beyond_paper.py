@@ -1,0 +1,123 @@
+"""Beyond-paper optimizations: int8 sync compression + int8 KV cache.
+
+Both must (a) lower/compile on the real engine, (b) cut the ledger bytes
+as modeled, (c) keep quality within tight numeric bounds of the exact
+paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, make_cfg
+from repro.config.base import SPDPlanConfig, replace
+from repro.core import model as M, simtp
+from repro.parallel.collectives import collective_ledger, sync_compression
+
+
+def test_int8_sync_quality_and_bytes():
+    cfg = make_cfg("smollm-360m")
+    tp = 4
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    split = simtp.prepare_params(params, cfg, plan, tp)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 48)))
+
+    with collective_ledger() as led_exact:
+        f = simtp.make_logits_fn(cfg, plan, tp, q_chunk=64)
+        lg_exact = f(split, toks, None)
+
+    with sync_compression("int8"):
+        with collective_ledger() as led_q8:
+            f8 = simtp.make_logits_fn(cfg, plan, tp, q_chunk=64)
+            # NOTE: fresh jit (the traced mode bakes in)
+            f8._clear_cache() if hasattr(f8, "_clear_cache") else None
+            lg_q8 = f8(split, toks, None)
+
+    ar_exact = sum(n for op, _, n in led_exact if op == "all-reduce")
+    ar_q8 = sum(n for op, _, n in led_q8 if op == "all-reduce")
+    ag_q8 = sum(n for op, _, n in led_q8 if op == "all-gather")
+    assert ar_q8 < ar_exact          # block syncs moved off all-reduce
+    assert ag_q8 > 0
+    # wire-time model: bf16 AR = 2(n-1)/n * 2B/elem;
+    # int8 AG = (n-1) * (1B + scale)/elem/n shards... compare bytes:
+    # compressible payload dropped ~2x in raw bytes
+    total_exact = ar_exact
+    total_q8 = ar_q8 + ag_q8
+    assert total_q8 < 0.7 * total_exact, (total_exact, total_q8)
+    # quality: top-1 agreement high, softmax drift small.  Random-init
+    # weights are the WORST case (near-zero logit gaps); trained-model
+    # quality is covered by the accuracy bench.
+    agree = float(jnp.mean((jnp.argmax(lg_exact, -1)
+                            == jnp.argmax(lg_q8, -1)).astype(jnp.float32)))
+    assert agree > 0.85, agree
+    drift = float(jnp.mean(jnp.abs(jax.nn.softmax(lg_exact)
+                                   - jax.nn.softmax(lg_q8))))
+    assert drift < 2e-4, drift
+
+
+def test_int8_kv_cache_decode_quality():
+    cfg = replace(make_cfg("qwen3-1.7b"), kv_dtype="int8")
+    cfg_ref = make_cfg("qwen3-1.7b")
+    tp = 2
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg_ref)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)))
+
+    from repro.runtime.engines import SimEngine
+    outs = {}
+    for name, c in (("ref", cfg_ref), ("int8", cfg)):
+        eng = SimEngine(c, plan, tp, q_chunk=64)
+        sp = simtp.prepare_params(params, c, plan, tp)
+        lg, caches = eng.prefill(sp, toks, cache_len=32)
+        cur = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        pos = jnp.full((2,), 24, jnp.int32)
+        seq = [np.asarray(cur).ravel()]
+        for _ in range(5):
+            cur, caches = eng.decode(sp, cur, pos, caches)
+            pos = pos + 1
+            seq.append(np.asarray(cur).ravel())
+        outs[name] = np.stack(seq)
+        if name == "int8":
+            # cache leaves really are int8 (+ bf16 scales)
+            k_leaf = caches[0]["k"]
+            assert k_leaf.dtype == jnp.int8
+            assert caches[0]["k_s"].dtype == jnp.bfloat16
+    # greedy decode paths agree (quantization noise ≪ logit gaps)
+    agree = (outs["ref"] == outs["int8"]).mean()
+    assert agree >= 0.8, (agree, outs)
+
+
+def test_int8_kv_cache_bytes_halved():
+    cfg = replace(make_cfg("qwen3-1.7b"), kv_dtype="int8")
+    cfg_ref = make_cfg("qwen3-1.7b")
+    plan = SPDPlanConfig.none(cfg.n_layers)
+
+    def total_bytes(c):
+        structs = M.cache_struct(c, plan, batch=4, seq_len=128, tp=2)
+        return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(structs))
+
+    b_ref = total_bytes(cfg_ref)
+    b_q8 = total_bytes(cfg)
+    # int8 + bf16/dh scales: ~ (1 + 2/dh) / itemsize(ref=4 for f32 smoke)
+    assert b_q8 < 0.6 * b_ref, (b_ref, b_q8)
+
+
+def test_int8_kv_shard_engine_compiles():
+    """The real shard_map decode step lowers+compiles with int8 caches."""
+    cfg = replace(make_cfg("smollm-360m"), kv_dtype="int8")
+    from repro.launch.mesh import make_test_mesh
+    from repro.parallel import tp as TP
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    mesh = make_test_mesh(2, 2)
+    dec = TP.build_decode_step(cfg, plan, mesh)
+    cs = M.cache_struct(cfg, plan, batch=4, seq_len=32, tp=2)
+    pp = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                      M.stack_segments(M.pad_model(params, cfg, 2), cfg,
+                                       plan))
+    low = dec.lower(pp, jax.ShapeDtypeStruct((4, 1), jnp.int32),
+                    jax.ShapeDtypeStruct((4,), jnp.int32), cs)
+    low.compile()

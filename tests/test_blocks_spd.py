@@ -1,0 +1,178 @@
+"""SPD block math identities — the paper's §4.1 / Fig 3 / Table 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_cfg
+from repro.config.base import SPDPlanConfig
+from repro.core import blocks as B
+from repro.core import simtp
+from repro.core.layer_kinds import layer_kinds
+from repro.models.common import layernorm, rmsnorm
+
+
+def _mk_layer(name="smollm-360m", tp=4, seed=0, **kw):
+    cfg = make_cfg(name, **kw)
+    kind = layer_kinds(cfg)[1]
+    lp = B.init_layer(jax.random.PRNGKey(seed), cfg, kind)
+    # non-trivial biases/norm weights
+    lp = jax.tree.map(
+        lambda x: x + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               x.shape, jnp.float32), lp)
+    split = simtp.split_layer(lp, cfg, kind, tp)
+    return cfg, kind, lp, split
+
+
+def _run(cfg, kind, split, x, tp, drop):
+    fn = simtp.make_block_fn(cfg, kind, tp, drop=drop, q_chunk=64)
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return fn(split, x, pos)
+
+
+def test_tp_block_matches_tp1():
+    """TP block at tp=4 is numerically the single-device block."""
+    cfg, kind, lp, split4 = _mk_layer(tp=4)
+    split1 = simtp.split_layer(lp, cfg, kind, 1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(_run(cfg, kind, split1, x, 1, False)),
+        np.asarray(_run(cfg, kind, split4, x, 4, False)),
+        atol=2e-5, rtol=2e-5)
+
+
+def test_spd_block_deferred_sum_identity():
+    """Fig 3a: SPD output == x + Σ_i Y_i + Σ_i Z_i(u_i), computed manually
+    from per-shard partials."""
+    cfg, kind, lp, split = _mk_layer(tp=4)
+    tp = 4
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out_spd = _run(cfg, kind, split, x, tp, True)
+
+    # manual per-shard computation with the same split weights
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+
+    def one_shard(p):
+        h = rmsnorm(x, p["ln1"]["w"], cfg.norm_eps)
+        from repro.core.blocks import gqa_mixer_seq
+        from repro.parallel.layout import make_gqa_layout
+        lay = make_gqa_layout(cfg.n_heads, cfg.n_kv_heads, tp)
+        part, _ = gqa_mixer_seq(cfg, kind, p["attn"], h, pos, lay, "model",
+                                q_chunk=64)
+        return part
+
+    parts = jax.vmap(one_shard, axis_name="model")(split)   # (tp,B,S,d)
+
+    def mlp_shard(p, u_i):
+        h2 = rmsnorm(u_i, p["ln2"]["w"], cfg.norm_eps)
+        up = h2 @ p["mlp"]["wu"]
+        g = h2 @ p["mlp"]["wg"]
+        return (jax.nn.silu(g) * up) @ p["mlp"]["wd"]
+
+    z = jax.vmap(mlp_shard, in_axes=(0, 0))(split, x[None] + parts)
+    expect = x + parts.sum(0) + z.sum(0)
+    np.testing.assert_allclose(np.asarray(out_spd), np.asarray(expect),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_spd_bias_block_identity():
+    """Fig 3b: out = x + Σ_i P_i + b + Σ_i Z_i, bias counted ONCE."""
+    cfg, kind, lp, split = _mk_layer("opt-6.7b", tp=4)
+    tp = 4
+    # make the bias visibly nonzero
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out_spd = _run(cfg, kind, split, x, tp, True)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+
+    def one_shard(p):
+        h = layernorm(x, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+        from repro.core.blocks import gqa_mixer_seq
+        from repro.parallel.layout import make_gqa_layout
+        lay = make_gqa_layout(cfg.n_heads, cfg.n_kv_heads, tp)
+        part, _ = gqa_mixer_seq(cfg, kind, p["attn"], h, pos, lay, "model",
+                                q_chunk=64)
+        return part                                # P_i (no bias)
+
+    parts = jax.vmap(one_shard, axis_name="model")(split)
+    bo = np.asarray(split["attn"]["bo"][0])
+
+    def mlp_shard(p, u_i):
+        h2 = layernorm(u_i, p["ln2"]["w"], p["ln2"]["b"], cfg.norm_eps)
+        up = h2 @ p["mlp"]["wu"] + p["mlp"]["bu"]
+        return jax.nn.relu(up) @ p["mlp"]["wd"]
+
+    u = x[None] + parts + bo                       # MLP input: X + P_i + b
+    z = jax.vmap(mlp_shard, in_axes=(0, 0))(split, u)
+    bd = np.asarray(split["mlp"]["bd"][0])
+    expect = x + parts.sum(0) + bo + z.sum(0) + bd
+    np.testing.assert_allclose(np.asarray(out_spd), np.asarray(expect),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_spd_equals_tp_at_tp1():
+    """With one shard there is nothing to desynchronize: SPD == TP."""
+    cfg, kind, lp, _ = _mk_layer(tp=4)
+    split1 = simtp.split_layer(lp, cfg, kind, 1)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model),
+                          jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(_run(cfg, kind, split1, x, 1, True)),
+        np.asarray(_run(cfg, kind, split1, x, 1, False)), atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-v2-lite-16b",
+                                  "qwen2-moe-a2.7b", "hymba-1.5b",
+                                  "musicgen-medium"])
+def test_spd_diverges_but_bounded(arch):
+    """SPD changes the output (tp>1) but stays O(1) — the rewiring keeps
+    the residual structure, so outputs don't blow up."""
+    cfg, kind, lp, split = _mk_layer(arch, tp=4)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, cfg.d_model),
+                          jnp.float32)
+    o_tp = np.asarray(_run(cfg, kind, split, x, 4, False))
+    o_spd = np.asarray(_run(cfg, kind, split, x, 4, True))
+    assert not np.allclose(o_tp, o_spd, atol=1e-6)
+    assert np.isfinite(o_spd).all()
+    rel = np.linalg.norm(o_spd - o_tp) / np.linalg.norm(o_tp)
+    assert rel < 1.0, rel
+
+
+def test_ablation_table1a_design_choice():
+    """Appendix B.1: attention residual BEFORE the MLP all-reduce (ours)
+    vs AFTER (out = x + y_i + Σz_i, unsummed y).  The after-variant leaves
+    a per-shard y_i unsummed -> different (worse-structured) output."""
+    cfg, kind, lp, split = _mk_layer(tp=4)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out_before = _run(cfg, kind, split, x, 4, True)   # paper design
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+
+    def one_shard(p):
+        h = rmsnorm(x, p["ln1"]["w"], cfg.norm_eps)
+        from repro.core.blocks import gqa_mixer_seq
+        from repro.parallel.layout import make_gqa_layout
+        lay = make_gqa_layout(cfg.n_heads, cfg.n_kv_heads, tp=4)
+        part, _ = gqa_mixer_seq(cfg, kind, p["attn"], h, pos, lay, "model",
+                                q_chunk=64)
+        h2 = rmsnorm(x + part, p["ln2"]["w"], cfg.norm_eps)
+        up = h2 @ p["mlp"]["wu"]
+        g = h2 @ p["mlp"]["wg"]
+        z = (jax.nn.silu(g) * up) @ p["mlp"]["wd"]
+        return part, z
+
+    parts, zs = jax.vmap(one_shard)(split)
+    # "after" variant: y_i added outside the sync -> the summed attention
+    # contribution is missing (tp-1)/tp of the heads on every shard
+    out_after_shard0 = x + parts[0] + zs.sum(0)
+    assert not np.allclose(np.asarray(out_before),
+                           np.asarray(out_after_shard0), atol=1e-4)
+    # the before-variant recovers the full attention sum; the after variant
+    # provably cannot (it has only shard 0's heads)
+    full_attn = parts.sum(0)
+    err_before = np.linalg.norm(np.asarray(out_before - (x + full_attn)))
+    err_after = np.linalg.norm(np.asarray(out_after_shard0 - (x + full_attn)))
+    assert err_before < err_after

@@ -1,0 +1,147 @@
+"""Checkpointing (atomicity, corruption, rotation) and the fault-tolerant
+trainer (recovery, determinism, stragglers)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_cfg
+from repro.checkpoint.ckpt import (CheckpointManager, list_checkpoints,
+                                   load_checkpoint, save_checkpoint)
+from repro.config.base import SPDPlanConfig
+from repro.core import model as M
+from repro.launch.mesh import make_test_mesh
+from repro.parallel import tp as TP
+from repro.runtime.trainer import SimulatedFault, Trainer, TrainerConfig
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 6)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                  "d": jax.random.normal(jax.random.fold_in(k, 1), (3,))}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t, meta={"x": 1})
+    step, back, meta = load_checkpoint(str(tmp_path), tree_like=t)
+    assert step == 7 and meta == {"x": 1}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corruption_detected_falls_back(tmp_path):
+    t0, t1 = _tree(0), _tree(1)
+    save_checkpoint(str(tmp_path), 1, t0)
+    p2 = save_checkpoint(str(tmp_path), 2, t1)
+    # corrupt newest: truncate a leaf file
+    leaf = [f for f in os.listdir(p2) if f.endswith(".npy")][0]
+    with open(os.path.join(p2, leaf), "r+b") as f:
+        f.truncate(10)
+    step, back, _ = load_checkpoint(str(tmp_path), tree_like=t0)
+    assert step == 1     # fell back to the older valid checkpoint
+    for a, b in zip(jax.tree.leaves(t0), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partial_write_never_visible(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    # a stale tmp dir (crash mid-write) must not be listed or loaded
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_step_0000000009"))
+    assert all(not os.path.basename(p).startswith(".tmp")
+               for p in list_checkpoints(str(tmp_path)))
+    step, _, _ = load_checkpoint(str(tmp_path), tree_like=t)
+    assert step == 3
+
+
+def test_rotation(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2)
+    t = _tree()
+    for s in range(1, 6):
+        mgr.maybe_save(s, t)
+    names = [os.path.basename(p) for p in list_checkpoints(str(tmp_path))]
+    assert names == ["step_0000000004", "step_0000000005"]
+
+
+# ---------------------------------------------------------------------------
+# Trainer
+# ---------------------------------------------------------------------------
+
+def _mk_trainer(tmp_path, fault_hook=None, steps=12):
+    cfg = make_cfg("smollm-360m")
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    mesh = make_test_mesh(2, 2)
+    ts = TP.TrainStepConfig(microbatches=1, remat=False, q_chunk=32,
+                            lr=1e-3)
+    tc = TrainerConfig(total_steps=steps, ckpt_dir=str(tmp_path),
+                       ckpt_every=4, batch=4, seq=32)
+    tr = Trainer(cfg, plan, mesh, ts, tc, fault_hook=fault_hook)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return tr, params
+
+
+def test_training_descends(tmp_path):
+    tr, params = _mk_trainer(tmp_path, steps=12)
+    state = tr.run(tr.init_state(params))
+    assert state["step"] == 12
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0]
+
+
+def test_fault_recovery_resumes_from_checkpoint(tmp_path):
+    boom = {"armed": True}
+
+    def hook(step):
+        if step == 7 and boom["armed"]:
+            boom["armed"] = False
+            raise SimulatedFault("node died")
+
+    tr, params = _mk_trainer(tmp_path, fault_hook=hook, steps=12)
+    state = tr.run(tr.init_state(params))
+    assert state["step"] == 12
+    # the step-7 fault rolled back to the step-4 checkpoint: steps 5-7 run
+    # twice -> log longer than 12
+    steps_seen = [m["step"] for m in tr.metrics_log]
+    assert len(steps_seen) > 12
+    assert steps_seen.count(5) == 2
+
+
+def test_recovery_is_deterministic(tmp_path):
+    """Same data cursor after restore => the rerun losses match the
+    first attempt exactly (bit-exact resumable input pipeline)."""
+    boom = {"armed": True}
+
+    def hook(step):
+        if step == 6 and boom["armed"]:
+            boom["armed"] = False
+            raise SimulatedFault()
+
+    tr, params = _mk_trainer(tmp_path, fault_hook=hook, steps=8)
+    tr.run(tr.init_state(params))
+    by_step = {}
+    replays = {}
+    for m in tr.metrics_log:
+        if m["step"] in by_step:
+            replays[m["step"]] = (by_step[m["step"]], m["loss"])
+        else:
+            by_step[m["step"]] = m["loss"]
+    assert replays, "fault should have caused replays"
+    for step, (a, b) in replays.items():
+        np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=str(step))
+
+
+def test_straggler_detection(tmp_path):
+    """EWMA-based straggler flagging (unit-level: the hook runs outside
+    the timed region, so we feed synthetic step times directly)."""
+    tr, _ = _mk_trainer(tmp_path, steps=1)
+    for s in range(1, 9):
+        tr._track_time(s, 0.1)
+    tr._track_time(9, 0.45)      # 4.5x the EWMA -> flagged
+    assert tr.straggler_events and tr.straggler_events[-1]["step"] == 9
+    # EWMA absorbs the spike; a normal step after is not flagged
+    tr._track_time(10, 0.12)
+    assert tr.straggler_events[-1]["step"] == 9

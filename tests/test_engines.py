@@ -1,0 +1,118 @@
+"""Engine equivalence: simulated TP (vmap) vs real TP (shard_map) must be
+numerically identical for the same weights/plan/inputs, TP and SPD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, make_cfg
+from repro.config.base import SPDPlanConfig
+from repro.core import model as M, simtp
+from repro.launch.mesh import make_test_mesh
+from repro.parallel import tp as TP
+
+
+def _shard_loss(cfg, plan, mesh, stacked, batch, q_chunk=64):
+    from jax.sharding import PartitionSpec as P
+    tp = mesh.shape["model"]
+    dpx = TP.dp_axes(mesh)
+    p_specs = TP.param_pspecs(cfg, plan)
+    b_specs = TP.batch_pspecs(mesh, with_embeds="embeds" in batch)
+
+    def local(p, b):
+        loss, met = M.loss_fn(cfg, p, plan, b, tp=tp, q_chunk=q_chunk)
+        ce = jax.lax.psum(met["sum_ce"], dpx)
+        n = jax.lax.psum(met["n_tok"], dpx)
+        return ce / n
+
+    f = jax.jit(TP.shard_map(local, mesh, in_specs=(p_specs, b_specs),
+                             out_specs=P()))
+    gp = jax.device_put(stacked, TP.named(mesh, p_specs))
+    gb = jax.device_put(batch, TP.named(mesh, b_specs))
+    return float(f(gp, gb))
+
+
+@pytest.mark.parametrize("arch,spd", [
+    ("smollm-360m", 0), ("smollm-360m", 4),
+    ("qwen2-moe-a2.7b", 3), ("opt-6.7b", 2),
+    ("mamba2-370m", 0), ("hymba-1.5b", 4),
+])
+def test_sim_vs_shard_loss(arch, spd):
+    cfg = make_cfg(arch)
+    plan = SPDPlanConfig.first_k(cfg.n_layers, spd if cfg.spd_applicable
+                                 else 0)
+    batch = make_batch(cfg, b=4, s=32)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    tp = 4
+
+    split = simtp.prepare_params(params, cfg, plan, tp)
+    l_sim, met = simtp.make_loss_fn(cfg, plan, tp, q_chunk=64)(split, batch)
+    l_sim = float(met["sum_ce"] / met["n_tok"])
+
+    # MoE capacity dispatch couples tokens within a DP shard's local batch
+    # (cap + queue positions are per dispatch group), so exact parity with
+    # the sim engine (one group) requires dp=1.  Dense archs are row-
+    # independent and compare at dp=2.
+    dp = 1 if cfg.moe is not None else 2
+    mesh = make_test_mesh(dp, tp)
+    stacked = jax.tree.map(
+        jnp.array, M.stack_segments(M.pad_model(params, cfg, tp), cfg, plan))
+    l_shard = _shard_loss(cfg, plan, mesh, stacked, batch)
+    np.testing.assert_allclose(l_sim, l_shard, rtol=2e-5, atol=2e-5)
+
+
+def test_sim_vs_shard_decode():
+    """Decode parity: one decode step after prefill, both engines."""
+    cfg = make_cfg("smollm-360m")
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    tp = 2
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 31)))
+
+    from repro.runtime.engines import ShardEngine, SimEngine
+    sim = SimEngine(cfg, plan, tp, q_chunk=64)
+    sp = simtp.prepare_params(params, cfg, plan, tp)
+    lg_sim, c_sim = sim.prefill(sp, toks, cache_len=40)
+    nxt_sim = np.argmax(np.asarray(lg_sim), -1)
+
+    mesh = make_test_mesh(2, tp)
+    eng = ShardEngine(cfg, plan, mesh, q_chunk=64)
+    stacked = jax.tree.map(
+        jnp.array, M.stack_segments(M.pad_model(params, cfg, tp), cfg, plan))
+    gp = jax.device_put(stacked, TP.named(mesh, TP.param_pspecs(cfg, plan)))
+    lg_sh, c_sh = eng.prefill(gp, toks, cache_len=40)
+    nxt_sh = np.argmax(np.asarray(lg_sh), -1)
+    np.testing.assert_array_equal(nxt_sim, nxt_sh)
+    np.testing.assert_allclose(np.asarray(lg_sim), np.asarray(lg_sh),
+                               atol=2e-4, rtol=2e-4)
+
+    pos = jnp.full((4,), 31, jnp.int32)
+    cur = jnp.asarray(nxt_sim[:, None].astype(np.int32))
+    n1, _ = sim.decode(sp, cur, pos, c_sim)
+    n2, _ = eng.decode(gp, cur, pos, c_sh)
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+
+
+def test_multipod_mesh_axes():
+    """3-axis (pod,data,model) mesh: train step lowers and runs."""
+    cfg = make_cfg("smollm-360m")
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    mesh = make_test_mesh(2, 2, pod=2)
+    batch = make_batch(cfg, b=4, s=32)
+    ts = TP.TrainStepConfig(microbatches=1, remat=False, q_chunk=64)
+    step, init, specs = TP.build_train_step(cfg, plan, mesh, ts)
+    stacked = jax.tree.map(
+        jnp.array, M.stack_segments(M.pad_model(params, cfg, 2), cfg, plan))
+    gp = jax.device_put(stacked, TP.named(mesh, specs["params"]))
+    opt = init(gp)
+    gb = jax.device_put(batch, TP.named(mesh, specs["batch"]))
+    gp, opt, met = step(gp, opt, gb)
+    assert np.isfinite(float(met["loss"]))
+    # sim reference
+    split = simtp.prepare_params(params, cfg, plan, 2)
+    _, m = simtp.make_loss_fn(cfg, plan, 2, q_chunk=64)(split, batch)
+    np.testing.assert_allclose(float(met["loss"]),
+                               float(m["sum_ce"] / m["n_tok"]),
+                               rtol=2e-5)

@@ -1,0 +1,250 @@
+"""Gradient correctness: the custom-VJP collective discipline
+(f/g/shared_param) must make tp>1 grads EXACTLY match tp=1 autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, make_cfg
+from repro.config.base import SPDPlanConfig
+from repro.core import model as M, simtp
+
+
+def _grad_trees(cfg, plan, batch, tps=(1, 4)):
+    params = _decisive_router(M.init_model(jax.random.PRNGKey(0), cfg), cfg)
+    outs = {}
+    for tp in tps:
+        split = simtp.prepare_params(params, cfg, plan, tp)
+        loss, g = simtp.make_grad_fn(cfg, plan, tp, q_chunk=64)(split, batch)
+        outs[tp] = (float(loss), simtp.merge_stacked(g, cfg, plan, tp))
+    return outs
+
+
+def _unpad_sum(b, a, cfg, key):
+    """Map a tp-merged PADDED attention grad back to canonical heads.
+
+    Replicated kv copies each hold a PARTIAL grad (their shards' q heads)
+    -> the true grad is the SUM over copies; zero-pad slots are dropped."""
+    from repro.core.blocks import ssm_heads
+    from repro.parallel.layout import (make_gqa_layout, q_head_orig,
+                                       kv_head_orig)
+    name = key.rsplit("'", 2)[-2] if "'" in key else key
+    if cfg.mla is not None or cfg.family == "ssm":
+        return None
+    lay = make_gqa_layout(cfg.n_heads, cfg.n_kv_heads, 4)
+    dh = cfg.d_head
+    maps = {"wq": (1, q_head_orig(lay), cfg.n_heads),
+            "wo": (0, q_head_orig(lay), cfg.n_heads),
+            "bq": (0, q_head_orig(lay), cfg.n_heads),
+            "wk": (1, kv_head_orig(lay), cfg.n_kv_heads),
+            "wv": (1, kv_head_orig(lay), cfg.n_kv_heads),
+            "bk": (0, kv_head_orig(lay), cfg.n_kv_heads),
+            "bv": (0, kv_head_orig(lay), cfg.n_kv_heads)}
+    if name not in maps or "attn" not in key:
+        return None
+    axis, m, n_orig = maps[name]
+    if "segs" in key:
+        axis += 1          # stacked leaves carry a leading layer axis
+    arr = np.moveaxis(np.asarray(b), axis, 0)
+    arr = arr.reshape(len(m), dh, *arr.shape[1:])
+    out = np.zeros((n_orig,) + arr.shape[1:], arr.dtype)
+    for slot, orig in enumerate(m):
+        if orig >= 0:
+            out[orig] += arr[slot]
+    out = out.reshape(n_orig * dh, *arr.shape[2:])
+    return np.moveaxis(out, 0, axis)
+
+
+def _compare_same_shape(g1, g4, atol, cfg=None):
+    fl1 = jax.tree_util.tree_flatten_with_path(g1)[0]
+    fl4 = jax.tree_util.tree_flatten_with_path(g4)[0]
+    n_checked = 0
+    for (p1, a), (p4, b) in zip(fl1, fl4):
+        key = jax.tree_util.keystr(p1)
+        assert key == jax.tree_util.keystr(p4)
+        if a.shape != b.shape:
+            if cfg is not None:
+                mapped = _unpad_sum(b, a, cfg, key)
+                if mapped is not None and mapped.shape == a.shape:
+                    np.testing.assert_allclose(np.asarray(a), mapped,
+                                               atol=atol, err_msg=key)
+                    n_checked += 1
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol,
+                                   err_msg=key)
+        n_checked += 1
+    assert n_checked > 5, n_checked
+
+
+ARCHS_TP = ["smollm-360m", "qwen3-1.7b", "opt-6.7b", "deepseek-v2-lite-16b",
+            "qwen2-moe-a2.7b", "mamba2-370m", "hymba-1.5b",
+            "musicgen-medium"]
+
+
+def _decisive_router(params, cfg):
+    """MoE top-k is DISCRETE: O(1e-7) float-order differences between the
+    two engines can flip borderline routing decisions and produce sparse
+    O(1e-3) grad differences that say nothing about the collective
+    discipline under test.  Scaling the router makes every decision
+    decisive so the comparison is exact."""
+    if cfg.moe is None:
+        return params
+    layers = []
+    for lp in params["layers"]:
+        if "moe" in lp:
+            lp = dict(lp)
+            moe = dict(lp["moe"])
+            moe["router"] = moe["router"] * 25.0
+            lp["moe"] = moe
+        layers.append(lp)
+    out = dict(params)
+    out["layers"] = layers
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS_TP)
+def test_tp_grads_match_tp1(arch):
+    cfg = make_cfg(arch)
+    plan = SPDPlanConfig.none(cfg.n_layers)
+    batch = make_batch(cfg)
+    outs = _grad_trees(cfg, plan, batch)
+    (l1, g1), (l4, g4) = outs[1], outs[4]
+    assert abs(l1 - l4) < 2e-4, (l1, l4)
+    # atol headroom: SSD's exp-product chains and fusion-order changes
+    # under memory pressure move borderline elements by ~1e-4
+    _compare_same_shape(g1, g4, atol=1e-3, cfg=cfg)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "opt-6.7b",
+                                  "qwen2-moe-a2.7b"])
+def test_spd_grads_finite_and_self_consistent(arch):
+    """SPD-mode grads: finite, and running the same tp twice is
+    deterministic (guards against axis-index-dependent nondeterminism)."""
+    cfg = make_cfg(arch)
+    plan = SPDPlanConfig.full(cfg.n_layers)
+    batch = make_batch(cfg)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    split = simtp.prepare_params(params, cfg, plan, 4)
+    gfn = simtp.make_grad_fn(cfg, plan, 4, q_chunk=64)
+    l1, g1 = gfn(split, batch)
+    l2, g2 = gfn(split, batch)
+    assert np.isfinite(float(l1))
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        assert bool(jnp.all(jnp.isfinite(a)))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spd_grad_matches_finite_difference():
+    """Directional finite-difference check THROUGH the SPD wiring (the
+    custom-vjp ops must be a true gradient, not just self-consistent).
+
+    Replicated leaves are stored as tp identical copies; the engine's
+    gradient convention puts the FULL (shard-summed) grad on every copy
+    (shared_param/f_ident bwd psums), so a valid direction must move all
+    copies TOGETHER, and the analytic dot product counts such a leaf
+    once.  (Perturbing copies independently is outside the replicated
+    parameter manifold — block-level exactness, incl. per-copy partials,
+    is verified against raw autodiff in this test's sibling below.)"""
+    from repro.parallel.layout import REPLICATED
+    cfg = make_cfg("smollm-360m")
+    plan = SPDPlanConfig.full(cfg.n_layers)
+    batch = make_batch(cfg, b=1, s=16)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    split = simtp.prepare_params(params, cfg, plan, 2)
+    lfn = simtp.make_loss_fn(cfg, plan, 2, q_chunk=64)
+    gfn = simtp.make_grad_fn(cfg, plan, 2, q_chunk=64)
+    _, g = gfn(split, batch)
+    specs = M.stacked_specs(cfg, plan)
+
+    def spec_leaves(tree):
+        out = []
+        for k, v in tree.items():
+            if k == "segs":
+                for sv in v:
+                    out.extend(jax.tree.leaves(sv))
+            else:
+                out.extend(jax.tree.leaves(tree[k]))
+        return out
+
+    # align spec ints with split-tree leaves (same dict iteration order)
+    flat_specs = spec_leaves(specs)
+    leaves, treedef = jax.tree.flatten(split)
+    assert len(flat_specs) == len(leaves)
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, len(leaves))
+    d, an = [], 0.0
+    gleaves = jax.tree.leaves(g)
+    for k, l, a_, gl in zip(ks, leaves, flat_specs, gleaves):
+        if a_ == REPLICATED:
+            # one shared direction, broadcast over the tp copies
+            d0 = jax.random.normal(k, l.shape[1:], jnp.float32) * 2e-4
+            dl = jnp.broadcast_to(d0[None], l.shape)
+            an += float(jnp.vdot(gl[0], d0))   # grad copy = full sum
+        else:
+            dl = jax.random.normal(k, l.shape, jnp.float32) * 2e-4
+            an += float(jnp.vdot(gl, dl))
+        d.append(dl)
+    dirs = jax.tree.unflatten(treedef, d)
+    plus = jax.tree.map(lambda p, v: p + v, split, dirs)
+    minus = jax.tree.map(lambda p, v: p - v, split, dirs)
+    lp, _ = lfn(plus, batch)
+    lm, _ = lfn(minus, batch)
+    fd = (float(lp) - float(lm)) / 2.0
+    np.testing.assert_allclose(fd, an, rtol=3e-2, atol=1e-7)
+
+
+def test_spd_block_grads_match_raw_autodiff():
+    """Block-level EXACTNESS oracle: the custom-vjp discipline vs plain
+    autodiff of the same SPD math with the psum done outside the vmap
+    (no axis collectives, no custom rules)."""
+    from repro.core import blocks as B
+    from repro.core.blocks import gqa_mixer_seq, init_layer
+    from repro.core.layer_kinds import layer_kinds
+    from repro.models.common import rmsnorm
+    cfg = make_cfg("smollm-360m")
+    kind = layer_kinds(cfg)[0]
+    tp = 2
+    lp = init_layer(jax.random.PRNGKey(0), cfg, kind)
+    split = simtp.split_layer(lp, cfg, kind, tp)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+    lay = M._gqa_layout_or_none(cfg, tp)
+
+    def per_shard_loss(p):
+        out, _, _ = B.block_seq(cfg, kind, lay, p, x, pos, drop=True, tp=tp,
+                                shard_idx=jax.lax.axis_index("model"),
+                                axis="model", q_chunk=64)
+        return jnp.sum(out ** 2)
+
+    g_custom = jax.vmap(jax.grad(per_shard_loss),
+                        axis_name="model")(split)
+
+    def spd_block_raw(p):
+        def shard(pi):
+            h = rmsnorm(x, pi["ln1"]["w"], cfg.norm_eps)
+            part, _ = gqa_mixer_seq(cfg, kind, pi["attn"], h, pos, lay,
+                                    "model", q_chunk=64)
+            u = x + part
+            h2 = rmsnorm(u, pi["ln2"]["w"], cfg.norm_eps)
+            up = h2 @ pi["mlp"]["wu"]
+            g_ = h2 @ pi["mlp"]["wg"]
+            z = (jax.nn.silu(g_) * up) @ pi["mlp"]["wd"]
+            return z + part
+        parts = jax.vmap(shard)(p)
+        return x + parts.sum(0)
+
+    g_exact = jax.grad(lambda p: jnp.sum(spd_block_raw(p) ** 2))(split)
+    # sharded leaves: exact equality; replicated: custom = sum over copies
+    for name in ("wq", "wk", "wv", "wo"):
+        np.testing.assert_allclose(np.asarray(g_custom["attn"][name]),
+                                   np.asarray(g_exact["attn"][name]),
+                                   atol=1e-4, rtol=1e-5)
+    for name in ("wu", "wg", "wd"):
+        np.testing.assert_allclose(np.asarray(g_custom["mlp"][name]),
+                                   np.asarray(g_exact["mlp"][name]),
+                                   atol=1e-4, rtol=1e-5)
+    for ln in ("ln1", "ln2"):
+        np.testing.assert_allclose(
+            np.asarray(g_custom[ln]["w"][0]),
+            np.asarray(g_exact[ln]["w"]).sum(0), atol=1e-4, rtol=1e-5)

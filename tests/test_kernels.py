@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import (flash_attention_ref,
+                               fused_residual_rmsnorm_ref)
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,d,hq,hkv,bq,bk", [
+    (128, 64, 2, 2, 128, 128),      # MHA, single block
+    (256, 64, 4, 2, 128, 128),      # GQA group 2
+    (384, 128, 6, 1, 128, 128),     # MQA, 3 q blocks, d=128
+    (256, 32, 4, 4, 64, 128),       # small head dim, asym blocks
+    (200, 64, 2, 2, 128, 128),      # ragged S (pads to 256)
+])
+def test_flash_attention_sweep(s, d, hq, hkv, bq, bk, dtype):
+    rng = np.random.default_rng(s + d + hq)
+    b = 2
+    q = jnp.asarray(rng.standard_normal((b, s, hq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                              interpret=True)
+    qp = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kp = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vp = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    ref = flash_attention_ref(qp, kp, vp).reshape(b, hq, s, d) \
+        .transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_matches_model_attention():
+    """The kernel must agree with the model's XLA attention path."""
+    from repro.models.attention import attention_any
+    rng = np.random.default_rng(9)
+    b, s, hq, hkv, d = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    scale = d ** -0.5
+    xla = attention_any(q * scale / scale, k, v, pos, pos, q_chunk=128)
+    pal = ops.flash_attention(q, k, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pal), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,br", [(512, 96, 256), (100, 64, 256),
+                                    (256, 960, 128)])
+def test_fused_norm_sweep(t, d, br, dtype):
+    rng = np.random.default_rng(t + d)
+    x = jnp.asarray(rng.standard_normal((t, d)), dtype)
+    r = jnp.asarray(rng.standard_normal((t, d)), dtype)
+    w = jnp.asarray(rng.standard_normal(d), dtype)
+    y, s = ops.fused_residual_rmsnorm(x, r, w, block_rows=br,
+                                      interpret=True)
+    yr, sr = fused_residual_rmsnorm_ref(x, r, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(s, np.float32),
+                               np.asarray(sr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,p,n,g,chunk", [
+    (128, 2, 16, 32, 1, 32),
+    (256, 4, 64, 16, 1, 64),
+    (64, 3, 8, 8, 3, 16),          # per-head groups (G == H)
+])
+def test_ssd_kernel_sweep(s, h, p, n, g, chunk, dtype):
+    rng = np.random.default_rng(s + h + n)
+    b = 2
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)) * 0.5, dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, s, h)), dtype)
+    a = jnp.asarray(-rng.uniform(0.5, 2.0, h), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, dtype)
+    cm = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, dtype)
+    dd = jnp.asarray(rng.standard_normal(h), jnp.float32)
+    y = ops.ssd_scan(x, dt, a, bm, cm, dd, chunk=chunk, interpret=True)
+    yr, _ = ssd_chunked(x, dt, a, bm, cm, dd, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               **(_tol(dtype) if dtype == jnp.bfloat16
+                                  else dict(atol=2e-4, rtol=2e-3)))
+
+
+def test_ssd_chunked_oracle_vs_sequential():
+    """The oracle itself is validated against the O(S) recurrence."""
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 1, 32, 2, 4, 8
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, (b, s, h)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.3, 2.0, h), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, 1, n)) * 0.4, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, 1, n)) * 0.4, jnp.float32)
+    dd = jnp.asarray(rng.standard_normal(h), jnp.float32)
+    y1, _ = ssd_chunked(x, dt, a, bm, cm, dd, chunk=8)
+    y2, _ = ssd_reference(x, dt, a, bm, cm, dd)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

@@ -1,0 +1,71 @@
+"""GQA TP-layout properties (hypothesis) + split/merge roundtrips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.parallel.layout import (REPLICATED, make_gqa_layout, merge_leaf,
+                                   pad_heads, q_head_orig, q_head_to_kv,
+                                   kv_head_orig, split_leaf)
+
+
+@settings(max_examples=200, deadline=None)
+@given(h=st.integers(1, 64), kv=st.integers(1, 64), tp=st.sampled_from(
+    [1, 2, 4, 8, 16]))
+def test_layout_invariants(h, kv, tp):
+    if h % kv != 0:
+        h = kv * max(1, h // kv)
+    lay = make_gqa_layout(h, kv, tp)
+    # paddings divide evenly across shards
+    assert lay.h_pad % tp == 0
+    assert lay.kv_layout % tp == 0
+    assert lay.h_pad >= h and lay.kv_pad >= min(kv, lay.kv_pad)
+    assert lay.q_local * tp == lay.h_pad
+    assert lay.kv_local * tp == lay.kv_layout
+    # every original head appears exactly once
+    qmap = q_head_orig(lay)
+    real = qmap[qmap >= 0]
+    assert sorted(real.tolist()) == list(range(h))
+    kvmap = kv_head_orig(lay)
+    # each original kv head appears exactly `replication` times
+    for k in range(kv):
+        assert (kvmap == k).sum() == lay.replication
+    # q->kv consistency: q heads of one kv group attend to that kv slot
+    q2kv = q_head_to_kv(lay)
+    for slot, orig in enumerate(qmap):
+        if orig < 0:
+            continue
+        kv_slot = q2kv[slot]
+        assert kvmap[kv_slot] == orig // (h // kv)
+
+
+@settings(max_examples=50, deadline=None)
+@given(tp=st.sampled_from([1, 2, 4]), axis=st.integers(0, 1),
+       rows=st.integers(1, 3))
+def test_split_merge_roundtrip(tp, axis, rows):
+    shape = [rows * 4, 8]
+    shape[axis] = shape[axis] * tp
+    w = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+    s = split_leaf(w, axis, tp)
+    assert s.shape[0] == tp
+    back = merge_leaf(s, axis, tp)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+def test_split_replicated():
+    w = jnp.ones((3, 5))
+    s = split_leaf(w, REPLICATED, 4)
+    assert s.shape == (4, 3, 5)
+    np.testing.assert_array_equal(np.asarray(merge_leaf(s, REPLICATED, 4)),
+                                  np.asarray(w))
+
+
+def test_pad_heads_zero_slots():
+    w = jnp.arange(2 * 3 * 4, dtype=jnp.float32).reshape(2, 12)  # 3 heads x dh4
+    src = np.array([1, -1, 0, 2])
+    out = pad_heads(w, 1, src, 4, 3)
+    assert out.shape == (2, 16)
+    np.testing.assert_array_equal(np.asarray(out[:, 4:8]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[:, 0:4]),
+                                  np.asarray(w[:, 4:8]))

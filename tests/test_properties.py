@@ -1,0 +1,101 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config.base import SPDPlanConfig
+from repro.optim.schedule import make_schedule
+from repro.parallel.compression import dequantize_int8, quantize_int8
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=64))
+def test_plan_segments_partition(mask):
+    plan = SPDPlanConfig(tuple(mask))
+    segs = plan.segments()
+    # segments tile [0, L) exactly and alternate flags
+    covered = []
+    for i, (start, length, flag) in enumerate(segs):
+        assert length > 0
+        covered.extend(range(start, start + length))
+        assert all(mask[j] == flag for j in range(start, start + length))
+        if i:
+            assert segs[i - 1][2] != flag
+    assert covered == list(range(len(mask)))
+    assert plan.n_dropped == sum(mask)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n_layers=st.integers(1, 40), st_data=st.data())
+def test_plan_from_ranking(n_layers, st_data):
+    ranking = np.random.default_rng(n_layers).permutation(n_layers)
+    n_spd = st_data.draw(st.integers(0, n_layers))
+    plan = SPDPlanConfig.from_ranking(ranking, n_spd, n_layers)
+    assert plan.n_dropped == n_spd
+    assert all(plan.drop_mask[i] for i in ranking[:n_spd])
+
+
+@settings(max_examples=30, deadline=None)
+@given(kind=st.sampled_from(["cosine", "linear", "const"]),
+       warmup=st.integers(0, 20), total=st.integers(21, 200))
+def test_schedule_properties(kind, warmup, total):
+    s = make_schedule(kind, base_lr=1e-3, warmup=warmup, total=total)
+    vals = np.asarray([float(s(t)) for t in range(total + 1)])
+    assert (vals >= 0).all() and (vals <= 1e-3 * (1 + 1e-5)).all()
+    if warmup > 1:
+        assert vals[0] < vals[warmup]          # warms up
+    if kind in ("cosine", "linear") and warmup >= 1:
+        assert vals[total] <= vals[warmup] + 1e-12
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 2000), scale=st.floats(1e-6, 1e3))
+def test_quantize_roundtrip_bound(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, n)
+    # absolute error bounded by scale/254 per chunk-max
+    err = np.abs(np.asarray(back - x))
+    chunk_max = np.abs(np.asarray(x)).max() if n else 0
+    assert err.max() <= chunk_max / 127.0 + 1e-7
+
+
+@settings(max_examples=25, deadline=None)
+@given(v=st.integers(2, 500), b=st.integers(1, 4), s=st.integers(4, 64))
+def test_synthetic_data_deterministic(v, b, s):
+    from repro.data.synthetic import make_batch_iterator
+    a = next(make_batch_iterator(v, b, s, seed=7, start_step=3))
+    c = next(make_batch_iterator(v, b, s, seed=7, start_step=3))
+    np.testing.assert_array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < v
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.sampled_from([4, 6, 8]), kv=st.sampled_from([1, 2, 4]),
+       tp=st.sampled_from([1, 2, 4]))
+def test_padded_heads_contribute_zero(h, kv, tp):
+    """Zero-padded q heads have zero W_O rows: the block output is the
+    same as computed from real heads only (structural invariant that
+    makes head padding safe)."""
+    if h % kv:
+        return
+    from conftest import make_cfg
+    from repro.config.base import replace
+    from repro.core import simtp
+    from repro.core.blocks import init_layer
+    from repro.core.layer_kinds import layer_kinds
+    cfg = replace(make_cfg("smollm-360m"), n_heads=h, n_kv_heads=kv,
+                  d_head=8)
+    kind = layer_kinds(cfg)[0]
+    lp = init_layer(jax.random.PRNGKey(0), cfg, kind)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+    outs = []
+    for t in (1, tp):
+        sp = simtp.split_layer(lp, cfg, kind, t)
+        fn = simtp.make_block_fn(cfg, kind, t, drop=False, q_chunk=64)
+        outs.append(np.asarray(fn(sp, x, pos)))
+    np.testing.assert_allclose(outs[0], outs[1], atol=3e-5)
