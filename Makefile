@@ -1,0 +1,20 @@
+# Repo tooling. `make test` is the tier-1 verify command from ROADMAP.md.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test lint bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+lint:
+	$(PY) -m compileall -q src benchmarks examples tests
+	$(PY) scripts/lint.py
+
+# fast end-to-end sanity: quickstart + paged serving + serving benchmark
+bench-smoke:
+	$(PY) examples/quickstart.py
+	$(PY) -m repro.launch.serve --arch smollm-360m-reduced --engine sim \
+	    --tp 2 --requests 4 --max-new 4 --cache-len 64 \
+	    --page-size 8 --num-pages 16 --prefill-chunk 16
+	$(PY) -m benchmarks.run --only serving

@@ -1,0 +1,95 @@
+"""Serving throughput: dense slot caches vs the paged KV pool.
+
+Skewed prompt lengths (a few long, many short — the realistic traffic
+shape) on the SimEngine: the dense server must budget every slot for the
+WORST-CASE sequence, so its admissible batch is small; the paged server
+admits against free pages, packs more concurrent requests into the same
+token memory, and preempts/requeues when the pool runs dry.  Reports
+tokens/sec of generated output plus the cache-memory footprint each
+configuration pre-allocates (docs/serving.md has the design).
+"""
+import numpy as np
+
+from benchmarks._common import Timer, train_reduced
+
+
+def _requests(cfg, n, seed=0):
+    """Skewed mix: ~1/4 long prompts, the rest short."""
+    from repro.runtime.server import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n):
+        plen = int(rng.integers(24, 48)) if uid % 4 == 0 \
+            else int(rng.integers(4, 12))
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new=8))
+    return reqs
+
+
+def _tok_bytes(caches):
+    import jax
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+
+
+def run(csv):
+    import jax
+    from repro.config.base import SPDPlanConfig
+    from repro.core import simtp
+    from repro.runtime.engines import SimEngine
+    from repro.runtime.server import PagedServer, Server
+
+    cfg, canonical = train_reduced(steps=0)
+    tp = 2
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    split = simtp.prepare_params(canonical, cfg, plan, tp)
+    engine = SimEngine(cfg, plan, tp, q_chunk=64)
+
+    n_req, cache_len = 16, 64
+    rows = []
+
+    def drive(server, name):
+        # warmup with the SAME mix so every prefill bucket / decode shape
+        # is compiled before the timed run (steady-state comparison)
+        for r in _requests(cfg, n_req):
+            server.submit(r)
+        server.run()
+        server.completed.clear()
+        if hasattr(server, "n_preemptions"):
+            server.n_preemptions = 0     # report the timed run only
+        for r in _requests(cfg, n_req):
+            server.submit(r)
+        t = Timer()
+        done = server.run()
+        us = t.us()
+        toks = sum(len(r.out) for r in done.values())
+        assert len(done) == n_req, (name, len(done))
+        return toks, us
+
+    # dense: every slot pre-allocates cache_len tokens
+    dense = Server(engine, split, max_batch=4, cache_len=cache_len)
+    dense_bytes = _tok_bytes(dense.caches)
+    toks_d, us_d = drive(dense, "dense")
+    tps_d = toks_d / (us_d / 1e6)
+    rows.append({"mode": "dense", "tok_per_s": tps_d,
+                 "cache_mb": dense_bytes / 2**20})
+    csv("serving/dense", us_d / toks_d,
+        f"tok/s={tps_d:.1f} cache_mb={dense_bytes / 2**20:.2f}")
+
+    # paged: ~2.5 dense slots' worth of token memory but 8 schedulable
+    # slots — throughput comes from packing short prompts into pages
+    paged = PagedServer(engine, split, max_slots=8, cache_len=cache_len,
+                        page_size=8, num_pages=20, prefill_chunk=16)
+    paged_bytes = _tok_bytes(paged.pcaches)
+    toks_p, us_p = drive(paged, "paged")
+    tps_p = toks_p / (us_p / 1e6)
+    rows.append({"mode": "paged", "tok_per_s": tps_p,
+                 "cache_mb": paged_bytes / 2**20,
+                 "preemptions": paged.n_preemptions})
+    csv("serving/paged", us_p / toks_p,
+        f"tok/s={tps_p:.1f} cache_mb={paged_bytes / 2**20:.2f} "
+        f"preempt={paged.n_preemptions}")
+    rows.append({"mode": "ratio", "paged_over_dense": tps_p / tps_d})
+    csv("serving/ratio", 0.0, f"paged/dense tok/s = {tps_p / tps_d:.2f}")
+    return rows

@@ -8,6 +8,7 @@ prints ``name,us_per_call,derived`` CSV lines.
   bench_accuracy     Fig 7/8 quality vs SPD budget x strategy
   bench_ablation     Table 1 residual-design ablations (1a no-bias, 1b bias)
   roofline           --      SRoofline terms from the dry-run artifacts
+  bench_serving      --      dense vs paged-KV serving throughput
 """
 import argparse
 import json
@@ -29,8 +30,8 @@ def main():
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (bench_ablation, bench_accuracy,
-                            bench_sensitivity, bench_speedup,
-                            bench_transfer, roofline)
+                            bench_sensitivity, bench_serving,
+                            bench_speedup, bench_transfer, roofline)
     suites = {
         "transfer": bench_transfer.run,
         "sensitivity": bench_sensitivity.run,
@@ -38,6 +39,7 @@ def main():
         "ablation": bench_ablation.run,
         "speedup": bench_speedup.run,
         "roofline": roofline.run,
+        "serving": bench_serving.run,
     }
     failures = 0
     for name, fn in suites.items():

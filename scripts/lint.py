@@ -1,0 +1,19 @@
+"""Minimal dependency-free lint: long lines and tab indentation in
+Python sources (the container has no flake8/ruff; `make lint` pairs this
+with compileall for syntax)."""
+import pathlib
+import sys
+
+MAX = 100
+bad = []
+for root in ("src", "benchmarks", "examples", "tests", "scripts"):
+    for p in pathlib.Path(root).rglob("*.py"):
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if len(line.rstrip("\n")) > MAX:
+                bad.append(f"{p}:{i}: line > {MAX} cols")
+            if line.startswith("\t"):
+                bad.append(f"{p}:{i}: tab indentation")
+if bad:
+    print(*bad, sep="\n")
+    sys.exit(1)
+print("lint ok")

@@ -873,6 +873,37 @@ def block_seq(cfg, kind, lay, p, x, pos, *, drop: bool, tp: int, shard_idx,
     return out, aux, cache
 
 
+def _wire_post_mixer(cfg, kind, p, x, part, bo, *, drop: bool, tp: int,
+                     shard_idx, axis):
+    """TP/SPD post-mixer wiring shared by the cached paths (decode and
+    chunked-prefill extension) — block_seq's Fig 3 wiring minus the aux
+    plumbing.  x is the block input, `part` the shard-local mixer partial."""
+    if not drop:
+        y = sync_output(part, axis)
+        if bo is not None:
+            y = y + bo
+        u = x + y
+        z, bd, _ = _ffn_partial(cfg, kind, p, u, axis, tp, shard_idx,
+                                divergent=False)
+        z = sync_output(z, axis)
+        if bd is not None:
+            z = z + bd
+        return u + z
+    y_i = part
+    if bo is not None:
+        y_i = y_i + shared_param(bo, axis)
+    u_i = column_entry(x, axis) + y_i   # see block_seq note
+    z_i, bd, _ = _ffn_partial(cfg, kind, p, u_i, axis, tp, shard_idx,
+                              divergent=True)
+    s = sync_output(z_i + part, axis)
+    out = x + s
+    if bo is not None:
+        out = out + bo
+    if bd is not None:
+        out = out + bd
+    return out
+
+
 def block_dec(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
               shard_idx, axis=MODEL_AXIS):
     """Decode-mode block: x (B,1,d), per-seq pos (B,). Returns (out, cache)."""
@@ -896,28 +927,54 @@ def block_dec(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
     else:
         raise ValueError(kind.mixer)
 
-    if not drop:
-        y = sync_output(part, axis)
-        if bo is not None:
-            y = y + bo
-        u = x + y
-        z, bd, _ = _ffn_partial(cfg, kind, p, u, axis, tp, shard_idx,
-                                divergent=False)
-        z = sync_output(z, axis)
-        if bd is not None:
-            z = z + bd
-        out = u + z
+    out = _wire_post_mixer(cfg, kind, p, x, part, bo, drop=drop, tp=tp,
+                           shard_idx=shard_idx, axis=axis)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (cache-extension mode): a chunk of C tokens is run
+# seq-mode against an existing decode cache, writing its K/V at absolute
+# positions and attending over the whole buffer with position masking.
+# GQA/full-causal layers only (model.supports_chunked_prefill gates
+# callers); rolling-window and SSM/MLA layers fall back to full prefill.
+# ---------------------------------------------------------------------------
+
+
+def gqa_mixer_ext(cfg, kind, a, h, pos, cache, lay, axis, *, q_chunk=1024):
+    """Extension attention: h (B,C,d); pos (B,C) absolute positions of the
+    chunk; cache k/v span the full per-slot buffer (non-windowed)."""
+    q, k, v = _qkv(cfg, a, h, lay, axis)
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_fraction)
+    b, c = h.shape[:2]
+    bi = jnp.arange(b)[:, None]
+    if cfg.kv_dtype == "int8":
+        kq, ks = A.kv_quantize(k)
+        vq, vs = A.kv_quantize(v)
+        cache = {"k": cache["k"].at[bi, pos].set(kq),
+                 "k_s": cache["k_s"].at[bi, pos].set(ks),
+                 "v": cache["v"].at[bi, pos].set(vq),
+                 "v_s": cache["v_s"].at[bi, pos].set(vs)}
     else:
-        y_i = part
-        if bo is not None:
-            y_i = y_i + shared_param(bo, axis)
-        u_i = column_entry(x, axis) + y_i   # see block_seq note
-        z_i, bd, _ = _ffn_partial(cfg, kind, p, u_i, axis, tp, shard_idx,
-                                  divergent=True)
-        s = sync_output(z_i + part, axis)
-        out = x + s
-        if bo is not None:
-            out = out + bo
-        if bd is not None:
-            out = out + bd
+        cache = {"k": cache["k"].at[bi, pos].set(k),
+                 "v": cache["v"].at[bi, pos].set(v)}
+    kc, vc = _unpack_kv(cfg, cache, h.dtype)
+    s_kv = kc.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(s_kv)[None], (b, s_kv))
+    o = A.attention_any(q, kc, vc, pos, kv_pos, window=0, q_chunk=q_chunk)
+    part = _mm(o.reshape(b, c, -1), a["wo"])
+    return part, cache
+
+
+def block_ext(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
+              shard_idx, axis=MODEL_AXIS, q_chunk=1024):
+    """Chunked-prefill block: x (B,C,d), pos (B,C). Returns (out, cache)."""
+    assert kind.mixer == "gqa" and kind.window == 0, kind
+    h = _norm(x, p["ln1"], cfg, shared=False, axis=axis)
+    h = column_entry(h, axis)
+    part, cache = gqa_mixer_ext(cfg, kind, p["attn"], h, pos, cache, lay,
+                                axis, q_chunk=q_chunk)
+    out = _wire_post_mixer(cfg, kind, p, x, part, p["attn"].get("bo"),
+                           drop=drop, tp=tp, shard_idx=shard_idx, axis=axis)
     return out, cache

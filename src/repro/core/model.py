@@ -464,6 +464,106 @@ def cache_struct(cfg, plan: SPDPlanConfig, batch: int, seq_len: int, tp: int):
     return out
 
 
+def cache_pageable_tree(cfg, plan: SPDPlanConfig):
+    """Which cache leaves get PAGED (bool tree matching cache_struct).
+
+    Paged: leaves with a full-length sequence axis at position 2 in the
+    shard-logical (layer, batch, seq, ...) layout — GQA/hybrid K/V (and
+    int8 scales) on non-windowed layers, MLA latents.  Dense per-slot:
+    rolling-window KV (already bounded to `window`), SSM state, and conv
+    tails (no sequence axis to page)."""
+    segs = plan_segments(cfg, plan.drop_mask)
+    out = []
+    for (start, length, kind, dropped) in segs:
+        ssm_c = {"state": False, "conv": {"x": False, "bc": False}}
+        if kind.mixer == "ssm":
+            out.append(ssm_c)
+            continue
+        if kind.mixer == "mla":
+            out.append({"c": True, "kr": True})
+            continue
+        pageable = kind.window == 0
+        kv = {"k": pageable, "v": pageable}
+        if cfg.kv_dtype == "int8":
+            kv.update({"k_s": pageable, "v_s": pageable})
+        if kind.mixer == "hybrid":
+            kv.update(ssm_c)
+        out.append(kv)
+    return out
+
+
+def paged_cache_struct(cfg, plan: SPDPlanConfig, batch: int, seq_len: int,
+                       tp: int, *, page_size: int, num_pages: int):
+    """cache_struct with pageable leaves' (batch, seq) axes replaced by
+    (num_pages + 1, page_size); the extra page is the trash page (see
+    runtime/paging.py).  Non-pageable leaves keep dense (batch, ...)."""
+    structs = cache_struct(cfg, plan, batch, seq_len, tp)
+    flags = cache_pageable_tree(cfg, plan)
+
+    def one(f, s):
+        if not f:
+            return s
+        shp = (s.shape[0], num_pages + 1, page_size) + s.shape[3:]
+        return jax.ShapeDtypeStruct(shp, s.dtype)
+
+    return [jax.tree.map(one, f, s) for f, s in zip(flags, structs)]
+
+
+def supports_chunked_prefill(cfg) -> bool:
+    """Chunked prefill (prefill_chunk) covers full-causal GQA stacks;
+    windowed/MLA/SSM/hybrid layers and modality-prefix archs fall back to
+    one-shot prefill."""
+    from repro.core.layer_kinds import layer_kinds
+    kinds = layer_kinds(cfg)
+    return (not cfg.frontend_dim
+            and all(k.mixer == "gqa" and k.window == 0 for k in kinds))
+
+
+def prefill_chunk(cfg, stacked, plan, tokens, start, caches, *, tp,
+                  axis=MODEL_AXIS, lengths=None, q_chunk=1024):
+    """One chunk of incremental prefill (see supports_chunked_prefill).
+
+    tokens (B,C) at absolute positions [start, start+C); caches in
+    decode_step layout, sequence axes sized to the full decode buffer.
+    Returns (logits (B,Vl) fp32 shard-local taken at position
+    clip(lengths-1-start, 0, C-1) within the chunk — meaningful only for
+    the chunk containing lengths-1 — and the updated caches)."""
+    shard_idx = jax.lax.axis_index(axis)
+    lay = _gqa_layout_or_none(cfg, tp)
+    b, c = tokens.shape
+    pos = jnp.broadcast_to(start + jnp.arange(c)[None], (b, c))
+    x = embed_tokens(stacked["emb"], tokens, axis, shard_idx)
+    if cfg.pos_emb == "learned":
+        x = x + jnp.take(stacked["pos"], pos[0], axis=0)[None]
+    segs = plan_segments(cfg, plan.drop_mask)
+    new_caches = []
+    for seg_i, (s0, length, kind, dropped) in enumerate(segs):
+        sp = stacked["segs"][seg_i]
+        cache_seg = caches[seg_i]
+
+        def body(xc, xs_i, kind=kind, dropped=dropped):
+            layer_p, cache = xs_i
+            out, nc = B.block_ext(cfg, kind, lay, layer_p, xc, pos, cache,
+                                  drop=dropped, tp=tp, shard_idx=shard_idx,
+                                  axis=axis, q_chunk=q_chunk)
+            return out, nc
+
+        with ledger_scale(length):
+            x, nc = jax.lax.scan(body, x, (sp, cache_seg))
+        new_caches.append(nc)
+    x = (layernorm(x, stacked["lnf"]["w"], stacked["lnf"]["b"], cfg.norm_eps)
+         if cfg.norm == "layernorm"
+         else rmsnorm(x, stacked["lnf"]["w"], cfg.norm_eps))
+    if lengths is None:
+        idx = jnp.full((b,), c - 1, jnp.int32)
+    else:
+        idx = jnp.clip(lengths - 1 - start, 0, c - 1).astype(jnp.int32)
+    xq = jnp.take_along_axis(x, idx[:, None, None].repeat(x.shape[-1], -1),
+                             axis=1)
+    logits = lm_logits(stacked, cfg, xq, axis)[:, 0]
+    return logits, new_caches
+
+
 def cache_specs_tree(cfg, plan: SPDPlanConfig, tp: int = 0):
     """Split-axis ints for each cache leaf (REPLICATED for MLA latent)."""
     segs = plan_segments(cfg, plan.drop_mask)

@@ -69,6 +69,69 @@ def fused_residual_rmsnorm(x, r, w, *, eps=1e-5, block_rows=256,
     return y[:t].reshape(shape), s[:t].reshape(shape)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV-cache gather/scatter (runtime/paging.py holds the allocator,
+# runtime/engines.py the wiring).  Layout contract for every paged leaf:
+#     pool  (layer, num_pages + 1, page_size, *tail)
+#     dense (layer, batch,         n * page_size, *tail)
+# where page index num_pages is the TRASH page absorbing reads/writes for
+# unallocated (-1) page-table entries.  Pure jnp on the non-head axes, so
+# the same code runs under SimEngine's vmap and inside shard_map with the
+# head tail axes sharded.  (A fused Pallas paged-attention kernel that
+# skips the contiguous materialization is the natural next step; this
+# gather-based form is the XLA-level reference it would have to match.)
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pool, page_table):
+    """pool (L, P+1, ps, *t); page_table (B, n) int32, -1 = unallocated.
+
+    Returns the contiguous per-slot view (L, B, n*ps, *t).  Entries read
+    through -1 come from the trash page; callers rely on decode position
+    masking (`kv slot <= pos`) to hide them.
+    """
+    pn = pool.shape[1] - 1
+    ps = pool.shape[2]
+    b, n = page_table.shape
+    pt = jnp.where(page_table < 0, pn, page_table)
+    g = jnp.take(pool, pt.reshape(-1), axis=1)          # (L, B*n, ps, *t)
+    return g.reshape(pool.shape[:1] + (b, n * ps) + pool.shape[3:])
+
+
+def scatter_token_page(pool, dense, page_table, pos):
+    """Write back the ONE token decode just produced per slot.
+
+    dense (L, B, n*ps, *t) is the post-update contiguous view; the entry
+    at sequence index pos[b] is the token written this step.  It lands in
+    physical page page_table[b, pos[b]//ps] at offset pos[b]%ps; slots
+    with no page mapped (-1) write to the trash page.
+    """
+    pn = pool.shape[1] - 1
+    ps = pool.shape[2]
+    b = page_table.shape[0]
+    phys = jnp.take_along_axis(page_table, (pos // ps)[:, None], 1)[:, 0]
+    phys = jnp.where(phys < 0, pn, phys)
+    tok = dense[:, jnp.arange(b), pos]                  # (L, B, *t)
+    return pool.at[:, phys, pos % ps].set(tok)
+
+
+def scatter_prefill_pages(pool, dense1, page_row):
+    """Insert one request's prefill cache into its allocated pages.
+
+    dense1 (L, 1, S, *t) with S == len(page_row) * ps (the per-slot
+    maximum); page_row (pages_per_slot,) int32.  Pages the slot did not
+    allocate (-1) scatter into the trash page, so the right-padded tail of
+    the prefill cache never touches live pages.
+    """
+    pn = pool.shape[1] - 1
+    ps = pool.shape[2]
+    d = dense1[:, 0]                                     # (L, S, *t)
+    n = d.shape[1] // ps
+    d = d.reshape(d.shape[:1] + (n, ps) + d.shape[2:])   # (L, n, ps, *t)
+    phys = jnp.where(page_row[:n] < 0, pn, page_row[:n])
+    return pool.at[:, phys].set(d)
+
+
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, a, bm, cm, dd, *, chunk=128, interpret=False):
     """Batched heads: x (B,S,H,P), dt (B,S,H), a (H,), bm/cm (B,S,G,N)

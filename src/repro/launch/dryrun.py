@@ -179,6 +179,8 @@ def run_cell(arch, shape_name, mesh_kind, spd,
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):        # JAX 0.4.x: one dict per
+        cost = cost[0] if cost else {}         # partition; newer: a dict
     hlo = compiled.as_text()
 
     led = {}

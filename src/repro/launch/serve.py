@@ -1,7 +1,15 @@
 """Serving driver: batched prefill+decode with continuous batching.
 
+Dense (fixed per-slot caches):
 ``python -m repro.launch.serve --arch smollm-360m-reduced --tp 2 --dp 2
 --requests 8 --spd 0.5``
+
+Paged KV cache (block-pool allocator + page-table scheduler, see
+docs/serving.md): add ``--page-size 16 --num-pages 48`` — admission is
+then limited by free pages instead of slots, and pool exhaustion
+preempts and requeues the latest-admitted request.  ``--prefill-chunk C``
+switches prompt prefill to fixed-size chunks (one compilation instead of
+one per power-of-two bucket).
 """
 import argparse
 import json
@@ -21,6 +29,15 @@ def main():
     ap.add_argument("--engine", choices=["sim", "shard"], default="shard")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page; with --num-pages selects "
+                         "the paged server (0 = dense)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="pages in the shared pool; small values force "
+                         "preemption-by-eviction")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size (paged server only; 0 = "
+                         "power-of-two buckets)")
     args = ap.parse_args()
 
     n_dev = args.tp * args.dp
@@ -36,7 +53,7 @@ def main():
     from repro.launch.mesh import make_test_mesh
     from repro.parallel import tp as TP
     from repro.runtime.engines import ShardEngine, SimEngine
-    from repro.runtime.server import Request, Server
+    from repro.runtime.server import PagedServer, Request, Server
 
     cfg = replace(get_config(args.arch), dtype=args.dtype)
     k = int(round(cfg.n_layers * args.spd)) if cfg.spd_applicable else 0
@@ -55,8 +72,15 @@ def main():
         gp = jax.device_put(stacked, TP.named(
             mesh, TP.param_pspecs(cfg, plan)))
 
-    server = Server(engine, gp, max_batch=args.max_batch,
-                    cache_len=args.cache_len)
+    paged = args.page_size > 0 and args.num_pages > 0
+    if paged:
+        server = PagedServer(
+            engine, gp, max_slots=args.max_batch, cache_len=args.cache_len,
+            page_size=args.page_size, num_pages=args.num_pages,
+            prefill_chunk=args.prefill_chunk or None)
+    else:
+        server = Server(engine, gp, max_batch=args.max_batch,
+                        cache_len=args.cache_len)
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         plen = int(rng.integers(4, 24))
@@ -65,10 +89,16 @@ def main():
             prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
             max_new=args.max_new))
     done = server.run()
-    print(json.dumps({
+    out = {
         "completed": len(done),
         "outputs": {uid: r.out[:8] for uid, r in sorted(done.items())},
-    }))
+    }
+    if paged:
+        out["paged"] = {"page_size": args.page_size,
+                        "num_pages": args.num_pages,
+                        "preemptions": server.n_preemptions,
+                        "free_pages": server.pool.num_free}
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

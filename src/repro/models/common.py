@@ -71,5 +71,9 @@ def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
 
 
 def fold_path(key, path: str):
-    h = np.uint32(abs(hash(path)) % (2 ** 31))
+    # zlib.crc32, not builtin hash(): the latter is randomized per process
+    # (PYTHONHASHSEED), which made same-seed runs non-reproducible across
+    # invocations.
+    import zlib
+    h = np.uint32(zlib.crc32(path.encode()) % (2 ** 31))
     return jax.random.fold_in(key, h)

@@ -218,7 +218,7 @@ def _sync_q8(x, axis, chunk=128):
     out = _qdq(s, chunk, levels)
     _LEDGER.active is not None and _LEDGER.active.append(
         ("all-gather", axis if isinstance(axis, str) else "+".join(axis),
-         int((nbytes_q + nscale) // jax.lax.axis_size(axis) * _LEDGER.scale)))
+         int((nbytes_q + nscale) // axis_size(axis) * _LEDGER.scale)))
     return out.reshape(shape).astype(dtype)
 
 
@@ -267,4 +267,8 @@ def ppermute(x, axis, perm):
 
 
 def axis_size(axis=MODEL_AXIS) -> int:
-    return jax.lax.axis_size(axis)
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    # JAX 0.4.x: no jax.lax.axis_size; a psum of ones is the same value
+    # (constant-folded, no collective emitted for the ledger).
+    return jax.lax.psum(1, axis)

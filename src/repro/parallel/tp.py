@@ -30,8 +30,14 @@ from repro.parallel.layout import REPLICATED
 
 
 def shard_map(f, mesh, in_specs, out_specs):
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    # JAX 0.4.x: shard_map lives in jax.experimental and the replication
+    # checker kwarg is check_rep rather than check_vma.
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -274,8 +280,26 @@ def build_prefill(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh, *,
                              out_specs=out_specs))
 
 
+def _greedy_sample(cfg, logits):
+    """Greedy next token across vocab-parallel shard-local logits (B,Vl)."""
+    vl = logits.shape[-1]
+    shard = jax.lax.axis_index(MODEL_AXIS)
+    gcol = shard * vl + jnp.arange(vl)
+    masked = jnp.where(gcol[None] < cfg.vocab_size, logits, -jnp.inf)
+    mx = jnp.max(masked, -1)
+    gmx = jax.lax.pmax(mx, MODEL_AXIS)
+    lidx = jnp.argmax(masked, -1) + shard * vl
+    cand = jnp.where(mx >= gmx, lidx, cfg.vocab_size + 1)
+    return jax.lax.pmin(cand, MODEL_AXIS).astype(jnp.int32)
+
+
+def _full_logits(cfg, logits):
+    full = jax.lax.all_gather(logits, MODEL_AXIS, axis=1, tiled=True)
+    return full[:, : cfg.vocab_size]
+
+
 def build_decode_step(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh,
-                      shard_batch: bool = True):
+                      shard_batch: bool = True, with_logits: bool = False):
     tp = mesh.shape[MODEL_AXIS]
     dpx = dp_axes(mesh) if shard_batch else ()
     p_specs = param_pspecs(cfg, plan)
@@ -284,19 +308,69 @@ def build_decode_step(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh,
     def decode_local(params, tokens, pos, caches):
         logits, new_caches = M.decode_step(cfg, params, plan, tokens, pos,
                                            caches, tp=tp)
-        # greedy sample across the vocab-parallel logits
-        vl = logits.shape[-1]
-        shard = jax.lax.axis_index(MODEL_AXIS)
-        gcol = shard * vl + jnp.arange(vl)
-        masked = jnp.where(gcol[None] < cfg.vocab_size, logits, -jnp.inf)
-        mx = jnp.max(masked, -1)
-        gmx = jax.lax.pmax(mx, MODEL_AXIS)
-        lidx = jnp.argmax(masked, -1) + shard * vl
-        cand = jnp.where(mx >= gmx, lidx, cfg.vocab_size + 1)
-        nxt = jax.lax.pmin(cand, MODEL_AXIS).astype(jnp.int32)
+        nxt = _greedy_sample(cfg, logits)
+        if with_logits:
+            return nxt[:, None], _full_logits(cfg, logits), new_caches
         return nxt[:, None], new_caches
 
     in_specs = (p_specs, P(dpx), P(dpx), c_specs)
-    out_specs = (P(dpx), c_specs)
+    out_specs = ((P(dpx), P(dpx), c_specs) if with_logits
+                 else (P(dpx), c_specs))
     return jax.jit(shard_map(decode_local, mesh, in_specs=in_specs,
                              out_specs=out_specs), donate_argnums=(3,))
+
+
+def build_paged_decode_step(cfg: ModelConfig, plan: SPDPlanConfig,
+                            mesh: Mesh, with_logits: bool = False):
+    """Paged decode: gather each slot's pages into a contiguous view,
+    run the dense decode math, scatter the newly written token back into
+    its page (kernels/ops.py).  The pool's page axis is replicated over
+    the DP axes (any slot may map to any page), so the paged decode runs
+    the batch replicated across DP; the model axis sharding is unchanged —
+    SPD-dropped blocks keep their divergent per-shard caches because the
+    page axis simply replaces the (batch, seq) axes inside each shard's
+    local leaf."""
+    tp = mesh.shape[MODEL_AXIS]
+    p_specs = param_pspecs(cfg, plan)
+    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch=False)
+    flags = M.cache_pageable_tree(cfg, plan)
+    from repro.kernels import ops as KOPS
+
+    def decode_local(params, tokens, pos, page_table, pcaches):
+        dense = jax.tree.map(
+            lambda f, c: KOPS.gather_pages(c, page_table) if f else c,
+            flags, pcaches)
+        logits, new_dense = M.decode_step(cfg, params, plan, tokens, pos,
+                                          dense, tp=tp)
+        new_pcaches = jax.tree.map(
+            lambda f, c, nd: (KOPS.scatter_token_page(c, nd, page_table, pos)
+                              if f else nd),
+            flags, pcaches, new_dense)
+        nxt = _greedy_sample(cfg, logits)
+        if with_logits:
+            return nxt[:, None], _full_logits(cfg, logits), new_pcaches
+        return nxt[:, None], new_pcaches
+
+    in_specs = (p_specs, P(), P(), P(), c_specs)
+    out_specs = ((P(), P(), c_specs) if with_logits else (P(), c_specs))
+    return jax.jit(shard_map(decode_local, mesh, in_specs=in_specs,
+                             out_specs=out_specs), donate_argnums=(4,))
+
+
+def build_prefill_chunk_step(cfg: ModelConfig, plan: SPDPlanConfig,
+                             mesh: Mesh, *, q_chunk: int = 2048):
+    """One chunked-prefill step (M.prefill_chunk) under shard_map; batch
+    axis replicated (per-request admission uses batch 1)."""
+    tp = mesh.shape[MODEL_AXIS]
+    p_specs = param_pspecs(cfg, plan)
+    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch=False)
+
+    def chunk_local(params, tokens, start, lengths, caches):
+        lg, ncs = M.prefill_chunk(cfg, params, plan, tokens, start, caches,
+                                  tp=tp, lengths=lengths, q_chunk=q_chunk)
+        return _full_logits(cfg, lg), ncs
+
+    in_specs = (p_specs, P(), P(), P(), c_specs)
+    out_specs = (P(), c_specs)
+    return jax.jit(shard_map(chunk_local, mesh, in_specs=in_specs,
+                             out_specs=out_specs), donate_argnums=(4,))

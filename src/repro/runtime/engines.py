@@ -5,12 +5,23 @@ ShardEngine — shard_map over a real device mesh (the production path).
 
 Both keep caches in their engine-native layout between calls and expose:
     prefill(params, tokens, *, cache_len, lengths) -> (full logits, caches1)
+    prefill_chunked(...)  — incremental prefill in fixed-size chunks
     decode(params, tokens, pos, caches) -> (next_tokens (B,1), caches)
     blank_caches(batch, cache_len), insert_slot(caches, caches1, b)
+and the paged-cache variants consumed by runtime.server.PagedServer
+(design: docs/serving.md; allocator: runtime/paging.py):
+    blank_paged_caches(max_slots, cache_len, *, page_size, num_pages)
+    insert_paged(pcaches, caches1, b, page_row)
+    decode_paged(params, tokens, pos, page_table, pcaches)
+
+Paged layout: pageable leaves (core.model.cache_pageable_tree) swap their
+(batch, seq) axes for (num_pages + 1, page_size) — page num_pages is the
+trash page — while SSM state / conv / windowed-KV leaves stay dense
+per-slot.  The swap happens INSIDE each TP shard's local leaf, so the
+split (tp, layer, ...) layout is untouched and SPD-dropped blocks keep
+their divergent per-shard caches.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -18,10 +29,16 @@ import numpy as np
 
 from repro.config.base import ModelConfig, SPDPlanConfig
 from repro.core import model as M
-from repro.core import simtp
+from repro.kernels import ops as KOPS
 from repro.parallel import tp as TP
 from repro.parallel.collectives import MODEL_AXIS
-from repro.parallel.layout import REPLICATED, split_leaf
+from repro.parallel.layout import REPLICATED
+
+
+def _map_paged(flags, fn_paged, fn_dense, *trees):
+    """tree.map over cache trees, dispatching on the pageable-flag tree."""
+    return jax.tree.map(
+        lambda f, *ls: fn_paged(*ls) if f else fn_dense(*ls), flags, *trees)
 
 
 class SimEngine:
@@ -29,16 +46,17 @@ class SimEngine:
                  q_chunk: int = 1024):
         self.cfg, self.plan, self.tp, self.q_chunk = cfg, plan, tp, q_chunk
         self._prefill_c = {}
-        self._decode = None
+        self._chunk_c = {}
+        self._decode_c = {}
+        self._decode_paged_c = {}
+        self._insert_paged = None
 
     # ---- cache layout: split form, leading (tp, ...) axis per leaf ----
 
     def _cache_ints(self):
         return M.cache_specs_tree(self.cfg, self.plan)
 
-    def blank_caches(self, batch: int, cache_len: int):
-        structs = M.cache_struct(self.cfg, self.plan, batch, cache_len,
-                                 self.tp)
+    def _split_blank(self, structs):
         ints = self._cache_ints()
 
         def one(s, a):
@@ -50,10 +68,35 @@ class SimEngine:
 
         return [jax.tree.map(one, s, i) for s, i in zip(structs, ints)]
 
+    def blank_caches(self, batch: int, cache_len: int):
+        return self._split_blank(M.cache_struct(self.cfg, self.plan, batch,
+                                                cache_len, self.tp))
+
+    def blank_paged_caches(self, max_slots: int, cache_len: int, *,
+                           page_size: int, num_pages: int):
+        return self._split_blank(M.paged_cache_struct(
+            self.cfg, self.plan, max_slots, cache_len, self.tp,
+            page_size=page_size, num_pages=num_pages))
+
     def insert_slot(self, caches, caches1, b: int):
         # batch axis is 2 in split form (tp, layer, batch, ...)
         return jax.tree.map(lambda c, c1: c.at[:, :, b].set(c1[:, :, 0]),
                             caches, caches1)
+
+    def insert_paged(self, pcaches, caches1, b: int, page_row):
+        if self._insert_paged is None:
+            flags = M.cache_pageable_tree(self.cfg, self.plan)
+
+            def fn(pc, c1, bb, row):
+                return _map_paged(
+                    flags,
+                    lambda p, c: jax.vmap(KOPS.scatter_prefill_pages,
+                                          in_axes=(0, 0, None))(p, c, row),
+                    lambda p, c: p.at[:, :, bb].set(c[:, :, 0]),
+                    pc, c1)
+            self._insert_paged = jax.jit(fn)
+        return self._insert_paged(pcaches, caches1, jnp.int32(b),
+                                  jnp.asarray(page_row, jnp.int32))
 
     # ---- compiled paths ----
 
@@ -77,23 +120,127 @@ class SimEngine:
             self._prefill_c[key] = jax.jit(fn)
         return self._prefill_c[key](params, tokens, lengths, embeds)
 
-    def decode(self, params, tokens, pos, caches):
-        if self._decode is None:
+    def prefill_chunked(self, params, tokens, *, cache_len: int, lengths,
+                        chunk: int):
+        """Incremental prefill in fixed-size chunks.
+
+        Compilation is keyed on (chunk, cache_len) only, so prompt-length
+        variation costs zero recompiles (vs per-bucket specialization at
+        power-of-two lengths).  tokens (B, S) right-padded; lengths (B,)
+        real lengths — chunks past max(lengths) are skipped.  Falls back
+        to one-shot prefill for archs without chunked support."""
+        if not M.supports_chunked_prefill(self.cfg):
+            return self.prefill(params, tokens, cache_len=cache_len,
+                                lengths=jnp.asarray(lengths, jnp.int32))
+        key = (int(chunk), cache_len)
+        if key not in self._chunk_c:
+            cfg, plan, tp, qc = self.cfg, self.plan, self.tp, self.q_chunk
+
+            def per_shard(p, toks, st, ln, cs):
+                return M.prefill_chunk(cfg, p, plan, toks, st, cs, tp=tp,
+                                       lengths=ln, q_chunk=qc)
+
+            def fn(p, toks, st, ln, cs):
+                lg, ncs = jax.vmap(per_shard,
+                                   in_axes=(0, None, None, None, 0),
+                                   axis_name=MODEL_AXIS)(p, toks, st, ln, cs)
+                b = lg.shape[1]
+                full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
+                return full[:, : cfg.vocab_size], ncs
+            self._chunk_c[key] = jax.jit(fn, donate_argnums=(4,))
+        step = self._chunk_c[key]
+        lengths = np.asarray(lengths)
+        s_real = int(lengths.max())
+        n = max(1, -(-s_real // chunk))
+        toks = np.zeros((tokens.shape[0], n * chunk), np.int32)
+        m = min(tokens.shape[1], n * chunk)
+        toks[:, :m] = np.asarray(tokens)[:, :m]
+        caches = self.blank_caches(tokens.shape[0], cache_len)
+        ln = jnp.asarray(lengths, jnp.int32)
+        # each row's final-token logits come from the chunk containing its
+        # lengths-1 (rows finish in different chunks for ragged batches)
+        final_chunk = (lengths - 1) // chunk
+        logits = None
+        for i in range(n):
+            lg, caches = step(params,
+                              jnp.asarray(toks[:, i * chunk:(i + 1) * chunk]),
+                              jnp.int32(i * chunk), ln, caches)
+            if logits is None:
+                logits = np.asarray(lg).copy()
+            else:
+                sel = final_chunk == i
+                if sel.any():
+                    logits[sel] = np.asarray(lg)[sel]
+        return jnp.asarray(logits), caches
+
+    def _decode_fn(self, with_logits: bool):
+        if with_logits not in self._decode_c:
             cfg, plan, tp = self.cfg, self.plan, self.tp
 
             def per_shard(p, toks, ps, cs):
-                lg, ncs = M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
-                return lg, ncs
+                return M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
 
             def fn(p, toks, ps, cs):
                 lg, ncs = jax.vmap(per_shard, in_axes=(0, None, None, 0),
                                    axis_name=MODEL_AXIS)(p, toks, ps, cs)
                 b = lg.shape[1]
                 full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
-                nxt = jnp.argmax(full[:, : cfg.vocab_size], -1)
-                return nxt[:, None].astype(jnp.int32), ncs
-            self._decode = jax.jit(fn)
-        return self._decode(params, tokens, pos, caches)
+                full = full[:, : cfg.vocab_size]
+                nxt = jnp.argmax(full, -1)[:, None].astype(jnp.int32)
+                if with_logits:
+                    return nxt, full, ncs
+                return nxt, ncs
+            self._decode_c[with_logits] = jax.jit(fn)
+        return self._decode_c[with_logits]
+
+    def decode(self, params, tokens, pos, caches):
+        return self._decode_fn(False)(params, tokens, pos, caches)
+
+    def decode_with_logits(self, params, tokens, pos, caches):
+        return self._decode_fn(True)(params, tokens, pos, caches)
+
+    def _decode_paged_fn(self, with_logits: bool):
+        if with_logits not in self._decode_paged_c:
+            cfg, plan, tp = self.cfg, self.plan, self.tp
+            flags = M.cache_pageable_tree(cfg, plan)
+
+            def per_shard(p, toks, ps, cs):
+                return M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
+
+            def fn(p, toks, ps, pt, pc):
+                dense = _map_paged(
+                    flags,
+                    lambda c: jax.vmap(KOPS.gather_pages,
+                                       in_axes=(0, None))(c, pt),
+                    lambda c: c, pc)
+                lg, new_dense = jax.vmap(per_shard,
+                                         in_axes=(0, None, None, 0),
+                                         axis_name=MODEL_AXIS)(p, toks, ps,
+                                                               dense)
+                pc2 = _map_paged(
+                    flags,
+                    lambda c, nd: jax.vmap(KOPS.scatter_token_page,
+                                           in_axes=(0, 0, None, None))(
+                        c, nd, pt, ps),
+                    lambda c, nd: nd, pc, new_dense)
+                b = lg.shape[1]
+                full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
+                full = full[:, : cfg.vocab_size]
+                nxt = jnp.argmax(full, -1)[:, None].astype(jnp.int32)
+                if with_logits:
+                    return nxt, full, pc2
+                return nxt, pc2
+            self._decode_paged_c[with_logits] = jax.jit(fn, donate_argnums=(4,))
+        return self._decode_paged_c[with_logits]
+
+    def decode_paged(self, params, tokens, pos, page_table, pcaches):
+        return self._decode_paged_fn(False)(params, tokens, pos,
+                                            page_table, pcaches)
+
+    def decode_paged_with_logits(self, params, tokens, pos, page_table,
+                                 pcaches):
+        return self._decode_paged_fn(True)(params, tokens, pos,
+                                           page_table, pcaches)
 
 
 class ShardEngine:
@@ -103,20 +250,51 @@ class ShardEngine:
         self.tp = mesh.shape[MODEL_AXIS]
         self.q_chunk = q_chunk
         self._prefill_c = {}
-        self._decode = TP.build_decode_step(cfg, plan, mesh)
+        self._chunk_c = {}
+        self._decode_c = {}
+        self._decode_paged_c = {}
+        self._insert_paged = None
         self._c_pspecs = TP.cache_pspecs(cfg, plan, mesh)
+        self._c_pspecs_rep = TP.cache_pspecs(cfg, plan, mesh,
+                                             shard_batch=False)
 
-    def blank_caches(self, batch: int, cache_len: int):
-        structs = M.cache_struct(self.cfg, self.plan, batch, cache_len,
-                                 self.tp)
-        sh = TP.named(self.mesh, self._c_pspecs)
+    def _blank(self, structs, pspecs):
+        sh = TP.named(self.mesh, pspecs)
         return [jax.tree.map(
             lambda s, h: jax.device_put(jnp.zeros(s.shape, s.dtype), h),
             st, shh) for st, shh in zip(structs, sh)]
 
+    def blank_caches(self, batch: int, cache_len: int, replicated=False):
+        structs = M.cache_struct(self.cfg, self.plan, batch, cache_len,
+                                 self.tp)
+        return self._blank(structs, self._c_pspecs_rep if replicated
+                           else self._c_pspecs)
+
+    def blank_paged_caches(self, max_slots: int, cache_len: int, *,
+                           page_size: int, num_pages: int):
+        structs = M.paged_cache_struct(
+            self.cfg, self.plan, max_slots, cache_len, self.tp,
+            page_size=page_size, num_pages=num_pages)
+        return self._blank(structs, self._c_pspecs_rep)
+
     def insert_slot(self, caches, caches1, b: int):
         return jax.tree.map(lambda c, c1: c.at[:, b].set(c1[:, 0]),
                             caches, caches1)
+
+    def insert_paged(self, pcaches, caches1, b: int, page_row):
+        if self._insert_paged is None:
+            flags = M.cache_pageable_tree(self.cfg, self.plan)
+
+            def fn(pc, c1, bb, row):
+                return _map_paged(
+                    flags,
+                    lambda p, c: KOPS.scatter_prefill_pages(p, c, row),
+                    lambda p, c: p.at[:, bb].set(c[:, 0]),
+                    pc, c1)
+            self._insert_paged = jax.jit(
+                fn, out_shardings=TP.named(self.mesh, self._c_pspecs_rep))
+        return self._insert_paged(pcaches, caches1, jnp.int32(b),
+                                  jnp.asarray(page_row, jnp.int32))
 
     def prefill(self, params, tokens, *, cache_len: int, lengths=None,
                 embeds=None):
@@ -162,5 +340,65 @@ class ShardEngine:
             caches = jax.tree.map(lambda c: c[:, :b0], caches)
         return lg, caches
 
+    def prefill_chunked(self, params, tokens, *, cache_len: int, lengths,
+                        chunk: int):
+        """See SimEngine.prefill_chunked — same contract, shard_map'd."""
+        if not M.supports_chunked_prefill(self.cfg):
+            return self.prefill(params, tokens, cache_len=cache_len,
+                                lengths=jnp.asarray(lengths, jnp.int32))
+        key = (int(chunk), cache_len)
+        if key not in self._chunk_c:
+            self._chunk_c[key] = TP.build_prefill_chunk_step(
+                self.cfg, self.plan, self.mesh, q_chunk=self.q_chunk)
+        step = self._chunk_c[key]
+        lengths = np.asarray(lengths)
+        s_real = int(lengths.max())
+        n = max(1, -(-s_real // chunk))
+        toks = np.zeros((tokens.shape[0], n * chunk), np.int32)
+        m = min(tokens.shape[1], n * chunk)
+        toks[:, :m] = np.asarray(tokens)[:, :m]
+        caches = self.blank_caches(tokens.shape[0], cache_len,
+                                   replicated=True)
+        ln = jnp.asarray(lengths, jnp.int32)
+        # each row's final-token logits come from the chunk containing its
+        # lengths-1 (rows finish in different chunks for ragged batches)
+        final_chunk = (lengths - 1) // chunk
+        logits = None
+        for i in range(n):
+            lg, caches = step(params,
+                              jnp.asarray(toks[:, i * chunk:(i + 1) * chunk]),
+                              jnp.int32(i * chunk), ln, caches)
+            if logits is None:
+                logits = np.asarray(lg).copy()
+            else:
+                sel = final_chunk == i
+                if sel.any():
+                    logits[sel] = np.asarray(lg)[sel]
+        return jnp.asarray(logits), caches
+
+    def _decode_fn(self, with_logits: bool):
+        if with_logits not in self._decode_c:
+            self._decode_c[with_logits] = TP.build_decode_step(
+                self.cfg, self.plan, self.mesh, with_logits=with_logits)
+        return self._decode_c[with_logits]
+
     def decode(self, params, tokens, pos, caches):
-        return self._decode(params, tokens, pos, caches)
+        return self._decode_fn(False)(params, tokens, pos, caches)
+
+    def decode_with_logits(self, params, tokens, pos, caches):
+        return self._decode_fn(True)(params, tokens, pos, caches)
+
+    def _decode_paged_fn(self, with_logits: bool):
+        if with_logits not in self._decode_paged_c:
+            self._decode_paged_c[with_logits] = TP.build_paged_decode_step(
+                self.cfg, self.plan, self.mesh, with_logits=with_logits)
+        return self._decode_paged_c[with_logits]
+
+    def decode_paged(self, params, tokens, pos, page_table, pcaches):
+        return self._decode_paged_fn(False)(params, tokens, pos,
+                                            page_table, pcaches)
+
+    def decode_paged_with_logits(self, params, tokens, pos, page_table,
+                                 pcaches):
+        return self._decode_paged_fn(True)(params, tokens, pos,
+                                           page_table, pcaches)

@@ -1,0 +1,139 @@
+"""Paged KV-cache: a block-pool allocator with per-slot page tables.
+
+Dense serving pre-allocates one `(max_batch, cache_len)` KV buffer per
+cache leaf, so HBM scales with the WORST-CASE batch geometry.  Paging
+(vLLM-style) replaces the per-slot `(batch, seq)` axes with a shared pool
+of fixed-size pages `(num_pages + 1, page_size)` plus a host-side page
+table mapping each slot's logical page index to a physical page.  Memory
+then scales with tokens actually resident, and the scheduler admits work
+against free PAGES instead of free SLOTS.
+
+Layout contract (kept consistent with the split `(tp, layer, ...)` cache
+layout so SPD-dropped blocks keep their divergent per-shard caches):
+
+    dense leaf   (layer, batch,     seq,       *tail)   # shard-logical
+    paged pool   (layer, pages + 1, page_size, *tail)
+
+The extra physical page at index `num_pages` is the TRASH page: gathers
+for unallocated table entries (-1) read it and decode masking hides the
+garbage; scatters for inactive slots land in it harmlessly.  Only leaves
+with a full-length sequence axis are paged (GQA/hybrid K/V and their int8
+scales, MLA latents); rolling-window KV, SSM state, and conv tails stay
+dense per-slot — see `core.model.cache_pageable_tree`.
+
+`PagePool` here is pure host-side numpy bookkeeping (free list + page
+table + per-slot token counts); the device-side gather/scatter companions
+live in `kernels.ops` and the engine wiring in `runtime.engines`.  The
+scheduler that drives it (admission by free pages, preemption-by-eviction)
+is `runtime.server.PagedServer` — see docs/serving.md for the full design.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold n_tokens cache entries."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+@dataclass
+class PagePool:
+    """Fixed-size page allocator with a per-slot page table.
+
+    Invariants (asserted by `check`):
+      * every physical page is either on the free list or owned by exactly
+        one slot;
+      * a slot's table row is a prefix of valid pages followed by -1s;
+      * `len(free) + sum(owned) == num_pages`.
+    """
+    num_pages: int
+    page_size: int
+    max_slots: int
+    pages_per_slot: int
+
+    def __post_init__(self):
+        assert self.num_pages > 0 and self.page_size > 0
+        self.table = np.full((self.max_slots, self.pages_per_slot), -1,
+                             np.int32)
+        self.owned = np.zeros(self.max_slots, np.int64)   # pages per slot
+        # LIFO free list: recently released pages are re-used first.
+        self.free: List[int] = list(range(self.num_pages - 1, -1, -1))
+
+    # ---------------- queries ----------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def trash_page(self) -> int:
+        """Physical index of the garbage page in device pool arrays."""
+        return self.num_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.page_size)
+
+    def can_grow(self, slot: int, n_tokens: int) -> bool:
+        need = self.pages_for(n_tokens) - int(self.owned[slot])
+        return need <= len(self.free)
+
+    def fits_alone(self, n_tokens: int) -> bool:
+        """Whether a request of n_tokens could ever run (even with the
+        whole pool to itself)."""
+        need = self.pages_for(n_tokens)
+        return need <= min(self.num_pages, self.pages_per_slot)
+
+    # ---------------- mutation ----------------
+
+    def grow(self, slot: int, n_tokens: int) -> bool:
+        """Grow `slot`'s allocation to cover n_tokens cache positions.
+
+        All-or-nothing: returns False (allocating nothing) when the free
+        list cannot supply every page needed."""
+        target = self.pages_for(n_tokens)
+        if target > self.pages_per_slot:
+            return False
+        have = int(self.owned[slot])
+        need = target - have
+        if need <= 0:
+            return True
+        if need > len(self.free):
+            return False
+        for i in range(have, target):
+            self.table[slot, i] = self.free.pop()
+        self.owned[slot] = target
+        return True
+
+    def release(self, slot: int) -> int:
+        """Free every page owned by `slot`; returns the count released."""
+        n = int(self.owned[slot])
+        for i in range(n):
+            self.free.append(int(self.table[slot, i]))
+        self.table[slot, :] = -1
+        self.owned[slot] = 0
+        return n
+
+    def reset(self):
+        for s in range(self.max_slots):
+            self.release(s)
+
+    # ---------------- invariants ----------------
+
+    def check(self):
+        seen = set(self.free)
+        assert len(seen) == len(self.free), "free list has duplicates"
+        for s in range(self.max_slots):
+            n = int(self.owned[s])
+            row = self.table[s]
+            assert (row[:n] >= 0).all() and (row[n:] == -1).all(), \
+                (s, row, n)
+            for p in row[:n]:
+                p = int(p)
+                assert 0 <= p < self.num_pages, (s, p)
+                assert p not in seen, f"page {p} double-owned"
+                seen.add(p)
+        assert len(seen) == self.num_pages, (len(seen), self.num_pages)

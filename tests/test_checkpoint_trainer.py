@@ -85,9 +85,12 @@ def _mk_trainer(tmp_path, fault_hook=None, steps=12):
 
 
 def test_training_descends(tmp_path):
-    tr, params = _mk_trainer(tmp_path, steps=12)
+    # 32 steps: at lr=1e-3 on a 4x32 synthetic batch the loss can hover
+    # for the first dozen steps (init is deterministic since the CRC
+    # fold_path — this is a fixed draw, not a distribution)
+    tr, params = _mk_trainer(tmp_path, steps=32)
     state = tr.run(tr.init_state(params))
-    assert state["step"] == 12
+    assert state["step"] == 32
     losses = [m["loss"] for m in tr.metrics_log]
     assert losses[-1] < losses[0]
 

@@ -1,0 +1,245 @@
+"""Paged KV-cache runtime: allocator invariants, paged-vs-dense decode
+equivalence on both engines, chunked prefill, and a preemption soak."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_cfg
+from repro.config.base import SPDPlanConfig
+from repro.core import model as M, simtp
+from repro.launch.mesh import make_test_mesh
+from repro.parallel import tp as TP
+from repro.runtime.engines import ShardEngine, SimEngine
+from repro.runtime.paging import PagePool
+from repro.runtime.server import PagedServer, Request, Server
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_invariants():
+    pool = PagePool(num_pages=8, page_size=4, max_slots=3, pages_per_slot=4)
+    pool.check()
+    assert pool.pages_for(0) == 0 and pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1 and pool.pages_for(5) == 2
+    assert pool.grow(0, 9)            # 3 pages
+    assert pool.num_free == 5
+    assert pool.grow(0, 9)            # idempotent
+    assert pool.num_free == 5
+    assert pool.grow(1, 16)           # 4 pages
+    pool.check()
+    assert pool.num_free == 1
+    assert not pool.grow(2, 8)        # needs 2, only 1 free: all-or-nothing
+    assert pool.num_free == 1 and pool.owned[2] == 0
+    pool.check()
+    assert pool.release(1) == 4
+    assert pool.grow(2, 8)
+    pool.check()
+    # per-slot cap: pages_per_slot bounds growth even with free pages
+    assert not pool.grow(2, 17)
+    pool.reset()
+    pool.check()
+    assert pool.num_free == 8
+
+
+def test_pool_fits_alone():
+    pool = PagePool(num_pages=4, page_size=8, max_slots=2, pages_per_slot=8)
+    assert pool.fits_alone(32)
+    assert not pool.fits_alone(33)    # 5 pages > pool
+    pool2 = PagePool(num_pages=16, page_size=8, max_slots=2,
+                     pages_per_slot=2)
+    assert not pool2.fits_alone(17)   # 3 pages > per-slot table width
+
+
+# ---------------------------------------------------------------------------
+# Paged == dense decode (logits allclose), both engines
+# ---------------------------------------------------------------------------
+
+CACHE, PS, NPG = 64, 16, 10
+
+
+def _prompts(cfg, lens=(12, 5, 27), seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def _drive_equiv(engine, params, cfg, n_slots, steps=3):
+    """Prefill 3 prompts into dense + paged caches, then co-decode and
+    compare next tokens and full logits each step."""
+    prompts = _prompts(cfg)
+    dense = engine.blank_caches(n_slots, CACHE)
+    pool = PagePool(num_pages=NPG, page_size=PS, max_slots=n_slots,
+                    pages_per_slot=CACHE // PS)
+    pc = engine.blank_paged_caches(n_slots, CACHE, page_size=PS,
+                                   num_pages=NPG)
+    pos = np.zeros(n_slots, np.int32)
+    cur = np.zeros((n_slots, 1), np.int32)
+    for b, p in enumerate(prompts):
+        s = len(p)
+        toks = np.zeros((1, 32), np.int32)
+        toks[0, :s] = p
+        lg, c1 = engine.prefill(params, jnp.asarray(toks), cache_len=CACHE,
+                                lengths=jnp.asarray([s], jnp.int32))
+        dense = engine.insert_slot(dense, c1, b)
+        assert pool.grow(b, s + 1)
+        pc = engine.insert_paged(pc, c1, b, pool.table[b])
+        pos[b] = s
+        cur[b, 0] = int(np.argmax(np.asarray(lg)[0]))
+    nb = len(prompts)
+    for _ in range(steps):
+        for b in range(nb):
+            assert pool.grow(b, int(pos[b]) + 1)
+        n1, l1, dense = engine.decode_with_logits(
+            params, jnp.asarray(cur), jnp.asarray(pos), dense)
+        n2, l2, pc = engine.decode_paged_with_logits(
+            params, jnp.asarray(cur), jnp.asarray(pos),
+            jnp.asarray(pool.table), pc)
+        np.testing.assert_array_equal(np.asarray(n1)[:nb],
+                                      np.asarray(n2)[:nb])
+        np.testing.assert_allclose(np.asarray(l1)[:nb], np.asarray(l2)[:nb],
+                                   atol=2e-4, rtol=2e-4)
+        pos[:nb] += 1
+        cur = np.asarray(n1)
+    pool.check()
+
+
+@pytest.mark.parametrize("spd", [0, 2])
+def test_paged_equals_dense_sim(spd):
+    cfg = make_cfg("smollm-360m")
+    plan = SPDPlanConfig.first_k(cfg.n_layers, spd)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    tp = 2
+    split = simtp.prepare_params(params, cfg, plan, tp)
+    eng = SimEngine(cfg, plan, tp, q_chunk=64)
+    _drive_equiv(eng, split, cfg, n_slots=4)
+
+
+def test_paged_equals_dense_shard():
+    cfg = make_cfg("smollm-360m")
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    tp = 2
+    mesh = make_test_mesh(2, tp)
+    eng = ShardEngine(cfg, plan, mesh, q_chunk=64)
+    stacked = jax.tree.map(
+        jnp.array, M.stack_segments(M.pad_model(params, cfg, tp), cfg, plan))
+    gp = jax.device_put(stacked, TP.named(mesh, TP.param_pspecs(cfg, plan)))
+    _drive_equiv(eng, gp, cfg, n_slots=4)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill == one-shot prefill
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_matches_full():
+    cfg = make_cfg("smollm-360m")
+    assert M.supports_chunked_prefill(cfg)
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    tp = 2
+    split = simtp.prepare_params(params, cfg, plan, tp)
+    eng = SimEngine(cfg, plan, tp, q_chunk=64)
+    rng = np.random.default_rng(7)
+    for s in (5, 8, 27):              # below/at/above chunk multiples
+        p = rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+        toks = np.zeros((1, 32), np.int32)
+        toks[0, :s] = p
+        lg_full, _ = eng.prefill(split, jnp.asarray(toks), cache_len=CACHE,
+                                 lengths=jnp.asarray([s], jnp.int32))
+        lg_chunk, _ = eng.prefill_chunked(
+            split, jnp.asarray(toks[:, :s]), cache_len=CACHE,
+            lengths=np.asarray([s]), chunk=8)
+        np.testing.assert_allclose(np.asarray(lg_full), np.asarray(lg_chunk),
+                                   atol=2e-4, rtol=2e-4)
+    # one compilation covers all prompt lengths
+    assert len(eng._chunk_c) == 1
+    # ragged batch: rows finish in different chunks; each row's logits
+    # must come from the chunk containing ITS final token
+    lens = np.asarray([5, 27])
+    toks = np.zeros((2, 32), np.int32)
+    for r, s in enumerate(lens):
+        toks[r, :s] = rng.integers(0, cfg.vocab_size, s)
+    lg_full, _ = eng.prefill(split, jnp.asarray(toks), cache_len=CACHE,
+                             lengths=jnp.asarray(lens, jnp.int32))
+    lg_chunk, _ = eng.prefill_chunked(split, jnp.asarray(toks),
+                                      cache_len=CACHE, lengths=lens, chunk=8)
+    np.testing.assert_allclose(np.asarray(lg_full), np.asarray(lg_chunk),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_chunked_prefill_unsupported_falls_back():
+    cfg = make_cfg("mamba2-370m")     # ssm: no chunked path
+    assert not M.supports_chunked_prefill(cfg)
+    plan = SPDPlanConfig.none(cfg.n_layers)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    eng = SimEngine(cfg, plan, 2, q_chunk=64)
+    split = simtp.prepare_params(params, cfg, plan, 2)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (1, 12)).astype(np.int32)
+    lg, _ = eng.prefill_chunked(split, jnp.asarray(toks), cache_len=32,
+                                lengths=np.asarray([12]), chunk=8)
+    lg2, _ = eng.prefill(split, jnp.asarray(toks), cache_len=32,
+                         lengths=jnp.asarray([12], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg2))
+
+
+# ---------------------------------------------------------------------------
+# PagedServer: soak under pool pressure, preemption, dense equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = make_cfg("smollm-360m")
+    tp = 2
+    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    split = simtp.prepare_params(params, cfg, plan, tp)
+    eng = SimEngine(cfg, plan, tp, q_chunk=64)
+    return cfg, split, eng
+
+
+def _reqs(cfg, n=6, seed=1, max_new=6):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=uid,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        4 + 5 * uid).astype(np.int32),
+                    max_new=max_new) for uid in range(n)]
+
+
+def test_paged_server_soak_with_preemption(served):
+    """Demand (6 requests, up to 35 tokens each) far exceeds the pool
+    (6 pages x 8 tokens): every request must still complete, via
+    preemption-by-eviction, and match the dense server's outputs."""
+    cfg, split, eng = served
+    srv = PagedServer(eng, split, max_slots=4, cache_len=64, page_size=8,
+                      num_pages=6, prefill_chunk=8)
+    for r in _reqs(cfg):
+        srv.submit(r)
+    done = srv.run()
+    srv.pool.check()
+    assert len(done) == 6
+    assert all(len(r.out) == 6 for r in done.values())
+    assert srv.n_preemptions > 0          # the pool really was exhausted
+    assert srv.pool.num_free == srv.pool.num_pages   # all pages returned
+
+    ref = Server(eng, split, max_batch=2, cache_len=64)
+    for r in _reqs(cfg):
+        ref.submit(r)
+    ref_done = ref.run()
+    for uid in done:
+        assert done[uid].out == ref_done[uid].out, uid
+
+
+def test_paged_server_rejects_oversized(served):
+    cfg, split, eng = served
+    srv = PagedServer(eng, split, max_slots=2, cache_len=64, page_size=8,
+                      num_pages=4)                  # 32-token pool
+    with pytest.raises(ValueError):
+        srv.submit(Request(uid=0,
+                           prompt=np.zeros(30, np.int32), max_new=8))

@@ -95,7 +95,15 @@ def test_head_grouping_permutation_preserves_tp(trained):
     assert sorted(u for g_ in res.groups for u in g_) == \
         list(range(cfg.n_kv_heads))
     assert sorted(res.assignment) == list(range(tp))
+    # with 2 kv groups over tp=2 the optimizer may legitimately pick the
+    # identity assignment (no movement) — the invariance property below
+    # needs an actual permutation, so force the swapped assignment then
     permuted = G.apply_grouping(lp, cfg, res, tp)
+    if all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+           zip(jax.tree.leaves(lp), jax.tree.leaves(permuted))):
+        res = G.GroupingResult(True, res.groups,
+                               list(reversed(res.assignment)), res.score)
+        permuted = G.apply_grouping(lp, cfg, res, tp)
 
     from repro.core.blocks import layer_specs, pad_layer
     def run(layer, drop):
