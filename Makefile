@@ -2,19 +2,25 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke
+.PHONY: test lint bench-smoke example-smoke
 
 test:
 	$(PY) -m pytest -x -q
 
 lint:
-	$(PY) -m compileall -q src benchmarks examples tests
+	$(PY) -m compileall -q src benchmarks examples tests scripts
 	$(PY) scripts/lint.py
 
-# fast end-to-end sanity: quickstart + paged serving + serving benchmark
+# fast end-to-end sanity: paged serving + serving benchmark (the
+# quickstart example runs under example-smoke)
 bench-smoke:
-	$(PY) examples/quickstart.py
 	$(PY) -m repro.launch.serve --arch smollm-360m-reduced --engine sim \
 	    --tp 2 --requests 4 --max-new 4 --cache-len 64 \
 	    --page-size 8 --num-pages 16 --prefill-chunk 16
 	$(PY) -m benchmarks.run --only serving
+
+# public-API smoke: the quickstart example + a 4-request LLM.generate
+# (greedy / sampled / paged) — keeps the repro.api facade honest in CI
+example-smoke:
+	$(PY) examples/quickstart.py
+	$(PY) scripts/example_smoke.py

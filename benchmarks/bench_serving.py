@@ -1,12 +1,13 @@
-"""Serving throughput: dense slot caches vs the paged KV pool.
+"""Serving throughput: dense slot caches vs the paged KV pool, driven
+through the `repro.api` facade (one `LLM`, two `CacheConfig`s).
 
 Skewed prompt lengths (a few long, many short — the realistic traffic
-shape) on the SimEngine: the dense server must budget every slot for the
-WORST-CASE sequence, so its admissible batch is small; the paged server
-admits against free pages, packs more concurrent requests into the same
-token memory, and preempts/requeues when the pool runs dry.  Reports
-tokens/sec of generated output plus the cache-memory footprint each
-configuration pre-allocates (docs/serving.md has the design).
+shape) on the SimEngine: the dense scheduler must budget every slot for
+the WORST-CASE sequence, so its admissible batch is small; the paged
+scheduler admits against free pages, packs more concurrent requests into
+the same token memory, and preempts/requeues when the pool runs dry.
+Reports tokens/sec of generated output plus the cache-memory footprint
+each configuration pre-allocates (docs/serving.md has the design).
 """
 import numpy as np
 
@@ -15,7 +16,7 @@ from benchmarks._common import Timer, train_reduced
 
 def _requests(cfg, n, seed=0):
     """Skewed mix: ~1/4 long prompts, the rest short."""
-    from repro.runtime.server import Request
+    from repro.api import Request
     rng = np.random.default_rng(seed)
     reqs = []
     for uid in range(n):
@@ -34,41 +35,35 @@ def _tok_bytes(caches):
 
 
 def run(csv):
-    import jax
+    from repro.api import LLM
     from repro.config.base import SPDPlanConfig
-    from repro.core import simtp
-    from repro.runtime.engines import SimEngine
-    from repro.runtime.server import PagedServer, Server
 
     cfg, canonical = train_reduced(steps=0)
-    tp = 2
     plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
-    split = simtp.prepare_params(canonical, cfg, plan, tp)
-    engine = SimEngine(cfg, plan, tp, q_chunk=64)
-
     n_req, cache_len = 16, 64
+    llm = LLM.load(cfg, tp=2, engine="sim", plan=plan, params=canonical,
+                   cache_len=cache_len, max_batch=4, q_chunk=64)
     rows = []
 
-    def drive(server, name):
+    def drive(sched, name):
         # warmup with the SAME mix so every prefill bucket / decode shape
         # is compiled before the timed run (steady-state comparison)
         for r in _requests(cfg, n_req):
-            server.submit(r)
-        server.run()
-        server.completed.clear()
-        if hasattr(server, "n_preemptions"):
-            server.n_preemptions = 0     # report the timed run only
+            sched.submit(r)
+        sched.run()
+        sched.completed.clear()
+        sched.n_preemptions = 0          # report the timed run only
         for r in _requests(cfg, n_req):
-            server.submit(r)
+            sched.submit(r)
         t = Timer()
-        done = server.run()
+        done = sched.run()
         us = t.us()
         toks = sum(len(r.out) for r in done.values())
         assert len(done) == n_req, (name, len(done))
         return toks, us
 
     # dense: every slot pre-allocates cache_len tokens
-    dense = Server(engine, split, max_batch=4, cache_len=cache_len)
+    dense = llm.serve()
     dense_bytes = _tok_bytes(dense.caches)
     toks_d, us_d = drive(dense, "dense")
     tps_d = toks_d / (us_d / 1e6)
@@ -79,8 +74,8 @@ def run(csv):
 
     # paged: ~2.5 dense slots' worth of token memory but 8 schedulable
     # slots — throughput comes from packing short prompts into pages
-    paged = PagedServer(engine, split, max_slots=8, cache_len=cache_len,
-                        page_size=8, num_pages=20, prefill_chunk=16)
+    paged = llm.serve(max_batch=8, page_size=8, num_pages=20,
+                      prefill_chunk=16)
     paged_bytes = _tok_bytes(paged.pcaches)
     toks_p, us_p = drive(paged, "paged")
     tps_p = toks_p / (us_p / 1e6)

@@ -1,0 +1,26 @@
+"""`repro.api` — the public inference facade.
+
+One entrypoint (`LLM`), one sampling contract (`SamplingParams`), one
+scheduler (`Scheduler` + `CacheConfig`, dense or paged KV behind a
+pluggable `KVCacheManager`).  See docs/api.md for the full guide and
+the migration table from the legacy `Server`/`PagedServer` API.
+
+    from repro.api import LLM, SamplingParams
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim",
+                   dtype="float32", cache_len=64)
+    for out in llm.generate(prompts, SamplingParams(max_new=8)):
+        print(out.token_ids, out.finish_reason)
+"""
+from repro.api.outputs import RequestOutput, StreamEvent
+from repro.api.sampling import SamplingParams
+from repro.api.scheduler import (CacheConfig, DenseKVCacheManager,
+                                 InvalidRequestError, PagedKVCacheManager,
+                                 Request, Scheduler, SchedulerError)
+from repro.api.llm import LLM
+
+__all__ = [
+    "LLM", "SamplingParams", "RequestOutput", "StreamEvent",
+    "CacheConfig", "Scheduler", "Request",
+    "DenseKVCacheManager", "PagedKVCacheManager",
+    "InvalidRequestError", "SchedulerError",
+]

@@ -1,0 +1,297 @@
+"""`LLM` — the one public way to load and run a model.
+
+Every consumer used to hand-roll the engine-specific parameter dance
+(`simtp.prepare_params` for SimEngine vs `pad_model` → `stack_segments`
+→ `device_put` with `TP.param_pspecs` for ShardEngine) and pick between
+two schedulers.  `LLM.load` resolves the config, initializes (or
+accepts) canonical params, performs the correct placement, and exposes:
+
+    generate(prompts, sampling)  -> list[RequestOutput]
+    generate_stream(...)         -> iterator of StreamEvent
+    serve(...)                   -> a ready `Scheduler` (dense or paged)
+    apply_spd(calib, ...)        -> paper pipeline (sensitivity ->
+                                    ZS/B2B/HG) + redeployment, in place
+
+Example:
+
+    from repro.api import LLM, SamplingParams
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim",
+                   dtype="float32", cache_len=64)
+    outs = llm.generate(prompts, SamplingParams(max_new=8))
+
+Note on devices: engine="shard" builds a (dp, tp) mesh, so the process
+must expose dp*tp devices BEFORE jax initializes (e.g.
+`XLA_FLAGS=--xla_force_host_platform_device_count=N`); engine="sim"
+simulates TP with vmap on a single device and requires dp == 1.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.api.outputs import RequestOutput, StreamEvent
+from repro.api.sampling import SamplingParams
+from repro.api.scheduler import CacheConfig, Request, Scheduler
+from repro.config.base import ModelConfig, SPDPlanConfig, replace
+
+
+def _as_prompts(prompts) -> List[np.ndarray]:
+    """Normalize one prompt or a batch of prompts to a list of (S,) i32.
+    Accepts a single token sequence, a list of sequences, or a 1-D/2-D
+    ndarray (rows = prompts)."""
+    if isinstance(prompts, np.ndarray):
+        prompts = [prompts] if prompts.ndim == 1 else list(prompts)
+    elif len(prompts) and isinstance(prompts[0], (int, np.integer)):
+        prompts = [prompts]
+    return [np.asarray(p, np.int32) for p in prompts]
+
+
+def _per_request(sampling, n: int) -> List[SamplingParams]:
+    if sampling is None:
+        sampling = SamplingParams()
+    if isinstance(sampling, SamplingParams):
+        return [sampling] * n
+    if len(sampling) != n:
+        raise ValueError(f"got {len(sampling)} SamplingParams for "
+                         f"{n} prompts")
+    return list(sampling)
+
+
+class LLM:
+    """A loaded model + engine + placed params behind one object.
+
+    Construct with `LLM.load(...)`; the constructor itself is an
+    implementation detail.
+    """
+
+    def __init__(self, cfg, plan, engine_kind, engine, params, canonical,
+                 cache: CacheConfig, *, mesh=None, tp: int, dp: int,
+                 q_chunk: int):
+        self.cfg = cfg
+        self.plan = plan
+        self.engine_kind = engine_kind
+        self.engine = engine
+        self.params = params          # engine-placed (split or sharded)
+        self.canonical = canonical    # host canonical tree (for apply_spd)
+        self.cache = cache
+        self.mesh = mesh
+        self.tp, self.dp, self.q_chunk = tp, dp, q_chunk
+        self._sched: Optional[Scheduler] = None
+        # facade-internal uids are negative so they never collide with
+        # user-chosen uids of Requests submitted directly to serve()
+        self._next_uid = -1
+
+    # ---------------- construction ----------------
+
+    @classmethod
+    def load(cls, arch, *, tp: int = 1, dp: int = 1, engine: str = "sim",
+             spd: float = 0.0, plan: Optional[SPDPlanConfig] = None,
+             page_size: Optional[int] = None,
+             num_pages: Optional[int] = None,
+             prefill_chunk: Optional[int] = None,
+             cache_len: int = 128, max_batch: int = 4,
+             dtype: Optional[str] = None, seed: int = 0, params=None,
+             q_chunk: int = 64, mesh=None) -> "LLM":
+        """Load `arch` (config name or ModelConfig) onto an engine.
+
+        spd        fraction of blocks to SPD-drop (first-k plan) —
+                   ignored when an explicit `plan` is given; use
+                   `apply_spd` for the paper's sensitivity-ranked plan.
+        params     canonical param tree (e.g. from training); a fresh
+                   `init_model(PRNGKey(seed))` when omitted.
+        page_size/num_pages select the paged KV cache for `serve()` /
+        `generate()`; dense per-slot caches otherwise.
+        """
+        import jax
+        from repro.configs import get_config
+        from repro.core import model as M
+
+        cfg = arch if isinstance(arch, ModelConfig) else get_config(arch)
+        if dtype is not None:
+            cfg = replace(cfg, dtype=dtype)
+        if plan is None:
+            k = (int(round(cfg.n_layers * spd))
+                 if cfg.spd_applicable else 0)
+            plan = SPDPlanConfig.first_k(cfg.n_layers, k)
+        elif len(plan.drop_mask) != cfg.n_layers:
+            raise ValueError(f"plan covers {len(plan.drop_mask)} layers, "
+                             f"model has {cfg.n_layers}")
+        if engine not in ("sim", "shard"):
+            raise ValueError(f"unknown engine {engine!r} "
+                             "(expected 'sim' or 'shard')")
+        if engine == "sim" and dp != 1:
+            raise ValueError("engine='sim' simulates TP on one device; "
+                             f"dp must be 1 (got {dp})")
+        canonical = (params if params is not None
+                     else M.init_model(jax.random.PRNGKey(seed), cfg))
+        cache = CacheConfig(cache_len=cache_len, max_batch=max_batch,
+                            page_size=page_size, num_pages=num_pages,
+                            prefill_chunk=prefill_chunk)
+        llm = cls(cfg, plan, engine, None, None, canonical, cache,
+                  mesh=mesh, tp=tp, dp=dp, q_chunk=q_chunk)
+        llm._build_engine()
+        return llm
+
+    def _make_engine(self):
+        """Fresh engine for the CURRENT `self.plan` (the single place
+        that knows how each engine kind is constructed)."""
+        from repro.runtime.engines import ShardEngine, SimEngine
+
+        if self.engine_kind == "sim":
+            return SimEngine(self.cfg, self.plan, self.tp,
+                             q_chunk=self.q_chunk)
+        if self.mesh is None:
+            from repro.launch.mesh import make_test_mesh
+            self.mesh = make_test_mesh(self.dp, self.tp)
+        return ShardEngine(self.cfg, self.plan, self.mesh,
+                           q_chunk=self.q_chunk)
+
+    def _build_engine(self):
+        """(Re)build the engine for `self.plan` and place canonical
+        params into its native layout."""
+        self.engine = self._make_engine()
+        self.params = self._place(self.canonical, padded=False)
+        self._sched = None
+
+    def _place(self, tree, *, padded: bool):
+        """Canonical (or already-padded) params -> engine-native layout."""
+        import jax
+        import jax.numpy as jnp
+        from repro.core import model as M
+        from repro.core import simtp
+        from repro.parallel import tp as TP
+
+        pt = tree if padded else M.pad_model(tree, self.cfg, self.tp)
+        stacked = M.stack_segments(pt, self.cfg, self.plan)
+        if self.engine_kind == "sim":
+            return simtp.split_stacked(stacked, self.cfg, self.plan, self.tp)
+        stacked = jax.tree.map(jnp.array, stacked)
+        return jax.device_put(stacked, TP.named(
+            self.mesh, TP.param_pspecs(self.cfg, self.plan)))
+
+    # ---------------- serving ----------------
+
+    def serve(self, **overrides) -> Scheduler:
+        """A `Scheduler` on this model.  Without overrides, returns the
+        (cached) scheduler `generate` uses; with overrides (any
+        CacheConfig field) builds a fresh one."""
+        if overrides:
+            import dataclasses
+            return Scheduler(self.engine, self.params,
+                             dataclasses.replace(self.cache, **overrides))
+        if self._sched is None:
+            self._sched = Scheduler(self.engine, self.params, self.cache)
+        return self._sched
+
+    def _submit(self, prompts, sampling) -> List[Request]:
+        prompts = _as_prompts(prompts)
+        sps = _per_request(sampling, len(prompts))
+        sched = self.serve()
+        reqs = []
+        for p, sp in zip(prompts, sps):
+            req = Request(uid=self._next_uid, prompt=p, max_new=sp.max_new,
+                          sampling=sp)
+            self._next_uid -= 1
+            reqs.append(req)
+        for req in reqs:              # all-or-nothing: validate the whole
+            sched.validate(req)       # batch before enqueueing any of it
+        for req in reqs:
+            sched.queue.append(req)   # already validated above
+        return reqs
+
+    def generate(self, prompts, sampling: Optional[SamplingParams] = None,
+                 max_steps: int = 100_000) -> List[RequestOutput]:
+        """Run `prompts` to completion; results in submission order.
+
+        `sampling` is one SamplingParams for all prompts or a list with
+        one per prompt (default greedy)."""
+        reqs = self._submit(prompts, sampling)
+        sched = self.serve()
+        steps = 0
+        try:
+            while any(not r.done for r in reqs) and steps < max_steps:
+                if not sched.step():
+                    break
+                steps += 1
+        finally:
+            # withdraw this batch from the long-lived scheduler on ANY
+            # exit (including engine errors / interrupts): finished
+            # requests would otherwise accumulate in `completed`,
+            # unfinished ones would keep occupying the queue/slots
+            sched.cancel(reqs)
+        if any(not r.done for r in reqs):
+            raise RuntimeError(
+                f"generate did not converge in {steps} steps "
+                f"({sum(r.done for r in reqs)}/{len(reqs)} done)")
+        return [RequestOutput(index=i,
+                              prompt_token_ids=[int(t) for t in r.prompt],
+                              token_ids=list(r.out),
+                              finish_reason=r.finish_reason,
+                              n_preempted=r.n_preempted)
+                for i, r in enumerate(reqs)]
+
+    def generate_stream(self, prompts,
+                        sampling: Optional[SamplingParams] = None,
+                        max_steps: int = 100_000) -> Iterator[StreamEvent]:
+        """Like `generate` but yields each token as it is produced
+        (admission token included; preemption-recomputed tokens are not
+        re-emitted)."""
+        reqs = self._submit(prompts, sampling)
+        sched = self.serve()
+        emitted = [0] * len(reqs)
+
+        def drain():
+            for i, r in enumerate(reqs):
+                while emitted[i] < len(r.out):
+                    tok = r.out[emitted[i]]
+                    emitted[i] += 1
+                    last = r.done and emitted[i] == len(r.out)
+                    yield StreamEvent(
+                        index=i, token_id=int(tok), done=last,
+                        finish_reason=r.finish_reason if last else None)
+
+        steps = 0
+        try:
+            while any(not r.done for r in reqs) and steps < max_steps:
+                if not sched.step():
+                    break
+                steps += 1
+                yield from drain()
+            yield from drain()
+            if any(not r.done for r in reqs):
+                raise RuntimeError(
+                    f"stream did not converge in {steps} steps")
+        finally:
+            # runs on normal completion AND when the caller abandons the
+            # generator (GeneratorExit): unfinished requests must not
+            # keep occupying the shared scheduler's queue/slots
+            sched.cancel(reqs)
+
+    # ---------------- the paper's SPD pipeline ----------------
+
+    def apply_spd(self, calib_batches, *, n_spd: int, tau1: float,
+                  tau2: float, lr: float = 5e-5, epochs: int = 10,
+                  strategies=("ZS", "B2B", "HG"),
+                  q_chunk: Optional[int] = None):
+        """Run the full Algorithm-1 pipeline (sensitivity sweep ->
+        ISB/SB/ESB tiering -> zero-shot drop / block-to-block
+        distillation / head grouping) on this model's canonical params,
+        then redeploy the result onto the engine in place.
+
+        Returns the `SPDReport`.  The model's plan, engine, and placed
+        params are replaced; any cached scheduler is dropped (its caches
+        no longer match the new plan)."""
+        from repro.core import spd as SPD
+
+        padded, plan, report = SPD.apply_spd(
+            self.cfg, self.canonical, calib_batches, self.tp,
+            n_spd=n_spd, tau1=tau1, tau2=tau2, lr=lr, epochs=epochs,
+            strategies=strategies, q_chunk=q_chunk or self.q_chunk)
+        self.plan = plan
+        self.engine = self._make_engine()
+        # distilled SPD weights are TP-degree-specific padded tensors —
+        # place them directly, do NOT re-pad canonical weights
+        self.params = self._place(padded, padded=True)
+        self._sched = None
+        return report

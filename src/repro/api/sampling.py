@@ -1,0 +1,58 @@
+"""Public sampling contract for the `repro.api` facade.
+
+`SamplingParams` is the one knob-set every entrypoint takes (`LLM
+.generate`, `Scheduler.submit` via `Request.sampling`).  The jitted
+kernel that executes it lives in `repro.runtime.sampling` (re-exported
+here) so engine code never has to import the api package.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.runtime.sampling import (greedy_tokens, make_keys, sample_core,
+                                    sample_tokens)
+
+__all__ = ["SamplingParams", "greedy_tokens", "make_keys", "sample_core",
+           "sample_tokens"]
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """How to turn logits into tokens, per request.
+
+    temperature     <= 0 means greedy (the default); > 0 scales logits.
+    top_k           keep only the k highest logits (0 = disabled).
+    top_p           nucleus filtering: keep the smallest descending-
+                    probability prefix reaching this mass (1.0 = off).
+    seed            per-request PRNG seed; together with the number of
+                    tokens generated so far it fully determines the
+                    sample, independent of batching or preemption.
+    max_new         decode-token budget (the first token produced at
+                    admission counts toward it, matching the servers'
+                    historical behavior).
+    stop_token_ids  any of these ends the request (the stop token is
+                    kept in the output, like EOS).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    max_new: int = 16
+    stop_token_ids: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.max_new <= 0:
+            raise ValueError(f"max_new must be positive, got {self.max_new}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if not -2**31 <= self.seed < 2**31:
+            # seeds travel as int32 arrays into the jitted sampling step
+            raise ValueError(f"seed must fit in int32, got {self.seed}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0

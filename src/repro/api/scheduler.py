@@ -1,0 +1,505 @@
+"""The one continuous-batching scheduler behind the `repro.api` facade.
+
+Historically the runtime had two near-duplicate schedulers — a dense
+`Server` (fixed per-slot caches) and a `PagedServer` (page-pool
+admission + preemption-by-eviction).  They are collapsed here into a
+single `Scheduler` driven by a `CacheConfig`: dense is simply the
+`page_size=num_pages=None` degenerate case, realized by a pluggable
+`KVCacheManager` (`DenseKVCacheManager` / `PagedKVCacheManager`).  The
+old constructors in `repro.runtime.server` remain as deprecated shims
+over this class.
+
+Engine contract (runtime/engines.py — SimEngine and ShardEngine):
+    prefill / prefill_chunked            -> (logits, caches1)
+    decode / decode_sampled              dense decode step
+    decode_paged / decode_paged_sampled  paged decode step
+    blank_caches / blank_paged_caches, insert_slot / insert_paged
+
+Sampling: every token goes through the jitted sampling step in
+`repro.runtime.sampling`, honoring each request's `SamplingParams`
+(greedy, temperature, top-k, top-p, per-request seed, stop tokens,
+max_new).  A batch whose active requests are all greedy uses the
+engines' fused greedy decode (bit-identical to the pre-facade servers);
+any sampled request switches the step to the sampled decode path.
+
+Admission is validated up front (`InvalidRequestError`: empty prompt,
+non-positive max_new, prompt + max_new beyond per-slot or pool
+capacity) instead of failing later with shape errors inside
+`insert_slot` / `scatter_prefill_pages`.
+
+Scheduling semantics (unchanged from the pre-facade servers; full
+design in docs/serving.md):
+  * dense: admit whenever a slot is free, FIFO;
+  * paged: head-of-line FIFO admission against free PAGES; before each
+    decode step every active slot must own the page it is about to
+    write, and pool exhaustion preempts the latest-admitted slot
+    (pages freed, request requeued at the front keeping its generated
+    tokens; on re-admission it prefills over prompt + output).
+Chunked prefill (`CacheConfig.prefill_chunk`) now applies to BOTH cache
+layouts — the dense path used to silently ignore it.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.sampling import SamplingParams
+from repro.runtime import sampling as RS
+from repro.runtime.paging import PagePool
+
+__all__ = ["CacheConfig", "Request", "Scheduler", "InvalidRequestError",
+           "SchedulerError", "DenseKVCacheManager", "PagedKVCacheManager"]
+
+_GREEDY = SamplingParams()
+
+
+class SchedulerError(RuntimeError):
+    """Internal scheduling invariant violated."""
+
+
+class InvalidRequestError(ValueError):
+    """Request rejected at admission (subclasses ValueError so legacy
+    `except ValueError` call sites keep working)."""
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """KV-cache geometry for a `Scheduler`.
+
+    Dense layout when `page_size`/`num_pages` are None; paged otherwise
+    (both must be set together).  `prefill_chunk` switches prompt
+    prefill from power-of-two buckets to fixed-size chunks on either
+    layout.
+    """
+
+    cache_len: int
+    max_batch: int = 4
+    page_size: Optional[int] = None
+    num_pages: Optional[int] = None
+    prefill_chunk: Optional[int] = None
+
+    def __post_init__(self):
+        if self.cache_len <= 0 or self.max_batch <= 0:
+            raise ValueError(f"bad cache geometry: {self}")
+        if (self.page_size is None) != (self.num_pages is None):
+            raise ValueError(
+                "page_size and num_pages must be set together "
+                f"(got page_size={self.page_size}, "
+                f"num_pages={self.num_pages})")
+        if self.paged:
+            if self.page_size <= 0 or self.num_pages <= 0:
+                raise ValueError(f"bad paged geometry: {self}")
+            if self.cache_len % self.page_size:
+                raise ValueError(
+                    f"cache_len={self.cache_len} not a multiple of "
+                    f"page_size={self.page_size}")
+        if self.prefill_chunk is not None and self.prefill_chunk <= 0:
+            raise ValueError(f"prefill_chunk must be positive: {self}")
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size is not None
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 16
+    eos: int = -1                   # -1 => never
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+    n_preempted: int = 0
+    # new fields AFTER every legacy one, so pre-facade positional
+    # construction keeps binding the same way
+    sampling: Optional[SamplingParams] = None
+    finish_reason: Optional[str] = None
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    return max(minimum, 1 << math.ceil(math.log2(max(n, 1))))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache managers: the layout-specific half of the scheduler
+# ---------------------------------------------------------------------------
+
+
+class DenseKVCacheManager:
+    """One fixed `cache_len` stripe per slot; capacity is per-slot only."""
+
+    paged = False
+
+    def __init__(self, engine, cc: CacheConfig):
+        self.engine = engine
+        self.cc = cc
+        self.caches = engine.blank_caches(cc.max_batch, cc.cache_len)
+
+    def capacity_error(self, prompt_len: int, max_new: int) -> Optional[str]:
+        # dense slots only ever hold prompt + one KV write per decode
+        # step except the last (the final token's KV is never stored)
+        need = prompt_len + max_new - 1
+        if need > self.cc.cache_len:
+            return (f"request needs {need} cache positions, exceeding "
+                    f"per-slot cache_len={self.cc.cache_len}")
+        return None
+
+    def can_admit(self, slot: int, total: int) -> bool:
+        return True                       # slot freeness is checked upstream
+
+    def ensure(self, slot: int, upto: int) -> bool:
+        return upto <= self.cc.cache_len
+
+    def insert(self, caches1, slot: int):
+        self.caches = self.engine.insert_slot(self.caches, caches1, slot)
+
+    def release(self, slot: int):
+        pass
+
+    def decode(self, params, cur, pos):
+        nxt, self.caches = self.engine.decode(params, cur, pos, self.caches)
+        return nxt
+
+    def decode_sampled(self, params, cur, pos, t, k, p, keys):
+        nxt, self.caches = self.engine.decode_sampled(
+            params, cur, pos, self.caches, t, k, p, keys)
+        return nxt
+
+
+class PagedKVCacheManager:
+    """Page-pool allocator + page tables (runtime/paging.py)."""
+
+    paged = True
+
+    def __init__(self, engine, cc: CacheConfig):
+        self.engine = engine
+        self.cc = cc
+        self.pool = PagePool(num_pages=cc.num_pages, page_size=cc.page_size,
+                             max_slots=cc.max_batch,
+                             pages_per_slot=cc.cache_len // cc.page_size)
+        self.pcaches = engine.blank_paged_caches(
+            cc.max_batch, cc.cache_len, page_size=cc.page_size,
+            num_pages=cc.num_pages)
+
+    def capacity_error(self, prompt_len: int, max_new: int) -> Optional[str]:
+        # paged admission unconditionally grows to resume_len + 1, and a
+        # preemption after max_new - 1 tokens resumes with prompt +
+        # max_new - 1 tokens — so the worst case really is prompt +
+        # max_new positions (the legacy PagedServer bound); anything
+        # looser can livelock the FIFO head after a late preemption
+        need = prompt_len + max_new
+        if need > self.cc.cache_len or not self.pool.fits_alone(need):
+            return (f"request needs {need} cache positions, exceeding "
+                    f"pool capacity ({self.pool.num_pages} pages x "
+                    f"{self.pool.page_size} tokens, "
+                    f"cache_len={self.cc.cache_len})")
+        return None
+
+    def can_admit(self, slot: int, total: int) -> bool:
+        return self.pool.grow(slot, total)
+
+    def ensure(self, slot: int, upto: int) -> bool:
+        return self.pool.grow(slot, upto)
+
+    def insert(self, caches1, slot: int):
+        self.pcaches = self.engine.insert_paged(
+            self.pcaches, caches1, slot, self.pool.table[slot])
+
+    def release(self, slot: int):
+        self.pool.release(slot)
+
+    def decode(self, params, cur, pos):
+        nxt, self.pcaches = self.engine.decode_paged(
+            params, cur, pos, jnp.asarray(self.pool.table), self.pcaches)
+        return nxt
+
+    def decode_sampled(self, params, cur, pos, t, k, p, keys):
+        nxt, self.pcaches = self.engine.decode_paged_sampled(
+            params, cur, pos, jnp.asarray(self.pool.table), self.pcaches,
+            t, k, p, keys)
+        return nxt
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+
+class Scheduler:
+    """Continuous batching over either cache layout (see module doc)."""
+
+    def __init__(self, engine, params, cache: CacheConfig):
+        self.engine = engine
+        self.params = params
+        self.cache = cache
+        self.kv = (PagedKVCacheManager(engine, cache) if cache.paged
+                   else DenseKVCacheManager(engine, cache))
+        self.max_batch = cache.max_batch
+        self.cache_len = cache.cache_len
+        self.prefill_chunk = cache.prefill_chunk
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * cache.max_batch
+        self.pos = np.zeros(cache.max_batch, np.int32)
+        self.cur = np.zeros((cache.max_batch, 1), np.int32)
+        self.admit_seq = np.zeros(cache.max_batch, np.int64)
+        self._seq = 0
+        self.completed: Dict[int, Request] = {}
+        self.n_preemptions = 0
+
+    # legacy attribute names (pre-facade Server/PagedServer)
+    @property
+    def max_slots(self) -> int:
+        return self.max_batch
+
+    @property
+    def caches(self):
+        return self.kv.caches
+
+    @property
+    def pcaches(self):
+        return self.kv.pcaches
+
+    @property
+    def pool(self) -> PagePool:
+        return self.kv.pool
+
+    # ---------------- request lifecycle ----------------
+
+    def submit(self, req: Request):
+        """Validate and enqueue.  Raises InvalidRequestError on requests
+        that could never run (instead of shape failures downstream)."""
+        self.validate(req)
+        self.queue.append(req)
+
+    def validate(self, req: Request):
+        """Admission checks only — raises InvalidRequestError, enqueues
+        nothing (callers batching submissions validate up front)."""
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise InvalidRequestError(
+                f"request {req.uid}: prompt must be a non-empty 1-D token "
+                f"array (got shape {prompt.shape})")
+        if req.max_new <= 0:
+            raise InvalidRequestError(
+                f"request {req.uid}: max_new must be positive "
+                f"(got {req.max_new})")
+        if len(prompt) > self.cache_len:
+            raise InvalidRequestError(
+                f"request {req.uid}: prompt length {len(prompt)} exceeds "
+                f"cache_len={self.cache_len}")
+        msg = self.kv.capacity_error(len(prompt), self._max_new(req))
+        if msg is not None:
+            raise InvalidRequestError(f"request {req.uid}: {msg}")
+
+    @staticmethod
+    def _resume_tokens(req: Request) -> np.ndarray:
+        """Prompt plus already-generated tokens (recompute after preempt)."""
+        if not req.out:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.out, np.int32)])
+
+    def _prefill(self, toks: np.ndarray, s: int):
+        if (self.prefill_chunk
+                and hasattr(self.engine, "prefill_chunked")):
+            return self.engine.prefill_chunked(
+                self.params, jnp.asarray(toks[None]),
+                cache_len=self.cache_len, lengths=np.asarray([s]),
+                chunk=self.prefill_chunk)
+        # bucket, but never past the slot capacity: a 128-bucket prefill
+        # against a 96-token cache would build caches wider than the slot
+        sb = min(_bucket(s), self.cache_len)
+        padded = np.zeros((1, sb), np.int32)
+        padded[0, :s] = toks               # right-pad; exact: decode starts
+        # at pos=s and overwrites pad slots before they are ever causally
+        # visible (see M.prefill docstring).
+        return self.engine.prefill(
+            self.params, jnp.asarray(padded), cache_len=self.cache_len,
+            lengths=jnp.asarray([s], jnp.int32))
+
+    def _first_token(self, req: Request, logits) -> int:
+        """Sample the admission token from the prefill logits via the
+        jitted sampling step (greedy == argmax, as before)."""
+        sp = req.sampling or _GREEDY
+        keys = RS.make_keys(np.asarray([sp.seed], np.int32),
+                            np.asarray([len(req.out)], np.int32))
+        tok = RS.sample_tokens(
+            jnp.asarray(logits), np.asarray([sp.temperature], np.float32),
+            np.asarray([sp.top_k], np.int32),
+            np.asarray([sp.top_p], np.float32), keys)
+        return int(np.asarray(tok)[0])
+
+    def _admit(self):
+        for b in range(self.max_batch):
+            if not self.queue:
+                break
+            if self.slots[b] is not None:
+                continue
+            req = self.queue[0]
+            toks = self._resume_tokens(req)
+            s = len(toks)
+            # capacity for the prompt + the first decode write at pos s
+            if not self.kv.can_admit(b, s + 1):
+                break          # head-of-line: wait for pages, stay FIFO
+            self.queue.popleft()
+            try:
+                logits, caches1 = self._prefill(toks, s)
+                first = self._first_token(req, logits)
+            except BaseException:
+                # can_admit already reserved pages for slot b — free them
+                # and put the request back so nothing leaks on a prefill
+                # failure (engine error, interrupt, ...)
+                self.kv.release(b)
+                self.queue.appendleft(req)
+                raise
+            req.out.append(first)
+            self.slots[b] = req
+            self.pos[b] = s
+            self.cur[b, 0] = first
+            self.admit_seq[b] = self._seq
+            self._seq += 1
+            self.kv.insert(caches1, b)
+            if self._stopping(req, first):
+                self._finish(b)
+
+    @staticmethod
+    def _max_new(req: Request) -> int:
+        """Effective decode budget: the tighter of Request.max_new and
+        the request's SamplingParams.max_new (so both documented knobs
+        are honored for direct submit() users; the facade sets them
+        equal)."""
+        if req.sampling is None:
+            return req.max_new
+        return min(req.max_new, req.sampling.max_new)
+
+    def _stopping(self, req: Request, tok: int) -> bool:
+        sp = req.sampling
+        if tok == req.eos or (sp is not None and tok in sp.stop_token_ids):
+            req.finish_reason = "stop"
+            return True
+        if len(req.out) >= self._max_new(req):
+            req.finish_reason = "length"
+            return True
+        return False
+
+    def _finish(self, b: int):
+        req = self.slots[b]
+        req.done = True
+        self.completed[req.uid] = req
+        self.slots[b] = None
+        self.pos[b] = 0
+        self.kv.release(b)
+
+    def cancel(self, reqs):
+        """Withdraw requests (queued, active, or completed) without
+        completing them: queue entries are dropped, active slots are
+        released, and their `completed` entries (matched by identity,
+        not just uid) are removed.  Used by the facade to clean up
+        abandoned streams."""
+        targets = {id(r) for r in reqs}
+        if not targets:
+            return
+        self.queue = deque(r for r in self.queue if id(r) not in targets)
+        for b in range(self.max_batch):
+            r = self.slots[b]
+            if r is not None and id(r) in targets:
+                self.slots[b] = None
+                self.pos[b] = 0
+                self.kv.release(b)
+        for r in reqs:
+            if self.completed.get(r.uid) is r:
+                del self.completed[r.uid]
+
+    def _preempt_one(self, keep: int) -> Optional[int]:
+        """Evict the latest-admitted active slot (other than `keep` when
+        possible); its request requeues at the front with output kept."""
+        cands = [b for b in range(self.max_batch)
+                 if self.slots[b] is not None and b != keep]
+        if not cands:
+            cands = [keep] if self.slots[keep] is not None else []
+        if not cands:
+            return None
+        v = max(cands, key=lambda b: self.admit_seq[b])
+        req = self.slots[v]
+        req.n_preempted += 1
+        self.kv.release(v)
+        self.slots[v] = None
+        self.pos[v] = 0
+        self.queue.appendleft(req)
+        self.n_preemptions += 1
+        return v
+
+    # ---------------- main loop ----------------
+
+    def _active(self) -> List[int]:
+        return [b for b in range(self.max_batch)
+                if self.slots[b] is not None]
+
+    def _decode_active(self, active: List[int]):
+        """One decode step; greedy batches use the engines' fused greedy
+        path (bit-identical to the pre-facade servers), anything else the
+        sampled path with per-request SamplingParams arrays."""
+        cur = jnp.asarray(self.cur)
+        pos = jnp.asarray(self.pos)
+        if all((self.slots[b].sampling or _GREEDY).greedy for b in active):
+            return self.kv.decode(self.params, cur, pos)
+        n = self.max_batch
+        t = np.zeros(n, np.float32)
+        k = np.zeros(n, np.int32)
+        p = np.ones(n, np.float32)
+        seeds = np.zeros(n, np.int32)
+        counts = np.zeros(n, np.int32)
+        for b in active:
+            sp = self.slots[b].sampling or _GREEDY
+            t[b], k[b], p[b] = sp.temperature, sp.top_k, sp.top_p
+            seeds[b] = sp.seed
+            counts[b] = len(self.slots[b].out)
+        keys = RS.make_keys(seeds, counts)
+        return self.kv.decode_sampled(self.params, cur, pos, t, k, p, keys)
+
+    def step(self) -> bool:
+        """Admit, grow (paged), one decode step for all active slots."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return False
+        if self.kv.paged:
+            # growth: each slot writes position pos[b] this step — make
+            # sure its page exists, preempting latest-admitted slots when
+            # the pool is dry (oldest slots grow first, never starved).
+            for b in sorted(active, key=lambda b: self.admit_seq[b]):
+                if self.slots[b] is None:   # preempted by an earlier slot
+                    continue
+                while not self.kv.ensure(b, int(self.pos[b]) + 1):
+                    v = self._preempt_one(keep=b)
+                    if v is None or v == b:
+                        break
+            active = self._active()
+            if not active:
+                return bool(self.queue)
+        nxt = np.asarray(self._decode_active(active))
+        for b in active:
+            req = self.slots[b]
+            tok = int(nxt[b, 0])
+            req.out.append(tok)
+            self.pos[b] += 1
+            self.cur[b, 0] = tok
+            if self._stopping(req, tok):
+                self._finish(b)
+        return True
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return self.completed

@@ -1,4 +1,6 @@
-"""Serving driver: batched prefill+decode with continuous batching.
+"""Serving driver: batched prefill+decode with continuous batching,
+built on the `repro.api` facade (LLM + SamplingParams + the unified
+Scheduler).
 
 Dense (fixed per-slot caches):
 ``python -m repro.launch.serve --arch smollm-360m-reduced --tp 2 --dp 2
@@ -9,7 +11,11 @@ docs/serving.md): add ``--page-size 16 --num-pages 48`` — admission is
 then limited by free pages instead of slots, and pool exhaustion
 preempts and requeues the latest-admitted request.  ``--prefill-chunk C``
 switches prompt prefill to fixed-size chunks (one compilation instead of
-one per power-of-two bucket).
+one per power-of-two bucket) on EITHER cache layout.
+
+Sampling: greedy by default; ``--temperature/--top-k/--top-p
+--sample-seed`` select the jitted sampling path (per-request
+deterministic).
 """
 import argparse
 import json
@@ -31,73 +37,54 @@ def main():
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--page-size", type=int, default=0,
                     help="tokens per KV page; with --num-pages selects "
-                         "the paged server (0 = dense)")
+                         "the paged cache (0 = dense)")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="pages in the shared pool; small values force "
                          "preemption-by-eviction")
     ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="chunked prefill size (paged server only; 0 = "
+                    help="chunked prefill size, dense or paged (0 = "
                          "power-of-two buckets)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (default); > 0 samples")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--sample-seed", type=int, default=0)
     args = ap.parse_args()
 
     n_dev = args.tp * args.dp
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
 
-    import jax
-    import jax.numpy as jnp
     import numpy as np
-    from repro.config.base import SPDPlanConfig, replace
-    from repro.configs import get_config
-    from repro.core import model as M, simtp
-    from repro.launch.mesh import make_test_mesh
-    from repro.parallel import tp as TP
-    from repro.runtime.engines import ShardEngine, SimEngine
-    from repro.runtime.server import PagedServer, Request, Server
-
-    cfg = replace(get_config(args.arch), dtype=args.dtype)
-    k = int(round(cfg.n_layers * args.spd)) if cfg.spd_applicable else 0
-    plan = SPDPlanConfig.first_k(cfg.n_layers, k)
-    params = M.init_model(jax.random.PRNGKey(args.seed), cfg)
-
-    if args.engine == "sim":
-        engine = SimEngine(cfg, plan, args.tp, q_chunk=64)
-        gp = simtp.prepare_params(params, cfg, plan, args.tp)
-    else:
-        mesh = make_test_mesh(args.dp, args.tp)
-        engine = ShardEngine(cfg, plan, mesh, q_chunk=64)
-        stacked = jax.tree.map(
-            jnp.array,
-            M.stack_segments(M.pad_model(params, cfg, args.tp), cfg, plan))
-        gp = jax.device_put(stacked, TP.named(
-            mesh, TP.param_pspecs(cfg, plan)))
+    from repro.api import LLM, SamplingParams
 
     paged = args.page_size > 0 and args.num_pages > 0
-    if paged:
-        server = PagedServer(
-            engine, gp, max_slots=args.max_batch, cache_len=args.cache_len,
-            page_size=args.page_size, num_pages=args.num_pages,
-            prefill_chunk=args.prefill_chunk or None)
-    else:
-        server = Server(engine, gp, max_batch=args.max_batch,
-                        cache_len=args.cache_len)
+    llm = LLM.load(
+        args.arch, tp=args.tp, dp=args.dp, engine=args.engine,
+        spd=args.spd, dtype=args.dtype, seed=args.seed,
+        cache_len=args.cache_len, max_batch=args.max_batch,
+        page_size=args.page_size if paged else None,
+        num_pages=args.num_pages if paged else None,
+        prefill_chunk=args.prefill_chunk or None, q_chunk=64)
+
     rng = np.random.default_rng(args.seed)
-    for uid in range(args.requests):
-        plen = int(rng.integers(4, 24))
-        server.submit(Request(
-            uid=uid,
-            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new=args.max_new))
-    done = server.run()
+    prompts = [rng.integers(0, llm.cfg.vocab_size,
+                            int(rng.integers(4, 24))).astype(np.int32)
+               for _ in range(args.requests)]
+    sampling = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.sample_seed, max_new=args.max_new)
+    outs = llm.generate(prompts, sampling)
+    sched = llm.serve()
     out = {
-        "completed": len(done),
-        "outputs": {uid: r.out[:8] for uid, r in sorted(done.items())},
+        "completed": sum(o.finished for o in outs),
+        "outputs": {o.index: o.token_ids[:8] for o in outs},
     }
     if paged:
         out["paged"] = {"page_size": args.page_size,
                         "num_pages": args.num_pages,
-                        "preemptions": server.n_preemptions,
-                        "free_pages": server.pool.num_free}
+                        "preemptions": sched.n_preemptions,
+                        "free_pages": sched.pool.num_free}
     print(json.dumps(out))
 
 

@@ -27,6 +27,7 @@ from repro.core import model as M
 from repro.parallel import zero1 as Z
 from repro.parallel.collectives import (MODEL_AXIS, psum_plain)
 from repro.parallel.layout import REPLICATED
+from repro.runtime import sampling as RS
 
 
 def shard_map(f, mesh, in_specs, out_specs):
@@ -299,11 +300,30 @@ def _full_logits(cfg, logits):
 
 
 def build_decode_step(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh,
-                      shard_batch: bool = True, with_logits: bool = False):
+                      shard_batch: bool = True, with_logits: bool = False,
+                      sampled: bool = False):
+    """Greedy decode keeps the gather-free `_greedy_sample` trick;
+    `sampled=True` builds the SamplingParams-honoring variant instead:
+    full logits are all-gathered and the shared jitted sampling step
+    (runtime/sampling.py) runs replicated on every model shard."""
     tp = mesh.shape[MODEL_AXIS]
     dpx = dp_axes(mesh) if shard_batch else ()
     p_specs = param_pspecs(cfg, plan)
     c_specs = cache_pspecs(cfg, plan, mesh, shard_batch)
+
+    if sampled:
+        def decode_sampled_local(params, tokens, pos, caches, t, k, p, keys):
+            logits, new_caches = M.decode_step(cfg, params, plan, tokens,
+                                               pos, caches, tp=tp)
+            nxt = RS.sample_core(_full_logits(cfg, logits), t, k, p, keys)
+            return nxt[:, None], new_caches
+
+        in_specs = (p_specs, P(dpx), P(dpx), c_specs,
+                    P(dpx), P(dpx), P(dpx), P(dpx))
+        out_specs = (P(dpx), c_specs)
+        return jax.jit(shard_map(decode_sampled_local, mesh,
+                                 in_specs=in_specs, out_specs=out_specs),
+                       donate_argnums=(3,))
 
     def decode_local(params, tokens, pos, caches):
         logits, new_caches = M.decode_step(cfg, params, plan, tokens, pos,
@@ -321,7 +341,8 @@ def build_decode_step(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh,
 
 
 def build_paged_decode_step(cfg: ModelConfig, plan: SPDPlanConfig,
-                            mesh: Mesh, with_logits: bool = False):
+                            mesh: Mesh, with_logits: bool = False,
+                            sampled: bool = False):
     """Paged decode: gather each slot's pages into a contiguous view,
     run the dense decode math, scatter the newly written token back into
     its page (kernels/ops.py).  The pool's page axis is replicated over
@@ -336,7 +357,7 @@ def build_paged_decode_step(cfg: ModelConfig, plan: SPDPlanConfig,
     flags = M.cache_pageable_tree(cfg, plan)
     from repro.kernels import ops as KOPS
 
-    def decode_local(params, tokens, pos, page_table, pcaches):
+    def paged_math(params, tokens, pos, page_table, pcaches):
         dense = jax.tree.map(
             lambda f, c: KOPS.gather_pages(c, page_table) if f else c,
             flags, pcaches)
@@ -346,6 +367,25 @@ def build_paged_decode_step(cfg: ModelConfig, plan: SPDPlanConfig,
             lambda f, c, nd: (KOPS.scatter_token_page(c, nd, page_table, pos)
                               if f else nd),
             flags, pcaches, new_dense)
+        return logits, new_pcaches
+
+    if sampled:
+        def decode_sampled_local(params, tokens, pos, page_table, pcaches,
+                                 t, k, p, keys):
+            logits, new_pcaches = paged_math(params, tokens, pos,
+                                             page_table, pcaches)
+            nxt = RS.sample_core(_full_logits(cfg, logits), t, k, p, keys)
+            return nxt[:, None], new_pcaches
+
+        in_specs = (p_specs, P(), P(), P(), c_specs, P(), P(), P(), P())
+        out_specs = (P(), c_specs)
+        return jax.jit(shard_map(decode_sampled_local, mesh,
+                                 in_specs=in_specs, out_specs=out_specs),
+                       donate_argnums=(4,))
+
+    def decode_local(params, tokens, pos, page_table, pcaches):
+        logits, new_pcaches = paged_math(params, tokens, pos, page_table,
+                                         pcaches)
         nxt = _greedy_sample(cfg, logits)
         if with_logits:
             return nxt[:, None], _full_logits(cfg, logits), new_pcaches

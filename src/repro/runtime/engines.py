@@ -7,12 +7,16 @@ Both keep caches in their engine-native layout between calls and expose:
     prefill(params, tokens, *, cache_len, lengths) -> (full logits, caches1)
     prefill_chunked(...)  — incremental prefill in fixed-size chunks
     decode(params, tokens, pos, caches) -> (next_tokens (B,1), caches)
+    decode_sampled(params, tokens, pos, caches, temp, top_k, top_p, keys)
+        — per-request sampling (runtime/sampling.py) fused into the
+        decode jit; greedy rows (temp <= 0) reproduce decode() exactly
     blank_caches(batch, cache_len), insert_slot(caches, caches1, b)
-and the paged-cache variants consumed by runtime.server.PagedServer
+and the paged-cache variants consumed by the unified api scheduler
 (design: docs/serving.md; allocator: runtime/paging.py):
     blank_paged_caches(max_slots, cache_len, *, page_size, num_pages)
     insert_paged(pcaches, caches1, b, page_row)
     decode_paged(params, tokens, pos, page_table, pcaches)
+    decode_paged_sampled(..., temp, top_k, top_p, keys)
 
 Paged layout: pageable leaves (core.model.cache_pageable_tree) swap their
 (batch, seq) axes for (num_pages + 1, page_size) — page num_pages is the
@@ -33,12 +37,47 @@ from repro.kernels import ops as KOPS
 from repro.parallel import tp as TP
 from repro.parallel.collectives import MODEL_AXIS
 from repro.parallel.layout import REPLICATED
+from repro.runtime import sampling as RS
 
 
 def _map_paged(flags, fn_paged, fn_dense, *trees):
     """tree.map over cache trees, dispatching on the pageable-flag tree."""
     return jax.tree.map(
         lambda f, *ls: fn_paged(*ls) if f else fn_dense(*ls), flags, *trees)
+
+
+def _sim_full_logits(cfg, lg):
+    """Assemble vocab-parallel shard logits (tp, B, Vl) -> full (B, V)."""
+    b = lg.shape[1]
+    full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
+    return full[:, : cfg.vocab_size]
+
+
+def _drive_chunked_prefill(step, caches, tokens, lengths, chunk):
+    """Host loop shared by both engines' prefill_chunked: right-pad the
+    batch to a chunk multiple, feed chunks through `step(toks, start,
+    lengths, caches)`, and keep each row's final-token logits from the
+    chunk containing its lengths-1 (rows finish in different chunks for
+    ragged batches)."""
+    lengths = np.asarray(lengths)
+    s_real = int(lengths.max())
+    n = max(1, -(-s_real // chunk))
+    toks = np.zeros((tokens.shape[0], n * chunk), np.int32)
+    m = min(tokens.shape[1], n * chunk)
+    toks[:, :m] = np.asarray(tokens)[:, :m]
+    ln = jnp.asarray(lengths, jnp.int32)
+    final_chunk = (lengths - 1) // chunk
+    logits = None
+    for i in range(n):
+        lg, caches = step(jnp.asarray(toks[:, i * chunk:(i + 1) * chunk]),
+                          jnp.int32(i * chunk), ln, caches)
+        if logits is None:
+            logits = np.asarray(lg).copy()
+        else:
+            sel = final_chunk == i
+            if sel.any():
+                logits[sel] = np.asarray(lg)[sel]
+    return jnp.asarray(logits), caches
 
 
 class SimEngine:
@@ -49,6 +88,8 @@ class SimEngine:
         self._chunk_c = {}
         self._decode_c = {}
         self._decode_paged_c = {}
+        self._decode_sampled = None
+        self._decode_paged_sampled = None
         self._insert_paged = None
 
     # ---- cache layout: split form, leading (tp, ...) axis per leaf ----
@@ -114,9 +155,7 @@ class SimEngine:
             def fn(p, toks, ln, emb):
                 lg, caches = jax.vmap(per_shard, in_axes=(0, None, None, None),
                                       axis_name=MODEL_AXIS)(p, toks, ln, emb)
-                b = lg.shape[1]
-                full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
-                return full[:, : cfg.vocab_size], caches
+                return _sim_full_logits(cfg, lg), caches
             self._prefill_c[key] = jax.jit(fn)
         return self._prefill_c[key](params, tokens, lengths, embeds)
 
@@ -144,49 +183,35 @@ class SimEngine:
                 lg, ncs = jax.vmap(per_shard,
                                    in_axes=(0, None, None, None, 0),
                                    axis_name=MODEL_AXIS)(p, toks, st, ln, cs)
-                b = lg.shape[1]
-                full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
-                return full[:, : cfg.vocab_size], ncs
+                return _sim_full_logits(cfg, lg), ncs
             self._chunk_c[key] = jax.jit(fn, donate_argnums=(4,))
         step = self._chunk_c[key]
-        lengths = np.asarray(lengths)
-        s_real = int(lengths.max())
-        n = max(1, -(-s_real // chunk))
-        toks = np.zeros((tokens.shape[0], n * chunk), np.int32)
-        m = min(tokens.shape[1], n * chunk)
-        toks[:, :m] = np.asarray(tokens)[:, :m]
-        caches = self.blank_caches(tokens.shape[0], cache_len)
-        ln = jnp.asarray(lengths, jnp.int32)
-        # each row's final-token logits come from the chunk containing its
-        # lengths-1 (rows finish in different chunks for ragged batches)
-        final_chunk = (lengths - 1) // chunk
-        logits = None
-        for i in range(n):
-            lg, caches = step(params,
-                              jnp.asarray(toks[:, i * chunk:(i + 1) * chunk]),
-                              jnp.int32(i * chunk), ln, caches)
-            if logits is None:
-                logits = np.asarray(lg).copy()
-            else:
-                sel = final_chunk == i
-                if sel.any():
-                    logits[sel] = np.asarray(lg)[sel]
-        return jnp.asarray(logits), caches
+        return _drive_chunked_prefill(
+            lambda t, st, ln, cs: step(params, t, st, ln, cs),
+            self.blank_caches(tokens.shape[0], cache_len),
+            tokens, lengths, chunk)
+
+    def _dense_decode_math(self):
+        """Shared dense decode body -> (full logits (B, V), new caches);
+        greedy/logits/sampled variants differ only in token selection."""
+        cfg, plan, tp = self.cfg, self.plan, self.tp
+
+        def per_shard(p, toks, ps, cs):
+            return M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
+
+        def math(p, toks, ps, cs):
+            lg, ncs = jax.vmap(per_shard, in_axes=(0, None, None, 0),
+                               axis_name=MODEL_AXIS)(p, toks, ps, cs)
+            return _sim_full_logits(cfg, lg), ncs
+        return math
 
     def _decode_fn(self, with_logits: bool):
         if with_logits not in self._decode_c:
-            cfg, plan, tp = self.cfg, self.plan, self.tp
-
-            def per_shard(p, toks, ps, cs):
-                return M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
+            math = self._dense_decode_math()
 
             def fn(p, toks, ps, cs):
-                lg, ncs = jax.vmap(per_shard, in_axes=(0, None, None, 0),
-                                   axis_name=MODEL_AXIS)(p, toks, ps, cs)
-                b = lg.shape[1]
-                full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
-                full = full[:, : cfg.vocab_size]
-                nxt = jnp.argmax(full, -1)[:, None].astype(jnp.int32)
+                full, ncs = math(p, toks, ps, cs)
+                nxt = RS.greedy_tokens(full)[:, None]
                 if with_logits:
                     return nxt, full, ncs
                 return nxt, ncs
@@ -199,34 +224,55 @@ class SimEngine:
     def decode_with_logits(self, params, tokens, pos, caches):
         return self._decode_fn(True)(params, tokens, pos, caches)
 
+    def decode_sampled(self, params, tokens, pos, caches, temperature,
+                       top_k, top_p, keys):
+        """Decode with the jitted sampling step fused in (per-request
+        temperature / top-k / top-p / key; temp <= 0 rows are greedy)."""
+        if self._decode_sampled is None:
+            math = self._dense_decode_math()
+
+            def fn(p, toks, ps, cs, t, k, pp, keys):
+                full, ncs = math(p, toks, ps, cs)
+                return RS.sample_core(full, t, k, pp, keys)[:, None], ncs
+            self._decode_sampled = jax.jit(fn)
+        return self._decode_sampled(params, tokens, pos, caches,
+                                    temperature, top_k, top_p, keys)
+
+    def _paged_decode_math(self):
+        """Shared paged decode body (gather pages -> dense decode ->
+        scatter the written token) -> (full logits, new paged caches)."""
+        cfg, plan, tp = self.cfg, self.plan, self.tp
+        flags = M.cache_pageable_tree(cfg, plan)
+
+        def per_shard(p, toks, ps, cs):
+            return M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
+
+        def math(p, toks, ps, pt, pc):
+            dense = _map_paged(
+                flags,
+                lambda c: jax.vmap(KOPS.gather_pages,
+                                   in_axes=(0, None))(c, pt),
+                lambda c: c, pc)
+            lg, new_dense = jax.vmap(per_shard,
+                                     in_axes=(0, None, None, 0),
+                                     axis_name=MODEL_AXIS)(p, toks, ps,
+                                                           dense)
+            pc2 = _map_paged(
+                flags,
+                lambda c, nd: jax.vmap(KOPS.scatter_token_page,
+                                       in_axes=(0, 0, None, None))(
+                    c, nd, pt, ps),
+                lambda c, nd: nd, pc, new_dense)
+            return _sim_full_logits(cfg, lg), pc2
+        return math
+
     def _decode_paged_fn(self, with_logits: bool):
         if with_logits not in self._decode_paged_c:
-            cfg, plan, tp = self.cfg, self.plan, self.tp
-            flags = M.cache_pageable_tree(cfg, plan)
-
-            def per_shard(p, toks, ps, cs):
-                return M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
+            math = self._paged_decode_math()
 
             def fn(p, toks, ps, pt, pc):
-                dense = _map_paged(
-                    flags,
-                    lambda c: jax.vmap(KOPS.gather_pages,
-                                       in_axes=(0, None))(c, pt),
-                    lambda c: c, pc)
-                lg, new_dense = jax.vmap(per_shard,
-                                         in_axes=(0, None, None, 0),
-                                         axis_name=MODEL_AXIS)(p, toks, ps,
-                                                               dense)
-                pc2 = _map_paged(
-                    flags,
-                    lambda c, nd: jax.vmap(KOPS.scatter_token_page,
-                                           in_axes=(0, 0, None, None))(
-                        c, nd, pt, ps),
-                    lambda c, nd: nd, pc, new_dense)
-                b = lg.shape[1]
-                full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
-                full = full[:, : cfg.vocab_size]
-                nxt = jnp.argmax(full, -1)[:, None].astype(jnp.int32)
+                full, pc2 = math(p, toks, ps, pt, pc)
+                nxt = RS.greedy_tokens(full)[:, None]
                 if with_logits:
                     return nxt, full, pc2
                 return nxt, pc2
@@ -242,6 +288,20 @@ class SimEngine:
         return self._decode_paged_fn(True)(params, tokens, pos,
                                            page_table, pcaches)
 
+    def decode_paged_sampled(self, params, tokens, pos, page_table, pcaches,
+                             temperature, top_k, top_p, keys):
+        """Paged decode with the jitted sampling step fused in."""
+        if self._decode_paged_sampled is None:
+            math = self._paged_decode_math()
+
+            def fn(p, toks, ps, pt, pc, t, k, pp, keys):
+                full, pc2 = math(p, toks, ps, pt, pc)
+                return RS.sample_core(full, t, k, pp, keys)[:, None], pc2
+            self._decode_paged_sampled = jax.jit(fn, donate_argnums=(4,))
+        return self._decode_paged_sampled(params, tokens, pos, page_table,
+                                          pcaches, temperature, top_k,
+                                          top_p, keys)
+
 
 class ShardEngine:
     def __init__(self, cfg: ModelConfig, plan: SPDPlanConfig, mesh,
@@ -253,6 +313,8 @@ class ShardEngine:
         self._chunk_c = {}
         self._decode_c = {}
         self._decode_paged_c = {}
+        self._decode_sampled = None
+        self._decode_paged_sampled = None
         self._insert_paged = None
         self._c_pspecs = TP.cache_pspecs(cfg, plan, mesh)
         self._c_pspecs_rep = TP.cache_pspecs(cfg, plan, mesh,
@@ -351,30 +413,10 @@ class ShardEngine:
             self._chunk_c[key] = TP.build_prefill_chunk_step(
                 self.cfg, self.plan, self.mesh, q_chunk=self.q_chunk)
         step = self._chunk_c[key]
-        lengths = np.asarray(lengths)
-        s_real = int(lengths.max())
-        n = max(1, -(-s_real // chunk))
-        toks = np.zeros((tokens.shape[0], n * chunk), np.int32)
-        m = min(tokens.shape[1], n * chunk)
-        toks[:, :m] = np.asarray(tokens)[:, :m]
-        caches = self.blank_caches(tokens.shape[0], cache_len,
-                                   replicated=True)
-        ln = jnp.asarray(lengths, jnp.int32)
-        # each row's final-token logits come from the chunk containing its
-        # lengths-1 (rows finish in different chunks for ragged batches)
-        final_chunk = (lengths - 1) // chunk
-        logits = None
-        for i in range(n):
-            lg, caches = step(params,
-                              jnp.asarray(toks[:, i * chunk:(i + 1) * chunk]),
-                              jnp.int32(i * chunk), ln, caches)
-            if logits is None:
-                logits = np.asarray(lg).copy()
-            else:
-                sel = final_chunk == i
-                if sel.any():
-                    logits[sel] = np.asarray(lg)[sel]
-        return jnp.asarray(logits), caches
+        return _drive_chunked_prefill(
+            lambda t, st, ln, cs: step(params, t, st, ln, cs),
+            self.blank_caches(tokens.shape[0], cache_len, replicated=True),
+            tokens, lengths, chunk)
 
     def _decode_fn(self, with_logits: bool):
         if with_logits not in self._decode_c:
@@ -387,6 +429,15 @@ class ShardEngine:
 
     def decode_with_logits(self, params, tokens, pos, caches):
         return self._decode_fn(True)(params, tokens, pos, caches)
+
+    def decode_sampled(self, params, tokens, pos, caches, temperature,
+                       top_k, top_p, keys):
+        """See SimEngine.decode_sampled — same contract, shard_map'd."""
+        if self._decode_sampled is None:
+            self._decode_sampled = TP.build_decode_step(
+                self.cfg, self.plan, self.mesh, sampled=True)
+        return self._decode_sampled(params, tokens, pos, caches,
+                                    temperature, top_k, top_p, keys)
 
     def _decode_paged_fn(self, with_logits: bool):
         if with_logits not in self._decode_paged_c:
@@ -402,3 +453,14 @@ class ShardEngine:
                                  pcaches):
         return self._decode_paged_fn(True)(params, tokens, pos,
                                            page_table, pcaches)
+
+    def decode_paged_sampled(self, params, tokens, pos, page_table, pcaches,
+                             temperature, top_k, top_p, keys):
+        """See SimEngine.decode_paged_sampled — same contract,
+        shard_map'd."""
+        if self._decode_paged_sampled is None:
+            self._decode_paged_sampled = TP.build_paged_decode_step(
+                self.cfg, self.plan, self.mesh, sampled=True)
+        return self._decode_paged_sampled(params, tokens, pos, page_table,
+                                          pcaches, temperature, top_k,
+                                          top_p, keys)

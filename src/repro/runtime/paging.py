@@ -25,7 +25,8 @@ dense per-slot — see `core.model.cache_pageable_tree`.
 table + per-slot token counts); the device-side gather/scatter companions
 live in `kernels.ops` and the engine wiring in `runtime.engines`.  The
 scheduler that drives it (admission by free pages, preemption-by-eviction)
-is `runtime.server.PagedServer` — see docs/serving.md for the full design.
+is the unified `repro.api.scheduler.Scheduler` in paged mode — see
+docs/serving.md for the full design.
 """
 from __future__ import annotations
 

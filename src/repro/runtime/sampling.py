@@ -1,0 +1,86 @@
+"""Jitted token sampling: the single sampling step behind every decode.
+
+The serving stack used to hard-code greedy ``argmax`` in four places
+(both engines' decode paths and both servers' admission paths).  All of
+them now route through this module so one implementation honors the
+public ``repro.api.SamplingParams`` contract:
+
+  * ``temperature <= 0`` — greedy (exact ``argmax`` over the full vocab,
+    lowest index on ties, bit-identical to the old hardcoded sites);
+  * ``temperature > 0`` — softmax sampling at that temperature;
+  * ``top_k > 0``       — restrict to the k highest-logit tokens first;
+  * ``top_p < 1``       — nucleus filtering on the *scaled* distribution
+    (smallest prefix of descending probabilities covering ``top_p``; the
+    most likely token is always kept);
+  * per-request determinism — the PRNG key is ``fold_in(PRNGKey(seed),
+    n_generated)``, so a request's stream depends only on its seed and
+    position, never on batch composition, scheduling order, or
+    preemption/recompute history.
+
+Everything here is layout-neutral (plain ``(B, V)`` fp32 logits), so the
+same core runs inside ``vmap`` (SimEngine), inside ``shard_map``
+(ShardEngine, after the vocab all-gather), and standalone on the host at
+admission time (``sample_tokens``).  Stop tokens and ``max_new`` are
+host-side bookkeeping in the scheduler, not part of the kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_tokens(logits):
+    """Greedy next token per row: (B, V) -> (B,) int32 (first max wins)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_core(logits, temperature, top_k, top_p, keys):
+    """Traceable per-row sampling step.
+
+    logits       (B, V)  any float dtype (cast to fp32)
+    temperature  (B,)    fp32; <= 0 selects greedy for that row
+    top_k        (B,)    int32; 0 disables top-k
+    top_p        (B,)    fp32; >= 1 disables nucleus filtering
+    keys         (B, 2)  uint32 raw PRNG keys (see make_keys)
+    returns      (B,)    int32 token ids
+    """
+
+    def one(lg, t, k, p, key):
+        lg = lg.astype(jnp.float32)
+        v = lg.shape[-1]
+        t_s = jnp.maximum(t, 1e-6)
+        # ONE full-vocab sort serves both filters: top-k reads the k-th
+        # largest logit, and — since softmax is monotone — the sorted
+        # probabilities are the softmax of the sorted filtered logits.
+        desc = jnp.sort(lg)[::-1]
+        kth = desc[jnp.clip(k - 1, 0, v - 1)]
+        desc_scaled = jnp.where((k > 0) & (desc < kth), -jnp.inf, desc) / t_s
+        ps = jax.nn.softmax(desc_scaled)           # descending probs
+        # top-p (nucleus): keep the smallest descending-probability
+        # prefix whose mass reaches p; the top token is always kept
+        # (cum - prob < p holds for it).  The cutoff is carried back as
+        # a LOGIT threshold: `scaled` below is the exact same multiset
+        # of floats as `desc_scaled`, so the comparison is bit-robust
+        # (a probability threshold would wobble by ULPs because the two
+        # softmax normalizers sum in different orders).
+        keep = (jnp.cumsum(ps) - ps) < p
+        thr = jnp.min(jnp.where(keep, desc_scaled, jnp.inf))
+        scaled = jnp.where((k > 0) & (lg < kth), -jnp.inf, lg) / t_s
+        scaled = jnp.where(scaled < thr, -jnp.inf, scaled)
+        samp = jax.random.categorical(key, scaled)
+        return jnp.where(t <= 0.0, jnp.argmax(lg, -1), samp).astype(jnp.int32)
+
+    return jax.vmap(one)(logits, temperature, top_k, top_p, keys)
+
+
+# Host-side entry (admission-time first token; B is typically 1).
+sample_tokens = jax.jit(sample_core)
+
+
+@jax.jit
+def make_keys(seeds, counts):
+    """Per-row raw PRNG keys: fold the generated-token count into the
+    request seed.  seeds (B,) int32, counts (B,) int32 -> (B, 2) uint32."""
+    return jax.vmap(
+        lambda s, c: jax.random.fold_in(jax.random.PRNGKey(s), c))(
+        seeds, counts)

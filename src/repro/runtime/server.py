@@ -1,306 +1,65 @@
-"""Batched inference servers: continuous batching, dense or paged KV.
+"""DEPRECATED serving entrypoints — use `repro.api` instead.
 
-Engine-agnostic: an Engine exposes
-    prefill(params, tokens (1, S)[, embeds]) -> (logits (1, V), caches)
-    decode(params, tokens (B, 1), pos (B,), caches) -> (next (B,1), caches)
-    blank_caches(batch, cache_len) -> zeroed cache pytree
-and the server handles request queueing, slot assignment, per-slot
-positions, EOS/max-token termination, and slot eviction.
+The dense `Server` and `PagedServer` that used to live here were
+collapsed into the single `repro.api.scheduler.Scheduler`, driven by a
+`CacheConfig` (dense is the `num_pages=None` degenerate case) and a
+pluggable KV-cache manager.  The classes below are thin constructor
+shims kept for backward compatibility: they build the same unified
+scheduler with the equivalent `CacheConfig`, produce bit-identical token
+streams under greedy decoding, and expose the historical attribute
+surface (`caches` / `pcaches` / `pool` / `n_preemptions` / `completed`).
 
-Two servers share that contract:
+New code should do:
 
-  * `Server` — the dense baseline: one fixed-length cache per slot,
-    admission limited by `max_batch`.  Prompts are bucketed to
-    power-of-two lengths to bound recompilation.
-  * `PagedServer` — paged KV cache (runtime/paging.py): slots hold page
-    tables into a shared page pool, admission is limited by FREE PAGES,
-    and pool exhaustion preempts the latest-admitted request
-    (recompute-style eviction).  Optional chunked prefill replaces
-    power-of-two buckets with a single fixed-chunk compilation.
+    from repro.api import LLM, SamplingParams          # the facade
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim")
+    outs = llm.generate(prompts, SamplingParams(max_new=16))
 
-Two engines implement the interface: SimEngine (vmap, 1 CPU device) and
-ShardEngine (shard_map over a real mesh) — runtime/engines.py.  The full
-design (page layout, admission rules, preemption policy, diagrams) is in
-docs/serving.md.
+or, when driving an engine directly:
+
+    from repro.api import CacheConfig, Scheduler
+    sched = Scheduler(engine, params, CacheConfig(cache_len=128,
+                                                  max_batch=4))
 """
 from __future__ import annotations
 
-import math
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.api.scheduler import (CacheConfig, InvalidRequestError, Request,
+                                 Scheduler)
 
-from repro.runtime.paging import PagePool
+__all__ = ["Server", "PagedServer", "Request", "Scheduler", "CacheConfig",
+           "InvalidRequestError"]
 
 
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray              # (S,) int32
-    max_new: int = 16
-    eos: int = -1                   # -1 => never
-    out: List[int] = field(default_factory=list)
-    done: bool = False
-    n_preempted: int = 0
+def _deprecated(old: str):
+    warnings.warn(
+        f"repro.runtime.server.{old} is deprecated; use repro.api.LLM / "
+        "repro.api.Scheduler(engine, params, CacheConfig(...)) instead",
+        DeprecationWarning, stacklevel=3)
 
 
-def _bucket(n: int, minimum: int = 16) -> int:
-    return max(minimum, 1 << math.ceil(math.log2(max(n, 1))))
+class Server(Scheduler):
+    """Deprecated alias: dense continuous batching (fixed per-slot
+    caches).  Use `repro.api.Scheduler` with a dense `CacheConfig`."""
 
-
-class Server:
     def __init__(self, engine, params, *, max_batch: int, cache_len: int):
-        self.engine = engine
-        self.params = params
-        self.max_batch = max_batch
-        self.cache_len = cache_len
-        self.queue: deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.pos = np.zeros(max_batch, np.int32)
-        self.cur = np.zeros((max_batch, 1), np.int32)
-        self.caches = engine.blank_caches(max_batch, cache_len)
-        self.completed: Dict[int, Request] = {}
-
-    # ---------------- request lifecycle ----------------
-
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _admit(self):
-        for b in range(self.max_batch):
-            if self.slots[b] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            s = len(req.prompt)
-            sb = _bucket(s)
-            toks = np.zeros((1, sb), np.int32)
-            toks[0, :s] = req.prompt           # right-pad; exact: decode
-            # starts at pos=s and overwrites pad slots before they are
-            # ever causally visible (see M.prefill docstring).
-            logits, caches1 = self.engine.prefill(
-                self.params, jnp.asarray(toks), cache_len=self.cache_len,
-                lengths=jnp.asarray([s], jnp.int32))
-            first = int(np.argmax(np.asarray(logits)[0]))
-            req.out.append(first)
-            self.slots[b] = req
-            self.pos[b] = s
-            self.cur[b, 0] = first
-            self.caches = self.engine.insert_slot(self.caches, caches1, b)
-            if first == req.eos or len(req.out) >= req.max_new:
-                self._evict(b)          # done at admission (max_new=1/EOS)
-
-    def _evict(self, b: int):
-        req = self.slots[b]
-        req.done = True
-        self.completed[req.uid] = req
-        self.slots[b] = None
-        self.pos[b] = 0
-
-    # ---------------- main loop ----------------
-
-    def step(self):
-        """One decode step for all active slots."""
-        self._admit()
-        active = [b for b in range(self.max_batch) if self.slots[b] is not None]
-        if not active:
-            return False
-        nxt, self.caches = self.engine.decode(
-            self.params, jnp.asarray(self.cur), jnp.asarray(self.pos),
-            self.caches)
-        nxt = np.asarray(nxt)
-        for b in active:
-            req = self.slots[b]
-            tok = int(nxt[b, 0])
-            req.out.append(tok)
-            self.pos[b] += 1
-            self.cur[b, 0] = tok
-            if tok == req.eos or len(req.out) >= req.max_new:
-                self._evict(b)
-        return True
-
-    def run(self, max_steps: int = 10_000):
-        steps = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and steps < max_steps:
-            if not self.step():
-                break
-            steps += 1
-        return self.completed
+        _deprecated("Server")
+        super().__init__(engine, params,
+                         CacheConfig(cache_len=cache_len,
+                                     max_batch=max_batch))
 
 
-class PagedServer:
-    """Continuous batching over a paged KV cache (docs/serving.md).
-
-    Admission: the queue head is admitted when a slot is free AND the
-    pool can supply pages for its prompt plus one decode token (head-of-
-    line blocking keeps FIFO fairness).  Growth: before each decode step
-    every active slot must own the page covering the position it is about
-    to write; when the pool is exhausted the LATEST-admitted active slot
-    is preempted — its pages are freed and the request requeued at the
-    front, keeping its generated tokens.  On re-admission it prefills
-    over prompt+output (recompute-style eviction), so the earliest-
-    admitted request always makes progress and every request completes.
-
-    `submit` rejects requests that could never run even with the whole
-    pool to themselves (prompt + max_new exceeding pool or per-slot
-    capacity).
-    """
+class PagedServer(Scheduler):
+    """Deprecated alias: continuous batching over the paged KV cache.
+    Use `repro.api.Scheduler` with a paged `CacheConfig`."""
 
     def __init__(self, engine, params, *, max_slots: int, cache_len: int,
-                 page_size: int, num_pages: int,
-                 prefill_chunk: Optional[int] = None):
-        assert cache_len % page_size == 0, (cache_len, page_size)
-        self.engine = engine
-        self.params = params
-        self.max_slots = max_slots
-        self.cache_len = cache_len
-        self.prefill_chunk = prefill_chunk
-        self.pool = PagePool(num_pages=num_pages, page_size=page_size,
-                             max_slots=max_slots,
-                             pages_per_slot=cache_len // page_size)
-        self.queue: deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * max_slots
-        self.pos = np.zeros(max_slots, np.int32)
-        self.cur = np.zeros((max_slots, 1), np.int32)
-        self.admit_seq = np.zeros(max_slots, np.int64)
-        self._seq = 0
-        self.pcaches = engine.blank_paged_caches(
-            max_slots, cache_len, page_size=page_size, num_pages=num_pages)
-        self.completed: Dict[int, Request] = {}
-        self.n_preemptions = 0
-
-    # ---------------- request lifecycle ----------------
-
-    def submit(self, req: Request):
-        total = len(req.prompt) + req.max_new
-        if total > self.cache_len or not self.pool.fits_alone(total):
-            raise ValueError(
-                f"request {req.uid}: prompt+max_new={total} exceeds pool "
-                f"capacity ({self.pool.num_pages} pages x "
-                f"{self.pool.page_size} tokens, cache_len={self.cache_len})")
-        self.queue.append(req)
-
-    @staticmethod
-    def _resume_tokens(req: Request) -> np.ndarray:
-        """Prompt plus already-generated tokens (recompute after preempt)."""
-        if not req.out:
-            return np.asarray(req.prompt, np.int32)
-        return np.concatenate([np.asarray(req.prompt, np.int32),
-                               np.asarray(req.out, np.int32)])
-
-    def _prefill(self, toks: np.ndarray, s: int):
-        if (self.prefill_chunk
-                and hasattr(self.engine, "prefill_chunked")):
-            return self.engine.prefill_chunked(
-                self.params, jnp.asarray(toks[None]),
-                cache_len=self.cache_len, lengths=np.asarray([s]),
-                chunk=self.prefill_chunk)
-        sb = _bucket(s)
-        padded = np.zeros((1, sb), np.int32)
-        padded[0, :s] = toks
-        return self.engine.prefill(
-            self.params, jnp.asarray(padded), cache_len=self.cache_len,
-            lengths=jnp.asarray([s], jnp.int32))
-
-    def _admit(self):
-        for b in range(self.max_slots):
-            if not self.queue:
-                break
-            if self.slots[b] is not None:
-                continue
-            req = self.queue[0]
-            toks = self._resume_tokens(req)
-            s = len(toks)
-            # pages for the prompt + the first decode write at position s
-            if not self.pool.grow(b, s + 1):
-                break          # head-of-line: wait for pages, stay FIFO
-            self.queue.popleft()
-            logits, caches1 = self._prefill(toks, s)
-            first = int(np.argmax(np.asarray(logits)[0]))
-            req.out.append(first)
-            self.slots[b] = req
-            self.pos[b] = s
-            self.cur[b, 0] = first
-            self.admit_seq[b] = self._seq
-            self._seq += 1
-            self.pcaches = self.engine.insert_paged(
-                self.pcaches, caches1, b, self.pool.table[b])
-            if first == req.eos or len(req.out) >= req.max_new:
-                self._finish(b)
-
-    def _finish(self, b: int):
-        req = self.slots[b]
-        req.done = True
-        self.completed[req.uid] = req
-        self.slots[b] = None
-        self.pos[b] = 0
-        self.pool.release(b)
-
-    def _preempt_one(self, keep: int) -> Optional[int]:
-        """Evict the latest-admitted active slot (other than `keep` when
-        possible); its request requeues at the front with output kept."""
-        cands = [b for b in range(self.max_slots)
-                 if self.slots[b] is not None and b != keep]
-        if not cands:
-            cands = [keep] if self.slots[keep] is not None else []
-        if not cands:
-            return None
-        v = max(cands, key=lambda b: self.admit_seq[b])
-        req = self.slots[v]
-        req.n_preempted += 1
-        self.pool.release(v)
-        self.slots[v] = None
-        self.pos[v] = 0
-        self.queue.appendleft(req)
-        self.n_preemptions += 1
-        return v
-
-    # ---------------- main loop ----------------
-
-    def step(self):
-        """One decode step for all active slots."""
-        self._admit()
-        active = [b for b in range(self.max_slots)
-                  if self.slots[b] is not None]
-        if not active:
-            return False
-        # growth: each slot writes position pos[b] this step — make sure
-        # its page exists, preempting latest-admitted slots when the pool
-        # is dry (oldest slots grow first, so they are never starved).
-        for b in sorted(active, key=lambda b: self.admit_seq[b]):
-            if self.slots[b] is None:      # preempted by an earlier slot
-                continue
-            while not self.pool.grow(b, int(self.pos[b]) + 1):
-                v = self._preempt_one(keep=b)
-                if v is None or v == b:
-                    break
-        active = [b for b in range(self.max_slots)
-                  if self.slots[b] is not None]
-        if not active:
-            return bool(self.queue)
-        nxt, self.pcaches = self.engine.decode_paged(
-            self.params, jnp.asarray(self.cur), jnp.asarray(self.pos),
-            jnp.asarray(self.pool.table), self.pcaches)
-        nxt = np.asarray(nxt)
-        for b in active:
-            req = self.slots[b]
-            tok = int(nxt[b, 0])
-            req.out.append(tok)
-            self.pos[b] += 1
-            self.cur[b, 0] = tok
-            if tok == req.eos or len(req.out) >= req.max_new:
-                self._finish(b)
-        return True
-
-    def run(self, max_steps: int = 10_000):
-        steps = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and steps < max_steps:
-            if not self.step():
-                break
-            steps += 1
-        return self.completed
+                 page_size: int, num_pages: int, prefill_chunk=None):
+        _deprecated("PagedServer")
+        super().__init__(engine, params,
+                         CacheConfig(cache_len=cache_len,
+                                     max_batch=max_slots,
+                                     page_size=page_size,
+                                     num_pages=num_pages,
+                                     prefill_chunk=prefill_chunk))
