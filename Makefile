@@ -2,10 +2,19 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke example-smoke
+.PHONY: test test-cov test-soak lint bench-smoke example-smoke
 
 test:
 	$(PY) -m pytest -x -q
+
+# tier-1 suite with a coverage report (CI uses this; needs pytest-cov)
+test-cov:
+	$(PY) -m pytest -q --cov=repro --cov-report=term \
+	    --cov-report=xml:coverage.xml
+
+# scheduler property soak with a larger hypothesis example budget
+test-soak:
+	SOAK_EXAMPLES=200 $(PY) -m pytest -q tests/test_scheduler_soak.py
 
 lint:
 	$(PY) -m compileall -q src benchmarks examples tests scripts

@@ -35,6 +35,38 @@ def ring_all_reduce_time(payload_bytes: float, n: int, bw: float) -> float:
     return 2.0 * (n - 1) / n * payload_bytes / bw
 
 
+def collective_wire_bytes(op: str, payload_bytes: float, n: int) -> float:
+    """Bytes a single device puts on the wire for one logical collective,
+    under the ring algorithms, given the LEDGER's payload convention
+    (parallel/collectives.py): all-reduce and reduce-scatter log the full
+    per-device operand; all-gather logs the per-device SLICE input."""
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n * payload_bytes
+    if op == "reduce-scatter":
+        return (n - 1) / n * payload_bytes
+    if op == "all-gather":
+        return (n - 1) * payload_bytes
+    if op == "collective-permute":
+        return payload_bytes
+    raise ValueError(f"unknown collective op {op!r}")
+
+
+def ledger_wire_bytes(ledger, n: int) -> float:
+    """Total per-device ring-wire bytes for a trace-time ledger capture —
+    THE analytic transfer quantity (reads every op the ledger recorded,
+    so quantized syncs, which log as reduce-scatter + all-gather pairs,
+    are accounted at their true low-bit payloads instead of being
+    re-derived from activation shapes)."""
+    return sum(collective_wire_bytes(op, b, n) for op, _, b in ledger)
+
+
+def ledger_time(ledger, n: int, bw: float) -> float:
+    """Ring wall time of every ledger collective at link bandwidth bw."""
+    return ledger_wire_bytes(ledger, n) / bw
+
+
 def train_reduced(arch="smollm-360m", steps=80, tp=2, seed=0, seq=48,
                   batch=8, lr=3e-3):
     """Train (or load cached) a reduced model on the synthetic corpus."""

@@ -1,0 +1,57 @@
+"""Regenerate the golden greedy token traces under results/golden/.
+
+Run only when an INTENTIONAL numerics change lands (and say so in the
+commit): tests/test_golden_trace.py locks both engines' generate output
+against these files so refactors can't silently shift numerics.
+
+    PYTHONPATH=src python scripts/make_golden.py
+"""
+import json
+import os
+
+import numpy as np
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "golden")
+
+SPEC = {
+    "arch": "smollm-360m-reduced",
+    "dtype": "float32",
+    "tp": 2,
+    "spd": 0.25,
+    "cache_len": 48,
+    "max_new": 8,
+    "seed": 0,
+    "prompt_seed": 123,
+    "n_prompts": 4,
+}
+
+
+def prompts_for(spec, vocab):
+    rng = np.random.default_rng(spec["prompt_seed"])
+    return [rng.integers(0, vocab, int(n)).astype(np.int32)
+            for n in rng.integers(4, 14, spec["n_prompts"])]
+
+
+def main():
+    from repro.api import LLM, SamplingParams
+
+    llm = LLM.load(SPEC["arch"], tp=SPEC["tp"], engine="sim",
+                   dtype=SPEC["dtype"], spd=SPEC["spd"],
+                   cache_len=SPEC["cache_len"], seed=SPEC["seed"])
+    prompts = prompts_for(SPEC, llm.cfg.vocab_size)
+    outs = llm.generate(prompts, SamplingParams(max_new=SPEC["max_new"]))
+    rec = dict(SPEC)
+    rec["prompts"] = [[int(t) for t in p] for p in prompts]
+    rec["tokens"] = [o.token_ids for o in outs]
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    path = os.path.join(GOLDEN_DIR, f"{SPEC['arch']}_greedy.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print("wrote", path)
+    for p, t in zip(rec["prompts"], rec["tokens"]):
+        print(p, "->", t)
+
+
+if __name__ == "__main__":
+    main()

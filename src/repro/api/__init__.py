@@ -17,10 +17,11 @@ from repro.api.scheduler import (CacheConfig, DenseKVCacheManager,
                                  InvalidRequestError, PagedKVCacheManager,
                                  Request, Scheduler, SchedulerError)
 from repro.api.llm import LLM
+from repro.config.base import CommPolicy, SPDPlanConfig
 
 __all__ = [
     "LLM", "SamplingParams", "RequestOutput", "StreamEvent",
-    "CacheConfig", "Scheduler", "Request",
+    "CacheConfig", "Scheduler", "Request", "CommPolicy", "SPDPlanConfig",
     "DenseKVCacheManager", "PagedKVCacheManager",
     "InvalidRequestError", "SchedulerError",
 ]

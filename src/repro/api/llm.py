@@ -33,7 +33,26 @@ import numpy as np
 from repro.api.outputs import RequestOutput, StreamEvent
 from repro.api.sampling import SamplingParams
 from repro.api.scheduler import CacheConfig, Request, Scheduler
-from repro.config.base import ModelConfig, SPDPlanConfig, replace
+from repro.config.base import (CommPolicy, ModelConfig, SPDPlanConfig,
+                               SYNC_LEVELS, replace)
+
+
+def _resolve_comm(comm, n_layers: int,
+                  logits: str = "exact") -> Optional[CommPolicy]:
+    """None | CommPolicy | level string -> CommPolicy (None = all exact;
+    a None/"exact" comm still honors a non-exact `logits` level)."""
+    if isinstance(comm, CommPolicy):
+        return comm
+    if comm is None:
+        comm = "exact"
+    if isinstance(comm, str):
+        if comm not in SYNC_LEVELS:
+            raise ValueError(f"comm={comm!r}: expected a CommPolicy or one "
+                             f"of {SYNC_LEVELS}")
+        if comm == "exact" and logits == "exact":
+            return None
+        return CommPolicy.uniform(n_layers, comm, logits=logits)
+    raise TypeError(f"comm must be None, a str, or CommPolicy: {comm!r}")
 
 
 def _as_prompts(prompts) -> List[np.ndarray]:
@@ -87,6 +106,7 @@ class LLM:
     @classmethod
     def load(cls, arch, *, tp: int = 1, dp: int = 1, engine: str = "sim",
              spd: float = 0.0, plan: Optional[SPDPlanConfig] = None,
+             comm=None, comm_logits: str = "exact",
              page_size: Optional[int] = None,
              num_pages: Optional[int] = None,
              prefill_chunk: Optional[int] = None,
@@ -98,6 +118,15 @@ class LLM:
         spd        fraction of blocks to SPD-drop (first-k plan) —
                    ignored when an explicit `plan` is given; use
                    `apply_spd` for the paper's sensitivity-ranked plan.
+        comm       sync-point comm policy: a CommPolicy for per-block
+                   control, or a level string ("exact" | "quant8" |
+                   "quant4") applied uniformly to every kept sync;
+                   `comm_logits` sets the logits all-gather level for
+                   the string form.  When given (even "exact") it
+                   replaces any policy already attached to `plan`;
+                   None leaves the plan's policy in place.  See
+                   docs/comm.md and `apply_comm_policy` for the
+                   sensitivity-tiered assignment.
         params     canonical param tree (e.g. from training); a fresh
                    `init_model(PRNGKey(seed))` when omitted.
         page_size/num_pages select the paged KV cache for `serve()` /
@@ -117,6 +146,12 @@ class LLM:
         elif len(plan.drop_mask) != cfg.n_layers:
             raise ValueError(f"plan covers {len(plan.drop_mask)} layers, "
                              f"model has {cfg.n_layers}")
+        if comm is not None or comm_logits != "exact":
+            # an explicit comm (even "exact") replaces any policy the
+            # plan already carries; comm=None + comm_logits quantizes
+            # only the logits gather
+            plan = plan.with_comm(
+                _resolve_comm(comm, cfg.n_layers, comm_logits))
         if engine not in ("sim", "shard"):
             raise ValueError(f"unknown engine {engine!r} "
                              "(expected 'sim' or 'shard')")
@@ -295,3 +330,39 @@ class LLM:
         self.params = self._place(padded, padded=True)
         self._sched = None
         return report
+
+    # ---------------- sync-point comm policy ----------------
+
+    def apply_comm_policy(self, calib_batches, *, n_spd: int, tau1: float,
+                          tau2: float, sb_level: str = "quant8",
+                          esb_level: str = "exact", logits: str = "exact",
+                          q_chunk: Optional[int] = None):
+        """Sensitivity-aware per-block comm policy (docs/comm.md): run
+        the Algorithm-1 sensitivity sweep, then give each block the
+        cheapest sync it can afford — ISB blocks (within the `n_spd`
+        budget) DROP the attention sync, SB blocks keep it at
+        `sb_level` (int8 by default), ESB blocks at `esb_level` — and
+        run the logits all-gather at `logits`.  Zero-shot: no
+        distillation, canonical weights are re-placed under the new
+        plan+policy.
+
+        Returns the SensitivityResult; `self.plan.comm` holds the
+        assigned CommPolicy afterwards."""
+        from repro.core import spd as SPD
+
+        plan, res = SPD.assign_comm_policy(
+            self.cfg, self.canonical, calib_batches, self.tp,
+            n_spd=n_spd, tau1=tau1, tau2=tau2, sb_level=sb_level,
+            esb_level=esb_level, logits=logits,
+            q_chunk=q_chunk or self.q_chunk)
+        self.plan = plan
+        self._build_engine()
+        return res
+
+    def set_comm_policy(self, comm, *, logits: str = "exact"):
+        """Attach a CommPolicy (or uniform level string) to the current
+        plan and rebuild the engine in place (params re-placed — the
+        comm-refined segmentation restacks them)."""
+        policy = _resolve_comm(comm, self.cfg.n_layers, logits)
+        self.plan = self.plan.with_comm(policy)
+        self._build_engine()

@@ -267,14 +267,78 @@ SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
 MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
 
 
+# Quantization levels a kept sync point (or the logits all-gather) may run
+# at.  "drop" is not a level — dropping is the SPD plan's job (drop_mask);
+# the comm policy decides how much precision the syncs that REMAIN get.
+SYNC_LEVELS = ("exact", "quant8", "quant4")
+
+# user-facing per-block modes accepted by SPDPlanConfig.from_modes /
+# LLM.load(comm=...): the cross product of {keep, drop} x SYNC_LEVELS
+BLOCK_MODES = ("exact", "quant8", "quant4",
+               "drop", "drop+quant8", "drop+quant4")
+
+
+@dataclass(frozen=True)
+class CommPolicy:
+    """Per-block communication policy over the sync points SPD keeps.
+
+    SPD's binary plan decides WHICH attention-output syncs disappear;
+    `CommPolicy` decides how much precision every surviving collective
+    gets: `block_modes[i]` is the quantization level ("exact" | "quant8"
+    | "quant4") of block i's kept sync points (the MLP/MoE output
+    all-reduce, and the attention-output all-reduce when the block is
+    not dropped), and `logits_mode` the level of the final logits
+    all-gather.  Orthogonal to the drop mask by construction, so the two
+    compose: a block can be dropped AND have its one remaining sync run
+    int8 (cf. Flash Communication, arXiv:2412.04964; partial-sync TP,
+    arXiv:2506.19645).
+    """
+
+    block_modes: Tuple[str, ...]
+    logits_mode: str = "exact"
+
+    def __post_init__(self):
+        for m in self.block_modes:
+            if m not in SYNC_LEVELS:
+                raise ValueError(f"bad sync level {m!r} "
+                                 f"(expected one of {SYNC_LEVELS})")
+        if self.logits_mode not in SYNC_LEVELS:
+            raise ValueError(f"bad logits_mode {self.logits_mode!r} "
+                             f"(expected one of {SYNC_LEVELS})")
+
+    @property
+    def n_quantized(self) -> int:
+        return sum(m != "exact" for m in self.block_modes)
+
+    @staticmethod
+    def exact(n_layers: int) -> "CommPolicy":
+        return CommPolicy(tuple(["exact"] * n_layers))
+
+    @staticmethod
+    def uniform(n_layers: int, mode: str,
+                logits: str = "exact") -> "CommPolicy":
+        return CommPolicy(tuple([mode] * n_layers), logits_mode=logits)
+
+
 @dataclass(frozen=True)
 class SPDPlanConfig:
     """Which blocks drop their attention-output sync point.
 
     `drop_mask` is a tuple of per-layer booleans (True = SPD block).
+    `comm` (optional) attaches a per-block CommPolicy for the syncs the
+    plan keeps; None means every kept sync and the logits all-gather run
+    exact (the paper's setting).
     """
 
     drop_mask: Tuple[bool, ...]
+    comm: Optional[CommPolicy] = None
+
+    def __post_init__(self):
+        if (self.comm is not None
+                and len(self.comm.block_modes) != len(self.drop_mask)):
+            raise ValueError(
+                f"comm policy covers {len(self.comm.block_modes)} blocks, "
+                f"plan has {len(self.drop_mask)}")
 
     @property
     def n_dropped(self) -> int:
@@ -283,6 +347,57 @@ class SPDPlanConfig:
     @property
     def fraction(self) -> float:
         return self.n_dropped / max(len(self.drop_mask), 1)
+
+    # ---------------- comm-policy view ----------------
+
+    @property
+    def qmodes(self) -> Optional[Tuple[str, ...]]:
+        """Per-layer kept-sync levels, or None for all-exact (the extra
+        segmentation key consumed by layer_kinds.plan_segments)."""
+        return None if self.comm is None else self.comm.block_modes
+
+    @property
+    def logits_mode(self) -> str:
+        return "exact" if self.comm is None else self.comm.logits_mode
+
+    def block_mode(self, i: int) -> Optional[str]:
+        """Kept-sync level of block i; None defers to the trace-time
+        sync_compression context (collectives.py)."""
+        return None if self.comm is None else self.comm.block_modes[i]
+
+    def with_comm(self, comm: Optional[CommPolicy]) -> "SPDPlanConfig":
+        return SPDPlanConfig(self.drop_mask, comm)
+
+    @staticmethod
+    def from_modes(modes, logits: str = "exact") -> "SPDPlanConfig":
+        """Build a plan+policy from user-facing per-block modes
+        (BLOCK_MODES): "drop[+quantN]" drops the attention sync and runs
+        the surviving MLP sync at the given level; plain levels keep both
+        syncs at that level."""
+        drop, levels = [], []
+        for m in modes:
+            if m not in BLOCK_MODES:
+                raise ValueError(f"bad block mode {m!r} "
+                                 f"(expected one of {BLOCK_MODES})")
+            if m.startswith("drop"):
+                drop.append(True)
+                levels.append(m.split("+", 1)[1] if "+" in m else "exact")
+            else:
+                drop.append(False)
+                levels.append(m)
+        return SPDPlanConfig(tuple(drop),
+                             CommPolicy(tuple(levels), logits_mode=logits))
+
+    def modes(self):
+        """Inverse of from_modes: the user-facing per-block mode list."""
+        out = []
+        for d, m in zip(self.drop_mask,
+                        self.qmodes or ("exact",) * len(self.drop_mask)):
+            if d:
+                out.append("drop" if m == "exact" else f"drop+{m}")
+            else:
+                out.append(m)
+        return out
 
     @staticmethod
     def none(n_layers: int) -> "SPDPlanConfig":

@@ -824,8 +824,13 @@ def _ffn_partial(cfg, kind, p, u, axis, tp, shard_idx, *, divergent):
 
 
 def block_seq(cfg, kind, lay, p, x, pos, *, drop: bool, tp: int, shard_idx,
-              axis=MODEL_AXIS, want_cache=False, q_chunk=1024):
+              axis=MODEL_AXIS, want_cache=False, q_chunk=1024, comm=None):
     """Sequence-mode decoder block (train / prefill).
+
+    `comm` is the block's kept-sync level from its CommPolicy ("exact" |
+    "quant8" | "quant4"; None defers to the sync_compression context) —
+    it reaches every sync_output this block KEEPS, so a dropped block's
+    surviving MLP combine can still run low-bit.
 
     Returns (out (B,S,d), aux_loss, cache).
     """
@@ -835,19 +840,19 @@ def block_seq(cfg, kind, lay, p, x, pos, *, drop: bool, tp: int, shard_idx,
         h = column_entry(h, axis)
         part, cache = ssm_mixer_seq(cfg, p["ssm"], h, axis,
                                     want_cache=want_cache)
-        out = x + sync_output(part, axis)
+        out = x + sync_output(part, axis, mode=comm)
         return out, jnp.zeros((), jnp.float32), cache
 
     part, bo, cache = _mixer_seq(cfg, kind, p, x, pos, lay, axis,
                                  want_cache, q_chunk)
     if not drop:
-        y = sync_output(part, axis)
+        y = sync_output(part, axis, mode=comm)
         if bo is not None:
             y = y + bo
         u = x + y
         z, bd, aux = _ffn_partial(cfg, kind, p, u, axis, tp, shard_idx,
                                   divergent=False)
-        z = sync_output(z, axis)
+        z = sync_output(z, axis, mode=comm)
         if bd is not None:
             z = z + bd
         out = u + z
@@ -864,7 +869,8 @@ def block_seq(cfg, kind, lay, p, x, pos, *, drop: bool, tp: int, shard_idx,
         u_i = column_entry(x, axis) + y_i
         z_i, bd, aux = _ffn_partial(cfg, kind, p, u_i, axis, tp, shard_idx,
                                     divergent=True)
-        s = sync_output(z_i + part, axis)          # deferred residual: P_i only
+        # deferred residual: P_i only
+        s = sync_output(z_i + part, axis, mode=comm)
         out = x + s
         if bo is not None:
             out = out + bo                          # bias re-added once
@@ -874,18 +880,18 @@ def block_seq(cfg, kind, lay, p, x, pos, *, drop: bool, tp: int, shard_idx,
 
 
 def _wire_post_mixer(cfg, kind, p, x, part, bo, *, drop: bool, tp: int,
-                     shard_idx, axis):
+                     shard_idx, axis, comm=None):
     """TP/SPD post-mixer wiring shared by the cached paths (decode and
     chunked-prefill extension) — block_seq's Fig 3 wiring minus the aux
     plumbing.  x is the block input, `part` the shard-local mixer partial."""
     if not drop:
-        y = sync_output(part, axis)
+        y = sync_output(part, axis, mode=comm)
         if bo is not None:
             y = y + bo
         u = x + y
         z, bd, _ = _ffn_partial(cfg, kind, p, u, axis, tp, shard_idx,
                                 divergent=False)
-        z = sync_output(z, axis)
+        z = sync_output(z, axis, mode=comm)
         if bd is not None:
             z = z + bd
         return u + z
@@ -895,7 +901,7 @@ def _wire_post_mixer(cfg, kind, p, x, part, bo, *, drop: bool, tp: int,
     u_i = column_entry(x, axis) + y_i   # see block_seq note
     z_i, bd, _ = _ffn_partial(cfg, kind, p, u_i, axis, tp, shard_idx,
                               divergent=True)
-    s = sync_output(z_i + part, axis)
+    s = sync_output(z_i + part, axis, mode=comm)
     out = x + s
     if bo is not None:
         out = out + bo
@@ -905,13 +911,13 @@ def _wire_post_mixer(cfg, kind, p, x, part, bo, *, drop: bool, tp: int,
 
 
 def block_dec(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
-              shard_idx, axis=MODEL_AXIS):
+              shard_idx, axis=MODEL_AXIS, comm=None):
     """Decode-mode block: x (B,1,d), per-seq pos (B,). Returns (out, cache)."""
     if kind.mixer == "ssm":
         h = _norm(x, p["ln1"], cfg, shared=False, axis=axis)
         h = column_entry(h, axis)
         part, cache = ssm_mixer_dec(cfg, p["ssm"], h, cache, axis)
-        return x + sync_output(part, axis), cache
+        return x + sync_output(part, axis, mode=comm), cache
 
     h = _norm(x, p["ln1"], cfg, shared=False, axis=axis)
     h = column_entry(h, axis)
@@ -928,7 +934,7 @@ def block_dec(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
         raise ValueError(kind.mixer)
 
     out = _wire_post_mixer(cfg, kind, p, x, part, bo, drop=drop, tp=tp,
-                           shard_idx=shard_idx, axis=axis)
+                           shard_idx=shard_idx, axis=axis, comm=comm)
     return out, cache
 
 
@@ -968,7 +974,7 @@ def gqa_mixer_ext(cfg, kind, a, h, pos, cache, lay, axis, *, q_chunk=1024):
 
 
 def block_ext(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
-              shard_idx, axis=MODEL_AXIS, q_chunk=1024):
+              shard_idx, axis=MODEL_AXIS, q_chunk=1024, comm=None):
     """Chunked-prefill block: x (B,C,d), pos (B,C). Returns (out, cache)."""
     assert kind.mixer == "gqa" and kind.window == 0, kind
     h = _norm(x, p["ln1"], cfg, shared=False, axis=axis)
@@ -976,5 +982,6 @@ def block_ext(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
     part, cache = gqa_mixer_ext(cfg, kind, p["attn"], h, pos, cache, lay,
                                 axis, q_chunk=q_chunk)
     out = _wire_post_mixer(cfg, kind, p, x, part, p["attn"].get("bo"),
-                           drop=drop, tp=tp, shard_idx=shard_idx, axis=axis)
+                           drop=drop, tp=tp, shard_idx=shard_idx, axis=axis,
+                           comm=comm)
     return out, cache

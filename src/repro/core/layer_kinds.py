@@ -44,16 +44,28 @@ def layer_kinds(cfg: ModelConfig) -> Tuple[LayerKind, ...]:
     return tuple(kinds)
 
 
-def plan_segments(cfg: ModelConfig, drop_mask: Tuple[bool, ...]):
+def plan_segments(cfg: ModelConfig, drop_mask: Tuple[bool, ...],
+                  qmodes: Tuple[str, ...] = None):
     """Runs of consecutive layers sharing (kind, dropped):
-    [(start, length, kind, dropped)]."""
+    [(start, length, kind, dropped)].
+
+    `qmodes` (per-layer kept-sync quantization levels from an attached
+    CommPolicy — SPDPlanConfig.qmodes) adds segment boundaries wherever
+    the level changes, so every lax.scan body has a STATIC comm mode (the
+    trace-time collective ledger needs to know the wire precision of each
+    sync).  Everything structural (param stacking, cache trees, pspecs)
+    derives its segmentation from this one function, so passing the plan's
+    qmodes everywhere keeps the trees consistent."""
     kinds = layer_kinds(cfg)
     assert len(drop_mask) == cfg.n_layers
+    if qmodes is not None:
+        assert len(qmodes) == cfg.n_layers, (len(qmodes), cfg.n_layers)
     segs = []
     start = 0
     for i in range(1, cfg.n_layers + 1):
         if (i == cfg.n_layers or kinds[i] != kinds[start]
-                or drop_mask[i] != drop_mask[start]):
+                or drop_mask[i] != drop_mask[start]
+                or (qmodes is not None and qmodes[i] != qmodes[start])):
             segs.append((start, i - start, kinds[start], drop_mask[start]))
             start = i
     return segs

@@ -101,7 +101,7 @@ def model_specs(cfg: ModelConfig) -> dict:
 def stack_segments(padded: dict, cfg: ModelConfig,
                    plan: SPDPlanConfig) -> dict:
     """Padded per-layer list -> per-segment stacked trees."""
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     out = {k: v for k, v in padded.items() if k != "layers"}
     out["segs"] = []
     for (start, length, kind, dropped) in segs:
@@ -116,7 +116,7 @@ def unstack_segments(stacked: dict, cfg: ModelConfig,
     per-layer list.  (Result is PADDED canonical for the tp it was built
     with; it equals true canonical whenever head/vocab padding is trivial
     at that tp.)"""
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     layers = [None] * cfg.n_layers
     for seg_i, (start, length, kind, dropped) in enumerate(segs):
         sv = stacked["segs"][seg_i]
@@ -128,7 +128,7 @@ def unstack_segments(stacked: dict, cfg: ModelConfig,
 
 
 def stacked_specs(cfg: ModelConfig, plan: SPDPlanConfig) -> dict:
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     s = model_specs(cfg)
     out = {k: v for k, v in s.items() if k != "layers"}
     out["segs"] = [s["layers"][start] for (start, _, _, _) in segs]
@@ -154,6 +154,23 @@ def lm_logits(p, cfg, x, axis):
     x = column_entry(x, axis)
     w = p["emb"].T if cfg.tie_embeddings else p["head"]
     return (x @ w).astype(jnp.float32)
+
+
+def serve_logits(p, cfg, x, axis, plan):
+    """lm_logits for the SERVE paths (prefill/decode), honoring the comm
+    policy's `logits_mode`: with a quantized mode the shard-local slice
+    is put through the wire qdq and the final all-gather is ledger-logged
+    at quantized bytes.  Applying the qdq identically on every shard (in
+    both engines) keeps the gather-free greedy path and the full-gather
+    sampled path in lockstep.  The CE/loss path keeps raw lm_logits —
+    no gather happens there."""
+    lg = lm_logits(p, cfg, x, axis)
+    mode = plan.logits_mode if plan is not None else "exact"
+    if mode != "exact":
+        from repro.parallel.compression import (QUANT_BITS,
+                                                quantized_gather_payload)
+        lg = quantized_gather_payload(lg, axis, bits=QUANT_BITS[mode])
+    return lg
 
 
 def vocab_parallel_ce(logits, labels, mask, cfg, tp, axis, shard_idx):
@@ -224,7 +241,7 @@ def forward_seq(cfg, stacked, plan: SPDPlanConfig, tokens, *, tp, axis=MODEL_AXI
             pos_w = gather_leaf(pos_w, fsdp["pos"])
         x = x + pos_w[:s][None]
 
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     aux_total = jnp.zeros((), jnp.float32)
     caches = []
     li = 0
@@ -232,7 +249,8 @@ def forward_seq(cfg, stacked, plan: SPDPlanConfig, tokens, *, tp, axis=MODEL_AXI
         sp = stacked["segs"][seg_i]
 
         if dual_flags is None:
-            def body(xc, layer_p, kind=kind, dropped=dropped, seg_i=seg_i):
+            def body(xc, layer_p, kind=kind, dropped=dropped, seg_i=seg_i,
+                     comm=plan.block_mode(start)):
                 if fsdp is not None:
                     from repro.parallel.fsdp import gather_tree
                     layer_p = gather_tree(layer_p, fsdp["segs"][seg_i],
@@ -240,7 +258,7 @@ def forward_seq(cfg, stacked, plan: SPDPlanConfig, tokens, *, tp, axis=MODEL_AXI
                 out, aux, cache = B.block_seq(
                     cfg, kind, lay, layer_p, xc, pos, drop=dropped, tp=tp,
                     shard_idx=shard_idx, axis=axis, want_cache=want_cache,
-                    q_chunk=q_chunk)
+                    q_chunk=q_chunk, comm=comm)
                 return out, (aux, cache)
         else:
             flags = jax.lax.dynamic_slice_in_dim(dual_flags, start, length)
@@ -334,7 +352,7 @@ def prefill(cfg, stacked, plan, tokens, *, tp, axis=MODEL_AXIS, q_chunk=1024,
         idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
         xq = jnp.take_along_axis(x, idx[:, None, None].astype(jnp.int32)
                                  .repeat(x.shape[-1], -1), axis=1)
-    logits = lm_logits(stacked, cfg, xq, axis)[:, 0]
+    logits = serve_logits(stacked, cfg, xq, axis, plan)[:, 0]
     if cache_len:
         def pad_seq(c, seq_axis, target):
             cur = c.shape[seq_axis]
@@ -344,7 +362,7 @@ def prefill(cfg, stacked, plan, tokens, *, tp, axis=MODEL_AXIS, q_chunk=1024,
             pads[seq_axis] = (0, target - cur)
             return jnp.pad(c, pads)
 
-        segs = plan_segments(cfg, plan.drop_mask)
+        segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
         out = []
         for (start, length, kind, dropped), seg in zip(segs, caches):
             seg = dict(seg)
@@ -371,17 +389,18 @@ def decode_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
     x = embed_tokens(stacked["emb"], tokens, axis, shard_idx)
     if cfg.pos_emb == "learned":
         x = x + jnp.take(stacked["pos"], pos, axis=0)[:, None]
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     new_caches = []
     for seg_i, (start, length, kind, dropped) in enumerate(segs):
         sp = stacked["segs"][seg_i]
         cache_seg = caches[seg_i]
 
-        def body(xc, xs_i, kind=kind, dropped=dropped):
+        def body(xc, xs_i, kind=kind, dropped=dropped,
+                 comm=plan.block_mode(start)):
             layer_p, cache = xs_i
             out, new_cache = B.block_dec(
                 cfg, kind, lay, layer_p, xc, pos, cache, drop=dropped,
-                tp=tp, shard_idx=shard_idx, axis=axis)
+                tp=tp, shard_idx=shard_idx, axis=axis, comm=comm)
             return out, new_cache
 
         with ledger_scale(length):
@@ -390,7 +409,7 @@ def decode_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
     x = (layernorm(x, stacked["lnf"]["w"], stacked["lnf"]["b"], cfg.norm_eps)
          if cfg.norm == "layernorm"
          else rmsnorm(x, stacked["lnf"]["w"], cfg.norm_eps))
-    logits = lm_logits(stacked, cfg, x, axis)[:, 0]
+    logits = serve_logits(stacked, cfg, x, axis, plan)[:, 0]
     return logits, new_caches
 
 
@@ -403,7 +422,7 @@ def cache_struct(cfg, plan: SPDPlanConfig, batch: int, seq_len: int, tp: int):
     shapes whose head axes carry the full padded head counts; engines shard
     or split the head axis)."""
     dt = jnp.dtype(cfg.dtype)
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     lay = _gqa_layout_or_none(cfg, tp)
     out = []
     for (start, length, kind, dropped) in segs:
@@ -472,7 +491,7 @@ def cache_pageable_tree(cfg, plan: SPDPlanConfig):
     int8 scales) on non-windowed layers, MLA latents.  Dense per-slot:
     rolling-window KV (already bounded to `window`), SSM state, and conv
     tails (no sequence axis to page)."""
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     out = []
     for (start, length, kind, dropped) in segs:
         ssm_c = {"state": False, "conv": {"x": False, "bc": False}}
@@ -535,17 +554,18 @@ def prefill_chunk(cfg, stacked, plan, tokens, start, caches, *, tp,
     x = embed_tokens(stacked["emb"], tokens, axis, shard_idx)
     if cfg.pos_emb == "learned":
         x = x + jnp.take(stacked["pos"], pos[0], axis=0)[None]
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     new_caches = []
     for seg_i, (s0, length, kind, dropped) in enumerate(segs):
         sp = stacked["segs"][seg_i]
         cache_seg = caches[seg_i]
 
-        def body(xc, xs_i, kind=kind, dropped=dropped):
+        def body(xc, xs_i, kind=kind, dropped=dropped,
+                 comm=plan.block_mode(s0)):
             layer_p, cache = xs_i
             out, nc = B.block_ext(cfg, kind, lay, layer_p, xc, pos, cache,
                                   drop=dropped, tp=tp, shard_idx=shard_idx,
-                                  axis=axis, q_chunk=q_chunk)
+                                  axis=axis, q_chunk=q_chunk, comm=comm)
             return out, nc
 
         with ledger_scale(length):
@@ -560,13 +580,13 @@ def prefill_chunk(cfg, stacked, plan, tokens, start, caches, *, tp,
         idx = jnp.clip(lengths - 1 - start, 0, c - 1).astype(jnp.int32)
     xq = jnp.take_along_axis(x, idx[:, None, None].repeat(x.shape[-1], -1),
                              axis=1)
-    logits = lm_logits(stacked, cfg, xq, axis)[:, 0]
+    logits = serve_logits(stacked, cfg, xq, axis, plan)[:, 0]
     return logits, new_caches
 
 
 def cache_specs_tree(cfg, plan: SPDPlanConfig, tp: int = 0):
     """Split-axis ints for each cache leaf (REPLICATED for MLA latent)."""
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     out = []
     for (start, length, kind, dropped) in segs:
         ssm_c = {"state": 2, "conv": {"x": 3, "bc": REPLICATED}}

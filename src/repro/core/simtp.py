@@ -150,7 +150,7 @@ def make_collect_fn(cfg, plan, tp, *, q_chunk=1024):
     """jit fn(split_params, tokens) -> per-layer block INPUTS
     (L+1, B, S, d) — entry L is the final-layer output (pre final norm).
     Replicated across shards, so shard 0's copy is returned."""
-    segs = plan_segments(cfg, plan.drop_mask)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
     kinds = layer_kinds(cfg)
 
     def per_shard(p, tokens):
@@ -163,11 +163,12 @@ def make_collect_fn(cfg, plan, tp, *, q_chunk=1024):
         for seg_i, (start, length, kind, dropped) in enumerate(segs):
             sp = p["segs"][seg_i]
 
-            def body(xc, layer_p, kind=kind, dropped=dropped):
+            def body(xc, layer_p, kind=kind, dropped=dropped,
+                     comm=plan.block_mode(start)):
                 out, _, _ = B.block_seq(cfg, kind, lay, layer_p, xc, pos,
                                         drop=dropped, tp=tp,
                                         shard_idx=shard_idx, axis=MODEL_AXIS,
-                                        q_chunk=q_chunk)
+                                        q_chunk=q_chunk, comm=comm)
                 return out, out
 
             x, ys = jax.lax.scan(body, x, sp)

@@ -121,3 +121,67 @@ def prepare_deployment(cfg, padded, plan, tp):
     """Padded per-layer params + plan -> sim-engine-ready split tree."""
     stacked = M.stack_segments(padded, cfg, plan)
     return simtp.split_stacked(stacked, cfg, plan, tp)
+
+
+# ---------------------------------------------------------------------------
+# Sensitivity-aware comm-policy assignment (Algorithm-1 tiering reused for
+# the drop | quant8 | quant4 | exact decision per block)
+# ---------------------------------------------------------------------------
+
+
+def comm_policy_from_sensitivity(sens, ranking, n_layers: int, *,
+                                 n_spd: int, tau1: float, tau2: float,
+                                 sb_level: str = "quant8",
+                                 esb_level: str = "exact",
+                                 logits: str = "exact"):
+    """Map Algorithm 1's sensitivity tiers onto a per-block comm policy.
+
+    ISB blocks (sens <= tau1, cheapest n_spd by ranking) drop their sync
+    outright; SB blocks (tau1 < sens <= tau2) keep it but at `sb_level`
+    (int8 costs ~nothing there — Flash Communication's observation); ESB
+    blocks (sens > tau2) keep `esb_level` (exact by default).  Returns an
+    SPDPlanConfig with the CommPolicy attached."""
+    from repro.config.base import CommPolicy
+
+    cats = S.classify(np.asarray(sens), tau1, tau2)
+    budget = set(int(i) for i in list(ranking)[:n_spd])
+    drop, levels = [], []
+    for i, cat in enumerate(cats):
+        if cat == S.ISB and i in budget:
+            drop.append(True)
+            levels.append("exact")
+        else:
+            drop.append(False)
+            levels.append(sb_level if cat in (S.ISB, S.SB) else esb_level)
+    return SPDPlanConfig(tuple(drop),
+                         CommPolicy(tuple(levels), logits_mode=logits))
+
+
+def assign_comm_policy(cfg: ModelConfig, canonical: dict, calib_batches,
+                       tp: int, *, n_spd: int, tau1: float, tau2: float,
+                       sb_level: str = "quant8", esb_level: str = "exact",
+                       logits: str = "exact", q_chunk: int = 1024):
+    """Measure block sensitivity (core/sensitivity.py) and assign each
+    block the cheapest sync it can afford: drop / quant8 / quant4 /
+    exact.  Zero-shot (no distillation) — the quantized tiers are the
+    cheap middle ground that B2B recovery used to be the only answer to.
+
+    Returns (plan_with_comm, SensitivityResult)."""
+    if not cfg.spd_applicable:
+        from repro.config.base import CommPolicy
+        plan = SPDPlanConfig.none(cfg.n_layers).with_comm(
+            CommPolicy.uniform(cfg.n_layers, sb_level, logits=logits))
+        return plan, S.SensitivityResult(
+            np.zeros(cfg.n_layers + 1), np.zeros(cfg.n_layers),
+            np.arange(cfg.n_layers))
+    plan0 = SPDPlanConfig.none(cfg.n_layers)
+    padded = M.pad_model(canonical, cfg, tp)
+    stacked0 = M.stack_segments(padded, cfg, plan0)
+    split0 = simtp.split_stacked(stacked0, cfg, plan0, tp)
+    res = S.measure_sensitivity(cfg, split0, calib_batches, tp,
+                                q_chunk=q_chunk)
+    plan = comm_policy_from_sensitivity(
+        res.sensitivity, res.ranking, cfg.n_layers, n_spd=n_spd,
+        tau1=tau1, tau2=tau2, sb_level=sb_level, esb_level=esb_level,
+        logits=logits)
+    return plan, res

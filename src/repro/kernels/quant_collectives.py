@@ -1,0 +1,127 @@
+"""Fused absmax quant/dequant Pallas kernels for low-bit collectives.
+
+The quantized sync-point path (parallel/compression.quantized_psum)
+brackets every low-bit all-reduce with a per-chunk absmax quantize and a
+dequantize.  Done as separate XLA ops those are 3 HBM round trips per
+hop; the kernels here fuse absmax -> scale -> round -> (de)quant into one
+VMEM pass over `(block_rows, chunk)` tiles:
+
+    quantize_absmax   fp32 (N,) -> (int8 codes (N,), fp32 scales (N/chunk,))
+    dequantize_absmax inverse
+    qdq_absmax        fused round trip (what the CPU-simulated collective
+                      consumes: the quantization ERROR without the int8
+                      storage detour)
+
+The chunk axis (default 128) matches the TPU lane width, so one scale
+per lane row.  int4 is levels=7 in int8 storage — nibble packing is a
+wire-format concern handled by the byte accounting in compression.py,
+not a kernel concern.  On non-TPU backends pass interpret=True (tests);
+the jnp oracles live in kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pad_rows(flat, chunk):
+    n = flat.size
+    pad = (-n) % chunk
+    return jnp.pad(flat, (0, pad)).reshape(-1, chunk), n
+
+
+def _scales(x, levels):
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / levels
+    return jnp.maximum(s, 1e-12)
+
+
+def _qdq_kernel(x_ref, y_ref, *, levels: int):
+    x = x_ref[...].astype(jnp.float32)
+    s = _scales(x, levels)
+    q = jnp.clip(jnp.round(x / s), -levels, levels)
+    y_ref[...] = (q * s).astype(y_ref.dtype)
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, levels: int):
+    x = x_ref[...].astype(jnp.float32)
+    s = _scales(x, levels)
+    q_ref[...] = jnp.clip(jnp.round(x / s), -levels, levels).astype(jnp.int8)
+    s_ref[...] = s[:, 0]
+
+
+def _dequant_kernel(q_ref, s_ref, y_ref):
+    y_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+
+
+def _grid(rows, block_rows):
+    br = min(block_rows, rows)
+    while rows % br:
+        br -= 1
+    return rows // br, br
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "levels", "block_rows",
+                                             "interpret"))
+def qdq_absmax(x, *, chunk: int = 128, levels: int = 127,
+               block_rows: int = 256, interpret: bool = False):
+    """x (N,) -> quantize-dequantize round trip (fp32), per-chunk absmax."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    rows2d, n = _pad_rows(flat, chunk)
+    g, br = _grid(rows2d.shape[0], block_rows)
+    y = pl.pallas_call(
+        functools.partial(_qdq_kernel, levels=levels),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((br, chunk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(rows2d.shape, jnp.float32),
+        interpret=interpret,
+        name="qdq_absmax",
+    )(rows2d)
+    return y.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "levels", "block_rows",
+                                             "interpret"))
+def quantize_absmax(x, *, chunk: int = 128, levels: int = 127,
+                    block_rows: int = 256, interpret: bool = False):
+    """x (N,) -> (codes int8 (N,), scales fp32 (ceil(N/chunk),))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    rows2d, n = _pad_rows(flat, chunk)
+    rows = rows2d.shape[0]
+    g, br = _grid(rows, block_rows)
+    q, s = pl.pallas_call(
+        functools.partial(_quant_kernel, levels=levels),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((br, chunk), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+                   pl.BlockSpec((br,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((rows, chunk), jnp.int8),
+                   jax.ShapeDtypeStruct((rows,), jnp.float32)],
+        interpret=interpret,
+        name="quantize_absmax",
+    )(rows2d)
+    return q.reshape(-1)[:n], s
+
+
+@functools.partial(jax.jit, static_argnames=("n", "chunk", "block_rows",
+                                             "interpret"))
+def dequantize_absmax(q, scales, *, n: int, chunk: int = 128,
+                      block_rows: int = 256, interpret: bool = False):
+    """(codes int8 (N,), scales (ceil(N/chunk),)) -> fp32 (n,)."""
+    rows2d, _ = _pad_rows(q.astype(jnp.float32).reshape(-1), chunk)
+    rows = rows2d.shape[0]
+    g, br = _grid(rows, block_rows)
+    y = pl.pallas_call(
+        _dequant_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+                  pl.BlockSpec((br,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, chunk), jnp.float32),
+        interpret=interpret,
+        name="dequantize_absmax",
+    )(rows2d.astype(jnp.float32), scales)
+    return y.reshape(-1)[:n]

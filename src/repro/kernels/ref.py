@@ -31,6 +31,37 @@ def fused_residual_rmsnorm_ref(x, r, w, eps: float = 1e-5):
     return y.astype(x.dtype), s.astype(x.dtype)
 
 
+def quantize_absmax_ref(x, *, chunk: int = 128, levels: int = 127):
+    """x (N,) fp32 -> (codes fp-valued ints (N,), scales (ceil(N/chunk),))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.size
+    pad = (-n) % chunk
+    rows = jnp.pad(flat, (0, pad)).reshape(-1, chunk)
+    s = jnp.maximum(jnp.max(jnp.abs(rows), axis=-1) / levels, 1e-12)
+    q = jnp.clip(jnp.round(rows / s[:, None]), -levels, levels)
+    return q.reshape(-1)[:n].astype(jnp.int8), s
+
+
+def dequantize_absmax_ref(q, scales, *, n: int, chunk: int = 128):
+    pad = (-n) % chunk
+    rows = jnp.pad(q.astype(jnp.float32).reshape(-1), (0, pad))
+    rows = rows.reshape(-1, chunk)
+    return (rows * scales[:, None]).reshape(-1)[:n]
+
+
+def qdq_absmax_ref(x, *, chunk: int = 128, levels: int = 127):
+    """Quantize-dequantize round trip (the low-bit collective's error
+    model); matches kernels/quant_collectives.qdq_absmax exactly."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.size
+    pad = (-n) % chunk
+    rows = jnp.pad(flat, (0, pad)).reshape(-1, chunk)
+    s = jnp.maximum(jnp.max(jnp.abs(rows), axis=-1, keepdims=True) / levels,
+                    1e-12)
+    q = jnp.clip(jnp.round(rows / s), -levels, levels)
+    return (q * s).reshape(-1)[:n]
+
+
 def ssd_scan_ref(x, dt, a, bm, cm, dd, *, chunk: int):
     """Single-(batch*head) SSD oracle.  x (S,P), dt (S,), a scalar,
     bm/cm (S,N), dd scalar.  Returns y (S,P)."""

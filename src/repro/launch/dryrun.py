@@ -43,12 +43,18 @@ def cell_applicable(arch: str, shape: str) -> bool:
     return True
 
 
-def spd_plan_for(cfg, fraction: float):
-    from repro.config.base import SPDPlanConfig
+def spd_plan_for(cfg, fraction: float, comm: str = "exact",
+                 comm_logits: str = "exact"):
+    from repro.config.base import CommPolicy, SPDPlanConfig
     if not cfg.spd_applicable or fraction <= 0:
-        return SPDPlanConfig.none(cfg.n_layers)
-    k = int(round(cfg.n_layers * fraction))
-    return SPDPlanConfig.first_k(cfg.n_layers, k)
+        plan = SPDPlanConfig.none(cfg.n_layers)
+    else:
+        k = int(round(cfg.n_layers * fraction))
+        plan = SPDPlanConfig.first_k(cfg.n_layers, k)
+    if comm != "exact" or comm_logits != "exact":
+        plan = plan.with_comm(CommPolicy.uniform(cfg.n_layers, comm,
+                                                 logits=comm_logits))
+    return plan
 
 
 def input_structs(cfg, shape_cfg, plan, tp):
@@ -112,7 +118,7 @@ def bytes_per_device(total, mesh_axes_in_spec):
 
 def run_cell(arch, shape_name, mesh_kind, spd,
              out_json=None, verbose=True, sync_q8=False, kv_int8=False,
-             w_int8=False):
+             w_int8=False, comm="exact", comm_logits="exact"):
     import contextlib
     import jax
     import numpy as np
@@ -133,11 +139,14 @@ def run_cell(arch, shape_name, mesh_kind, spd,
     tp = mesh.shape["model"]
     n_dev = int(np.prod(list(mesh.shape.values())))
     dp_total = n_dev // tp
-    plan = spd_plan_for(cfg, spd)
+    # an explicit CommPolicy rides the plan (per-block, serve paths);
+    # the legacy --sync-q8 context stays as the blanket trace override
+    plan = spd_plan_for(cfg, spd, comm, comm_logits)
 
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "spd": spd, "n_devices": n_dev, "tp": tp,
            "sync_q8": sync_q8, "kv_int8": kv_int8, "w_int8": w_int8,
+           "comm": comm, "comm_logits": comm_logits,
            "applicable": cell_applicable(arch, shape_name)}
     if not rec["applicable"]:
         rec["skip_reason"] = ("full-attention arch at 524k dense KV: the "
@@ -283,6 +292,12 @@ def main():
     ap.add_argument("--spd", type=float, default=0.0)
     ap.add_argument("--sync-q8", action="store_true")
     ap.add_argument("--sync-q4", action="store_true")
+    ap.add_argument("--comm", choices=["exact", "quant8", "quant4"],
+                    default="exact",
+                    help="CommPolicy level for kept sync points (per-plan "
+                         "path; --sync-q8 is the legacy trace-time blanket)")
+    ap.add_argument("--comm-logits", choices=["exact", "quant8", "quant4"],
+                    default="exact")
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--w-int8", action="store_true")
     ap.add_argument("--json")
@@ -298,7 +313,8 @@ def main():
                          args.meshes))
     run_cell(args.arch, args.shape, args.mesh, args.spd, args.json,
              sync_q8=("int4" if args.sync_q4 else args.sync_q8),
-             kv_int8=args.kv_int8, w_int8=args.w_int8)
+             kv_int8=args.kv_int8, w_int8=args.w_int8,
+             comm=args.comm, comm_logits=args.comm_logits)
 
 
 if __name__ == "__main__":

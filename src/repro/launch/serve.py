@@ -16,6 +16,12 @@ one per power-of-two bucket) on EITHER cache layout.
 Sampling: greedy by default; ``--temperature/--top-k/--top-p
 --sample-seed`` select the jitted sampling path (per-request
 deterministic).
+
+Sync-point comm policy (docs/comm.md): ``--comm quant8`` runs every
+kept sync point (the all-reduces SPD did not drop) through the two-hop
+int8 quantized psum; ``--comm quant4`` uses int4; ``--comm-logits``
+sets the final logits all-gather level independently.  Composes with
+``--spd``: a dropped block's surviving MLP sync is still quantized.
 """
 import argparse
 import json
@@ -44,6 +50,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill size, dense or paged (0 = "
                          "power-of-two buckets)")
+    ap.add_argument("--comm", choices=["exact", "quant8", "quant4"],
+                    default="exact",
+                    help="quantization level for every kept sync point "
+                         "(per-block policies: repro.api.CommPolicy)")
+    ap.add_argument("--comm-logits", choices=["exact", "quant8", "quant4"],
+                    default="exact",
+                    help="quantization level for the logits all-gather")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0)
@@ -62,6 +75,7 @@ def main():
     llm = LLM.load(
         args.arch, tp=args.tp, dp=args.dp, engine=args.engine,
         spd=args.spd, dtype=args.dtype, seed=args.seed,
+        comm=args.comm, comm_logits=args.comm_logits,
         cache_len=args.cache_len, max_batch=args.max_batch,
         page_size=args.page_size if paged else None,
         num_pages=args.num_pages if paged else None,
@@ -80,6 +94,8 @@ def main():
         "completed": sum(o.finished for o in outs),
         "outputs": {o.index: o.token_ids[:8] for o in outs},
     }
+    if args.comm != "exact" or args.comm_logits != "exact":
+        out["comm"] = {"blocks": args.comm, "logits": args.comm_logits}
     if paged:
         out["paged"] = {"page_size": args.page_size,
                         "num_pages": args.num_pages,

@@ -87,6 +87,17 @@ def _log(op: str, axis, x) -> None:
     _LEDGER.active.append((op, name, int(nbytes)))
 
 
+def log_collective(op: str, axis, nbytes: int) -> None:
+    """Ledger entry with an EXPLICIT byte count — for collectives whose
+    wire format differs from their operand (quantized payloads log the
+    int8/int4+scales bytes that actually cross the link, not the fp32
+    operand the CPU emulation reduces)."""
+    if _LEDGER.active is None:
+        return
+    name = axis if isinstance(axis, str) else "+".join(axis)
+    _LEDGER.active.append((op, name, int(nbytes) * _LEDGER.scale))
+
+
 # ---------------------------------------------------------------------------
 # Custom-VJP collectives
 # ---------------------------------------------------------------------------
@@ -163,10 +174,12 @@ _SYNC = _SyncMode()
 def sync_compression(mode: str):
     """Beyond-paper optimization (cf. Dong et al. 2024, low-bit TP
     communication, cited by the paper): while tracing with mode="int8",
-    every KEPT sync point quantizes its partial to int8 (per-128-chunk
-    absmax scales) and the reduction becomes all_gather(int8+scales) +
-    local dequant-sum — ~4x less wire time than a bf16 ring all-reduce.
-    Inference paths only (round() is not differentiated)."""
+    every KEPT sync point that does not carry an EXPLICIT per-block mode
+    (an SPDPlanConfig.comm policy) quantizes its partial to int8/int4 via
+    compression.quantized_psum.  The per-block CommPolicy is the primary
+    mechanism; this context remains as the blanket trace-time override
+    (dryrun --sync-q8).  Inference paths only (round() passes gradients
+    straight-through)."""
     prev, _SYNC.mode = _SYNC.mode, mode
     try:
         yield
@@ -174,60 +187,21 @@ def sync_compression(mode: str):
         _SYNC.mode = prev
 
 
-def _qdq(flat, chunk, levels=127):
-    """Quantize-dequantize round trip (per-chunk absmax, int8 or int4)."""
-    n = flat.size
-    pad = (-n) % chunk
-    xp = jnp.pad(flat, (0, pad)).reshape(-1, chunk)
-    scale = jnp.maximum(jnp.max(jnp.abs(xp), axis=1), 1e-12) / levels
-    q = jnp.clip(jnp.round(xp / scale[:, None]), -levels, levels)
-    return (q * scale[:, None].astype(jnp.float32)).reshape(-1)[:n]
+# accepted spellings of the sync levels ("quantN" from config.CommPolicy,
+# "intN" from the legacy sync_compression context)
+_MODE_BITS = {"int8": 8, "quant8": 8, "int4": 4, "quant4": 4}
 
 
-def _sync_q8(x, axis, chunk=128):
-    """Two-hop low-bit all-reduce (Dong et al. 2024 scheme):
-      hop 1: each device quantizes its partial, REDUCE-SCATTERs int8
-             slices (every device dequant-sums its owned 1/n slice);
-      hop 2: the reduced slices are re-quantized and ALL-GATHERed int8.
-    Wire bytes ≈ 2(n-1)/n · p_int8 (+1.6% scales) — ~2x less than a bf16
-    ring all-reduce.  v1 of this function used a full-tensor int8
-    all_gather, which moves n·p_int8 — 4x WORSE than bf16 AR (§Perf log,
-    refuted iteration).
-
-    CPU emulation note: the MATH below reproduces the scheme's exact
-    error structure (quantize before reduction, quantize after); the
-    logical reduction lowers as one psum while the LEDGER carries the
-    scheme's true wire bytes (int8 RS + int8 AG + bf16 scales), which is
-    what the roofline collective term consumes.  A TPU deployment would
-    emit the quantized RS/AG pair natively.
-    """
-    shape, dtype = x.shape, x.dtype
-    flat = x.astype(jnp.float32).reshape(-1)
-    four_bit = _SYNC.mode == "int4"
-    levels = 7 if four_bit else 127
-    # payload: 1 B/elem (int8) or 0.5 B/elem (nibble-packed int4)
-    nbytes_q = flat.size // 2 if four_bit else flat.size
-    nscale = -(-flat.size // chunk) * 2
-    # hop 1: pre-reduction quantization + RS accounting
-    xq = _qdq(flat, chunk, levels)
-    _LEDGER.active is not None and _LEDGER.active.append(
-        ("reduce-scatter", axis if isinstance(axis, str) else "+".join(axis),
-         int((nbytes_q + nscale) * _LEDGER.scale)))
-    s = jax.lax.psum(xq, axis)
-    # hop 2: post-reduction quantization + AG accounting (slice inputs)
-    out = _qdq(s, chunk, levels)
-    _LEDGER.active is not None and _LEDGER.active.append(
-        ("all-gather", axis if isinstance(axis, str) else "+".join(axis),
-         int((nbytes_q + nscale) // axis_size(axis) * _LEDGER.scale)))
-    return out.reshape(shape).astype(dtype)
-
-
-def sync_output(x, axis=MODEL_AXIS, compressible: bool = True):
+def sync_output(x, axis=MODEL_AXIS, compressible: bool = True, mode=None):
     """A sync point: the all-reduce after a row-parallel projection.
-    THIS is the op SPD drops.  `compressible=False` pins exact reduction
+    THIS is the op SPD drops.  `mode` is the block's kept-sync level from
+    its CommPolicy ("exact" | "quant8" | "quant4"; None defers to the
+    sync_compression context).  `compressible=False` pins exact reduction
     (embedding lookup, CE softmax sums — tiny payloads, precision-bound)."""
-    if _SYNC.mode in ("int8", "int4") and compressible:
-        return _sync_q8(x, axis)
+    m = mode if mode is not None else _SYNC.mode
+    if compressible and m in _MODE_BITS:
+        from repro.parallel.compression import quantized_psum
+        return quantized_psum(x, axis, bits=_MODE_BITS[m])
     _log("all-reduce", axis, x)
     return g_psum(x, axis)
 

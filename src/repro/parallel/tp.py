@@ -10,6 +10,13 @@ genuinely absent, which the dry-run/roofline accounting measures.
 Memory discipline for large configs: microbatched gradient accumulation
 (lax.scan) + per-layer remat keeps live activations to one microbatch ×
 one layer; ZeRO-1 (parallel/zero1.py) shards optimizer state over "data".
+
+Comm policy: the serve-step builders below inherit any CommPolicy
+attached to `plan` (plan.comm) — kept sync points inside M.decode_step /
+M.prefill lower to the quantized two-hop psum and the serve-path logits
+carry the logits-gather qdq, so the compiled HLO and the trace-time
+ledger both reflect the per-block wire precision.  Training steps should
+use exact plans (quantization is inference-only; see docs/comm.md).
 """
 from __future__ import annotations
 

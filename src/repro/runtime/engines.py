@@ -24,6 +24,14 @@ trash page — while SSM state / conv / windowed-KV leaves stay dense
 per-slot.  The swap happens INSIDE each TP shard's local leaf, so the
 split (tp, layer, ...) layout is untouched and SPD-dropped blocks keep
 their divergent per-shard caches.
+
+Comm policy: a plan with an attached CommPolicy (plan.comm — see
+docs/comm.md) changes what both engines' compiled steps emit per block:
+kept sync points lower to the two-hop quantized psum and the serve-path
+logits carry the wire qdq for the final all-gather.  The policy also
+refines the scan segmentation (layer_kinds.plan_segments), so engine,
+param placement, and cache trees must all be built from the SAME plan
+object — `repro.api.LLM` guarantees this.
 """
 from __future__ import annotations
 

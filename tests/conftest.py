@@ -32,6 +32,19 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(params=[2, 4, 8], ids=lambda t: f"tp{t}")
+def tp_degree(request):
+    """Shared TP-degree axis for engine/grad parity tests (the conftest
+    pins 8 CPU devices, so shard_map meshes exist for every value; pair
+    with `dp_for` to fill the remaining device budget)."""
+    return request.param
+
+
+def dp_for(tp: int, max_dev: int = 8) -> int:
+    """Largest DP degree that fits beside `tp` on the 8 test devices."""
+    return max(1, max_dev // tp)
+
+
 def make_cfg(name, **kw):
     return replace(get_config(name, reduced=True), dtype="float32", **kw)
 

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_batch, make_cfg
+from conftest import dp_for, make_batch, make_cfg
 from repro.config.base import SPDPlanConfig
 from repro.core import model as M, simtp
 from repro.launch.mesh import make_test_mesh
@@ -32,18 +32,24 @@ def _shard_loss(cfg, plan, mesh, stacked, batch, q_chunk=64):
     return float(f(gp, gb))
 
 
+# archs cheap enough to sweep the full TP axis (see test_grads)
+FULL_TP_SWEEP = {"smollm-360m", "mamba2-370m"}
+
+
 @pytest.mark.parametrize("arch,spd", [
     ("smollm-360m", 0), ("smollm-360m", 4),
     ("qwen2-moe-a2.7b", 3), ("opt-6.7b", 2),
     ("mamba2-370m", 0), ("hymba-1.5b", 4),
 ])
-def test_sim_vs_shard_loss(arch, spd):
+def test_sim_vs_shard_loss(arch, spd, tp_degree):
+    if tp_degree != 4 and arch not in FULL_TP_SWEEP:
+        pytest.skip("TP sweep covered by the FULL_TP_SWEEP subset")
     cfg = make_cfg(arch)
     plan = SPDPlanConfig.first_k(cfg.n_layers, spd if cfg.spd_applicable
                                  else 0)
     batch = make_batch(cfg, b=4, s=32)
     params = M.init_model(jax.random.PRNGKey(0), cfg)
-    tp = 4
+    tp = tp_degree
 
     split = simtp.prepare_params(params, cfg, plan, tp)
     l_sim, met = simtp.make_loss_fn(cfg, plan, tp, q_chunk=64)(split, batch)
@@ -52,8 +58,8 @@ def test_sim_vs_shard_loss(arch, spd):
     # MoE capacity dispatch couples tokens within a DP shard's local batch
     # (cap + queue positions are per dispatch group), so exact parity with
     # the sim engine (one group) requires dp=1.  Dense archs are row-
-    # independent and compare at dp=2.
-    dp = 1 if cfg.moe is not None else 2
+    # independent and compare at dp>=2 where the device budget allows.
+    dp = 1 if cfg.moe is not None else min(2, dp_for(tp))
     mesh = make_test_mesh(dp, tp)
     stacked = jax.tree.map(
         jnp.array, M.stack_segments(M.pad_model(params, cfg, tp), cfg, plan))
@@ -61,12 +67,12 @@ def test_sim_vs_shard_loss(arch, spd):
     np.testing.assert_allclose(l_sim, l_shard, rtol=2e-5, atol=2e-5)
 
 
-def test_sim_vs_shard_decode():
+def test_sim_vs_shard_decode(tp_degree):
     """Decode parity: one decode step after prefill, both engines."""
     cfg = make_cfg("smollm-360m")
     plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
     params = M.init_model(jax.random.PRNGKey(0), cfg)
-    tp = 2
+    tp = tp_degree
     rng = np.random.default_rng(3)
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 31)))
 
@@ -76,7 +82,7 @@ def test_sim_vs_shard_decode():
     lg_sim, c_sim = sim.prefill(sp, toks, cache_len=40)
     nxt_sim = np.argmax(np.asarray(lg_sim), -1)
 
-    mesh = make_test_mesh(2, tp)
+    mesh = make_test_mesh(min(2, dp_for(tp)), tp)
     eng = ShardEngine(cfg, plan, mesh, q_chunk=64)
     stacked = jax.tree.map(
         jnp.array, M.stack_segments(M.pad_model(params, cfg, tp), cfg, plan))
