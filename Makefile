@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-cov test-soak lint bench-smoke example-smoke
+.PHONY: test test-cov test-soak lint bench-smoke example-smoke spec-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -33,3 +33,8 @@ bench-smoke:
 example-smoke:
 	$(PY) examples/quickstart.py
 	$(PY) scripts/example_smoke.py
+
+# speculative decoding smoke: tiny-model spec-vs-plain greedy
+# token-equivalence, dense + paged (docs/speculative.md)
+spec-smoke:
+	$(PY) scripts/spec_smoke.py

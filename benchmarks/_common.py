@@ -1,6 +1,10 @@
-"""Shared benchmark utilities: a cached briefly-trained reduced model and
-the TPU-v5e analytic communication-time model."""
+"""Shared benchmark utilities: a cached briefly-trained reduced model,
+the TPU-v5e analytic communication-time model, and the machine-readable
+per-bench JSON emitter (`emit_json`) that tracks the perf trajectory
+across PRs."""
+import json
 import os
+import subprocess
 import time
 
 import jax
@@ -16,6 +20,30 @@ from repro.optim.adamw import adamw_init, adamw_update
 
 BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                          "bench_models")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _git_commit() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def emit_json(bench: str, config: dict, metrics, root: str = None) -> str:
+    """Write `BENCH_<bench>.json` at the repo root (schema: {bench,
+    config, metrics, commit}) so every benchmark run leaves a
+    machine-readable artifact the perf trajectory can be tracked from
+    across PRs.  `metrics` is whatever the bench's `run()` returns
+    (typically its rows list); `config` the knobs that shaped the run.
+    Returns the path written."""
+    path = os.path.join(root or REPO_ROOT, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "config": config, "metrics": metrics,
+                   "commit": _git_commit()}, f, indent=1, default=str)
+    return path
 
 # hardware constants (TPU v5e targets; see EXPERIMENTS.md §Roofline)
 HW = {

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._common import Timer, quality, train_reduced
+from benchmarks._common import Timer, emit_json, quality, train_reduced
 from repro.config.base import SPDPlanConfig
 from repro.core import model as M, simtp
 from repro.core.blocks import (gqa_mixer_seq, layer_specs, pad_layer)
@@ -161,4 +161,6 @@ def run(csv):
         got.append({"table": "1b", "variant": variant, "ppl": ppl})
     rows += got
     assert got[0]["ppl"] < got[1]["ppl"], got       # paper's choice wins
+    emit_json("ablation", {"archs": [cfg_a.name, cfg_b.name], "tp": 2},
+              rows)
     return rows

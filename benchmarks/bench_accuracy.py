@@ -7,7 +7,7 @@ test: ZS holds quality in the in-sensitive region then degrades; B2B
 recovers SBs; HG+B2B adds recovery on top for ESBs."""
 import numpy as np
 
-from benchmarks._common import Timer, quality, train_reduced
+from benchmarks._common import Timer, emit_json, quality, train_reduced
 from repro.config.base import SPDPlanConfig
 from repro.core import model as M
 from repro.core import sensitivity as S
@@ -56,4 +56,6 @@ def run(csv):
                 f"grouped={len(rep.grouping)}")
             rows.append({"budget": budget, "strategy": strat, "ppl": ppl_r,
                          "acc": acc_r})
+    emit_json("accuracy", {"arch": cfg.name, "steps": 400, "tp": tp},
+              rows)
     return rows

@@ -6,7 +6,7 @@ strongly non-uniform, and the profile grows more tolerant with size
 (shown here across two reduced model sizes)."""
 import numpy as np
 
-from benchmarks._common import Timer, train_reduced
+from benchmarks._common import Timer, emit_json, train_reduced
 from repro.config.base import SPDPlanConfig
 from repro.core import sensitivity as S
 from repro.core import simtp
@@ -32,4 +32,7 @@ def run(csv):
         rows.append({"arch": arch, "sens": res.sensitivity.tolist(),
                      "ppl_suffix": res.ppl_suffix.tolist(),
                      "cats": cats, "isb_frac": frac_isb})
+    emit_json("sensitivity",
+              {"archs": ["smollm-360m", "qwen3-1.7b"], "steps": 400,
+               "tp": 2}, rows)
     return rows

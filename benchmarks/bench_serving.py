@@ -11,7 +11,7 @@ each configuration pre-allocates (docs/serving.md has the design).
 """
 import numpy as np
 
-from benchmarks._common import Timer, train_reduced
+from benchmarks._common import Timer, emit_json, train_reduced
 
 
 def _requests(cfg, n, seed=0):
@@ -87,4 +87,6 @@ def run(csv):
         f"preempt={paged.n_preemptions}")
     rows.append({"mode": "ratio", "paged_over_dense": tps_p / tps_d})
     csv("serving/ratio", 0.0, f"paged/dense tok/s = {tps_p / tps_d:.2f}")
+    emit_json("serving", {"arch": cfg.name, "n_req": n_req,
+                          "cache_len": cache_len, "tp": 2}, rows)
     return rows

@@ -1,0 +1,115 @@
+"""Self-speculative decoding: acceptance rate, tokens per verify round,
+and the ledger-measured wire bytes the SPD draft saves.
+
+Two sections (docs/speculative.md has the model):
+
+  * serve: reduced-smollm greedy serving through the facade with spec on
+    (`all-drop` and `drop+quant4` drafts) vs plain decoding — reports
+    the measured acceptance rate and tokens/verify-round (> 1.0 means
+    each multi-token verify replaces more than one sequential decode
+    step, which is the latency win: one sync ROUND per block instead of
+    one per token).
+
+  * wire at TP in {2, 4, 8}: trace-time collective-ledger bytes of one
+    draft decode step under each preset vs the same step at exact comm.
+    Speculation's extra forwards are the k draft passes; SPD is what
+    makes them nearly free on the wire, and `draft_wire_saved_bytes_per
+    _tok` prices that: k * (exact_step - draft_step bytes) amortized
+    over the measured tokens/round.  (Total spec bytes per token exceed
+    plain decoding — the win is fewer sequential sync rounds, not fewer
+    bytes; the draft saving is the part SPD contributes.)
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._common import (Timer, emit_json, ledger_wire_bytes,
+                                train_reduced)
+from repro.config.base import SPDPlanConfig
+from repro.core import simtp
+from repro.parallel.collectives import collective_ledger
+from repro.runtime.engines import SimEngine
+
+TPS = (2, 4, 8)
+K = 3
+DRAFTS = ("all-drop", "drop+quant4")
+BENCH_JSON_ROOT = None      # repo root by default; tests redirect it
+
+
+def decode_step_ledger(cfg, canonical, plan, tp):
+    """Collective ledger of ONE single-token decode step under `plan`
+    (fresh engine so the trace is captured, not replayed from cache)."""
+    split = simtp.prepare_params(canonical, cfg, plan, tp)
+    eng = SimEngine(cfg, plan, tp, q_chunk=64)
+    caches = eng.blank_caches(1, 32)
+    with collective_ledger() as led:
+        eng.decode(split, jnp.zeros((1, 1), jnp.int32),
+                   jnp.ones((1,), jnp.int32), caches)
+    return led
+
+
+def run(csv):
+    from repro.api import LLM, SamplingParams, SpecConfig
+    from repro.spec import derive_draft_plan
+
+    cfg, canonical = train_reduced(steps=0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in rng.integers(4, 16, 8)]
+    sp = SamplingParams(max_new=16)
+    rows = []
+
+    # ---- measured serving: spec vs plain greedy (sim, tp=2) ----
+    plain = LLM.load(cfg, tp=2, engine="sim", params=canonical,
+                     cache_len=64, max_batch=4, q_chunk=64)
+    ref = [o.token_ids for o in plain.generate(prompts, sp)]   # warm + ref
+    tps_meas = {}
+    for draft in DRAFTS:
+        llm = LLM.load(cfg, tp=2, engine="sim", params=canonical,
+                       cache_len=64, max_batch=4, q_chunk=64,
+                       spec=SpecConfig(k=K, draft=draft))
+        outs = llm.generate(prompts, sp)                        # warm
+        assert [o.token_ids for o in outs] == ref, "greedy spec must be exact"
+        # timed run on a fresh scheduler over the already-compiled steps
+        from repro.api import Request
+        sched = llm.serve(max_batch=4)
+        for uid, p in enumerate(prompts):
+            sched.submit(Request(uid=uid, prompt=p, max_new=sp.max_new))
+        t = Timer()
+        sched.run()
+        us = t.us()
+        acc = sched.spec_acceptance
+        tps = sched.spec_tokens_per_step
+        tps_meas[draft] = tps
+        assert tps > 1.0, (draft, tps)
+        rows.append({"kind": "serve", "draft": draft, "k": K,
+                     "acceptance": acc, "tokens_per_step": tps,
+                     "rounds": sched.spec_rounds})
+        csv(f"spec/serve/{draft}", us,
+            f"accept={acc:.3f} tok_per_step={tps:.3f} "
+            f"rounds={sched.spec_rounds}")
+
+    # ---- wire bytes: SPD draft step vs exact-comm step, TP 2/4/8 ----
+    for tp in TPS:
+        exact_led = decode_step_ledger(
+            cfg, canonical, SPDPlanConfig.none(cfg.n_layers), tp)
+        exact_b = ledger_wire_bytes(exact_led, tp)
+        for draft in DRAFTS:
+            dplan = derive_draft_plan(cfg, SpecConfig(k=K, draft=draft))
+            draft_b = ledger_wire_bytes(
+                decode_step_ledger(cfg, canonical, dplan, tp), tp)
+            assert draft_b < exact_b, (tp, draft, draft_b, exact_b)
+            saved_tok = K * (exact_b - draft_b) / tps_meas[draft]
+            rows.append({"kind": "wire", "tp": tp, "draft": draft,
+                         "exact_step_bytes": exact_b,
+                         "draft_step_bytes": draft_b,
+                         "draft_vs_exact": exact_b / max(draft_b, 1.0),
+                         "draft_wire_saved_bytes_per_tok": saved_tok})
+            csv(f"spec/wire/tp{tp}/{draft}", 0.0,
+                f"draft_bytes={draft_b:.0f} exact_bytes={exact_b:.0f} "
+                f"saved_per_tok={saved_tok:.0f}")
+
+    emit_json("spec", {"arch": cfg.name, "k": K, "drafts": list(DRAFTS),
+                       "tps": list(TPS), "requests": len(prompts),
+                       "max_new": sp.max_new},
+              rows, root=BENCH_JSON_ROOT)
+    return rows

@@ -19,7 +19,8 @@ Claims under test:
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._common import HW, Timer, ledger_time, ledger_wire_bytes
+from benchmarks._common import (HW, Timer, emit_json, ledger_time,
+                                ledger_wire_bytes)
 from repro.config.base import CommPolicy, SPDPlanConfig, replace
 from repro.configs import get_config
 from repro.core import model as M, simtp
@@ -130,4 +131,6 @@ def run(csv):
         # drop and quant compose: SPD50+quant8 beats either alone
         assert wires["drop50+quant8"] < min(wires["quant8"], wires["drop"]), \
             (tp, wires)
+    emit_json("transfer", {"arch": cfg.name, "tps": list(TPS),
+                           "policies": list(POLICIES)}, rows)
     return rows

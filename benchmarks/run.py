@@ -9,6 +9,13 @@ prints ``name,us_per_call,derived`` CSV lines.
   bench_ablation     Table 1 residual-design ablations (1a no-bias, 1b bias)
   roofline           --      SRoofline terms from the dry-run artifacts
   bench_serving      --      dense vs paged-KV serving throughput
+  bench_spec         --      self-speculative decoding: acceptance,
+                             tokens/step, draft wire savings
+
+Every bench_* module also writes a machine-readable ``BENCH_<name>.json``
+at the repo root ({bench, config, metrics, commit} — see
+``benchmarks/_common.emit_json``) so the perf trajectory is tracked
+across PRs.
 """
 import argparse
 import json
@@ -30,7 +37,7 @@ def main():
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (bench_ablation, bench_accuracy,
-                            bench_sensitivity, bench_serving,
+                            bench_sensitivity, bench_serving, bench_spec,
                             bench_speedup, bench_transfer, roofline)
     suites = {
         "transfer": bench_transfer.run,
@@ -40,6 +47,7 @@ def main():
         "speedup": bench_speedup.run,
         "roofline": roofline.run,
         "serving": bench_serving.run,
+        "spec": bench_spec.run,
     }
     failures = 0
     for name, fn in suites.items():

@@ -18,10 +18,11 @@ from repro.api.scheduler import (CacheConfig, DenseKVCacheManager,
                                  Request, Scheduler, SchedulerError)
 from repro.api.llm import LLM
 from repro.config.base import CommPolicy, SPDPlanConfig
+from repro.spec import SpecConfig
 
 __all__ = [
     "LLM", "SamplingParams", "RequestOutput", "StreamEvent",
     "CacheConfig", "Scheduler", "Request", "CommPolicy", "SPDPlanConfig",
-    "DenseKVCacheManager", "PagedKVCacheManager",
+    "SpecConfig", "DenseKVCacheManager", "PagedKVCacheManager",
     "InvalidRequestError", "SchedulerError",
 ]

@@ -96,6 +96,12 @@ class LLM:
         self.cache = cache
         self.mesh = mesh
         self.tp, self.dp, self.q_chunk = tp, dp, q_chunk
+        # self-speculative decoding (docs/speculative.md): the draft is
+        # these same canonical weights placed under a cheaper comm plan
+        self.spec = None              # SpecConfig or None
+        self.draft_plan = None
+        self.draft_engine = None
+        self.draft_params = None
         self._sched: Optional[Scheduler] = None
         # facade-internal uids are negative so they never collide with
         # user-chosen uids of Requests submitted directly to serve()
@@ -112,7 +118,7 @@ class LLM:
              prefill_chunk: Optional[int] = None,
              cache_len: int = 128, max_batch: int = 4,
              dtype: Optional[str] = None, seed: int = 0, params=None,
-             q_chunk: int = 64, mesh=None) -> "LLM":
+             q_chunk: int = 64, mesh=None, spec=None) -> "LLM":
         """Load `arch` (config name or ModelConfig) onto an engine.
 
         spd        fraction of blocks to SPD-drop (first-k plan) —
@@ -131,6 +137,13 @@ class LLM:
                    `init_model(PRNGKey(seed))` when omitted.
         page_size/num_pages select the paged KV cache for `serve()` /
         `generate()`; dense per-slot caches otherwise.
+        spec       `repro.spec.SpecConfig(k=, draft=)` turns on
+                   self-speculative decoding: the draft shares these
+                   weights under the preset's aggressive CommPolicy,
+                   the exact model verifies k drafts per step (greedy
+                   stays token-identical; sampling stays distribution-
+                   preserving).  The "tiered" preset needs calibration
+                   data — use `enable_spec` instead of `load(spec=)`.
         """
         import jax
         from repro.configs import get_config
@@ -166,21 +179,22 @@ class LLM:
         llm = cls(cfg, plan, engine, None, None, canonical, cache,
                   mesh=mesh, tp=tp, dp=dp, q_chunk=q_chunk)
         llm._build_engine()
+        if spec is not None:
+            llm.enable_spec(spec)
         return llm
 
-    def _make_engine(self):
-        """Fresh engine for the CURRENT `self.plan` (the single place
-        that knows how each engine kind is constructed)."""
+    def _make_engine(self, plan=None):
+        """Fresh engine for `plan` (default: the current serving plan) —
+        the single place that knows how each engine kind is built."""
         from repro.runtime.engines import ShardEngine, SimEngine
 
+        plan = plan if plan is not None else self.plan
         if self.engine_kind == "sim":
-            return SimEngine(self.cfg, self.plan, self.tp,
-                             q_chunk=self.q_chunk)
+            return SimEngine(self.cfg, plan, self.tp, q_chunk=self.q_chunk)
         if self.mesh is None:
             from repro.launch.mesh import make_test_mesh
             self.mesh = make_test_mesh(self.dp, self.tp)
-        return ShardEngine(self.cfg, self.plan, self.mesh,
-                           q_chunk=self.q_chunk)
+        return ShardEngine(self.cfg, plan, self.mesh, q_chunk=self.q_chunk)
 
     def _build_engine(self):
         """(Re)build the engine for `self.plan` and place canonical
@@ -188,22 +202,85 @@ class LLM:
         self.engine = self._make_engine()
         self.params = self._place(self.canonical, padded=False)
         self._sched = None
+        if self.spec is not None:
+            # the draft placement restacks on ITS plan's segmentation;
+            # rebuild it whenever the canonical weights may have moved
+            self._build_spec()
 
-    def _place(self, tree, *, padded: bool):
-        """Canonical (or already-padded) params -> engine-native layout."""
+    def _place(self, tree, *, padded: bool, plan=None):
+        """Canonical (or already-padded) params -> engine-native layout
+        under `plan` (default: the serving plan).  The draft places the
+        SAME canonical tensors under its own plan — zero extra trained
+        weights, just a second layout."""
         import jax
         import jax.numpy as jnp
         from repro.core import model as M
         from repro.core import simtp
         from repro.parallel import tp as TP
 
+        plan = plan if plan is not None else self.plan
         pt = tree if padded else M.pad_model(tree, self.cfg, self.tp)
-        stacked = M.stack_segments(pt, self.cfg, self.plan)
+        stacked = M.stack_segments(pt, self.cfg, plan)
         if self.engine_kind == "sim":
-            return simtp.split_stacked(stacked, self.cfg, self.plan, self.tp)
+            return simtp.split_stacked(stacked, self.cfg, plan, self.tp)
         stacked = jax.tree.map(jnp.array, stacked)
         return jax.device_put(stacked, TP.named(
-            self.mesh, TP.param_pspecs(self.cfg, self.plan)))
+            self.mesh, TP.param_pspecs(self.cfg, plan)))
+
+    # ---------------- speculative decoding ----------------
+
+    def enable_spec(self, spec, calib_batches=None, *, sensitivity=None,
+                    ranking=None):
+        """Turn on self-speculative decoding (or switch its config).
+
+        The "tiered" draft preset reuses Algorithm-1's ISB/SB/ESB tiers,
+        which need the block sensitivity profile: pass `calib_batches`
+        to run the sweep here, or a precomputed `sensitivity`/`ranking`
+        pair.  Drops any cached scheduler (its draft state is per-
+        scheduler).  Returns self for chaining."""
+        from repro.spec import SpecConfig, derive_draft_plan
+
+        if not isinstance(spec, SpecConfig):
+            raise TypeError(f"spec must be a repro.spec.SpecConfig, "
+                            f"got {spec!r}")
+        if (spec.draft == "tiered" and sensitivity is None
+                and calib_batches is not None):
+            from repro.core.spd import sweep_sensitivity
+            res, _ = sweep_sensitivity(self.cfg, self.canonical,
+                                       calib_batches, self.tp,
+                                       q_chunk=self.q_chunk)
+            sensitivity, ranking = res.sensitivity, res.ranking
+        self.spec = spec
+        self.draft_plan = derive_draft_plan(self.cfg, spec,
+                                            sensitivity=sensitivity,
+                                            ranking=ranking)
+        self._build_spec()
+        return self
+
+    def disable_spec(self):
+        """Back to plain decoding (drops the cached scheduler)."""
+        self.spec = None
+        self.draft_plan = self.draft_engine = self.draft_params = None
+        self._sched = None
+
+    def _build_spec(self):
+        """(Re)build the draft engine and re-place the canonical weights
+        under the draft plan's segmentation."""
+        self.draft_engine = self._make_engine(self.draft_plan)
+        self.draft_params = self._place(self.canonical, padded=False,
+                                        plan=self.draft_plan)
+        self._sched = None
+
+    def _spec_state(self, cache: CacheConfig):
+        """Fresh per-scheduler SpecState (each scheduler owns its draft
+        KV cache), or None when speculation is off."""
+        if self.spec is None:
+            return None
+        from repro.spec import Drafter, SpecState
+        drafter = Drafter(self.draft_engine, self.draft_params,
+                          cache.max_batch, cache.cache_len,
+                          prefill_chunk=cache.prefill_chunk)
+        return SpecState(k=self.spec.k, drafter=drafter)
 
     # ---------------- serving ----------------
 
@@ -213,10 +290,12 @@ class LLM:
         CacheConfig field) builds a fresh one."""
         if overrides:
             import dataclasses
-            return Scheduler(self.engine, self.params,
-                             dataclasses.replace(self.cache, **overrides))
+            cc = dataclasses.replace(self.cache, **overrides)
+            return Scheduler(self.engine, self.params, cc,
+                             spec=self._spec_state(cc))
         if self._sched is None:
-            self._sched = Scheduler(self.engine, self.params, self.cache)
+            self._sched = Scheduler(self.engine, self.params, self.cache,
+                                    spec=self._spec_state(self.cache))
         return self._sched
 
     def _submit(self, prompts, sampling) -> List[Request]:

@@ -37,10 +37,18 @@ design in docs/serving.md):
     tokens; on re-admission it prefills over prompt + output).
 Chunked prefill (`CacheConfig.prefill_chunk`) now applies to BOTH cache
 layouts — the dense path used to silently ignore it.
+
+Speculative decoding (docs/speculative.md): constructed with a
+`repro.spec.SpecState`, every decode step becomes a draft-k /
+verify-once round — the Drafter proposes k tokens with the target's own
+weights under a cheap comm plan, ONE multi-token verify forward scores
+them, and acceptance (greedy or rejection-sampled) commits 1..k+1
+tokens.  Rejected suffixes roll back: dense caches rewind the position
+counter, paged slots return their suffix pages (`PagePool.shrink`).
+Greedy streams stay bit-identical to plain decoding.
 """
 from __future__ import annotations
 
-import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -51,6 +59,8 @@ import numpy as np
 from repro.api.sampling import SamplingParams
 from repro.runtime import sampling as RS
 from repro.runtime.paging import PagePool
+from repro.spec.verify import (accept_greedy, accept_speculative,
+                               filtered_probs, spec_rng)
 
 __all__ = ["CacheConfig", "Request", "Scheduler", "InvalidRequestError",
            "SchedulerError", "DenseKVCacheManager", "PagedKVCacheManager"]
@@ -119,10 +129,10 @@ class Request:
     # construction keeps binding the same way
     sampling: Optional[SamplingParams] = None
     finish_reason: Optional[str] = None
-
-
-def _bucket(n: int, minimum: int = 16) -> int:
-    return max(minimum, 1 << math.ceil(math.log2(max(n, 1))))
+    # speculative-decoding stats (docs/speculative.md): tokens drafted
+    # for this request and how many the verify forward accepted
+    n_drafted: int = 0
+    n_draft_accepted: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +179,19 @@ class DenseKVCacheManager:
         nxt, self.caches = self.engine.decode_sampled(
             params, cur, pos, self.caches, t, k, p, keys)
         return nxt
+
+    def verify(self, params, toks, pos):
+        """Multi-token speculative verify -> full logits (B, k+1, V),
+        returned as the engine's device array (callers fetch only what
+        they need — all-greedy rounds pull just the argmax ids)."""
+        lg, self.caches = self.engine.verify(params, toks, pos, self.caches)
+        return lg
+
+    def truncate(self, slot: int, n_tokens: int):
+        # dense rollback of a rejected speculative suffix is free: the
+        # stale KV past the committed position is causally masked and
+        # overwritten as the position counter passes it again
+        pass
 
 
 class PagedKVCacheManager:
@@ -224,6 +247,16 @@ class PagedKVCacheManager:
             t, k, p, keys)
         return nxt
 
+    def verify(self, params, toks, pos):
+        lg, self.pcaches = self.engine.verify_paged(
+            params, toks, pos, jnp.asarray(self.pool.table), self.pcaches)
+        return lg
+
+    def truncate(self, slot: int, n_tokens: int):
+        # paged rollback: pages past the committed length go back to the
+        # free list (table keeps its valid-prefix/-1-suffix invariant)
+        self.pool.shrink(slot, n_tokens)
+
 
 # ---------------------------------------------------------------------------
 # The scheduler
@@ -233,7 +266,7 @@ class PagedKVCacheManager:
 class Scheduler:
     """Continuous batching over either cache layout (see module doc)."""
 
-    def __init__(self, engine, params, cache: CacheConfig):
+    def __init__(self, engine, params, cache: CacheConfig, spec=None):
         self.engine = engine
         self.params = params
         self.cache = cache
@@ -250,6 +283,15 @@ class Scheduler:
         self._seq = 0
         self.completed: Dict[int, Request] = {}
         self.n_preemptions = 0
+        # speculative decoding (repro.spec.SpecState or None): when set,
+        # decode steps become draft-k / verify-once rounds that can
+        # commit several tokens at a time (docs/speculative.md)
+        self.spec = spec
+        self.spec_rounds = 0          # verify forwards executed
+        self.spec_row_rounds = 0      # sum of active rows over rounds
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_committed = 0       # tokens committed by spec rounds
 
     # legacy attribute names (pre-facade Server/PagedServer)
     @property
@@ -305,22 +347,13 @@ class Scheduler:
                                np.asarray(req.out, np.int32)])
 
     def _prefill(self, toks: np.ndarray, s: int):
-        if (self.prefill_chunk
-                and hasattr(self.engine, "prefill_chunked")):
-            return self.engine.prefill_chunked(
-                self.params, jnp.asarray(toks[None]),
-                cache_len=self.cache_len, lengths=np.asarray([s]),
-                chunk=self.prefill_chunk)
-        # bucket, but never past the slot capacity: a 128-bucket prefill
-        # against a 96-token cache would build caches wider than the slot
-        sb = min(_bucket(s), self.cache_len)
-        padded = np.zeros((1, sb), np.int32)
-        padded[0, :s] = toks               # right-pad; exact: decode starts
-        # at pos=s and overwrites pad slots before they are ever causally
-        # visible (see M.prefill docstring).
-        return self.engine.prefill(
-            self.params, jnp.asarray(padded), cache_len=self.cache_len,
-            lengths=jnp.asarray([s], jnp.int32))
+        # shared with the speculative Drafter's admission prefill:
+        # chunked when configured, else right-padded to a power-of-two
+        # bucket capped at the slot capacity (exact — decode overwrites
+        # pad slots before they are causally visible)
+        from repro.runtime.engines import bucketed_prefill
+        return bucketed_prefill(self.engine, self.params, toks, s,
+                                self.cache_len, self.prefill_chunk)
 
     def _first_token(self, req: Request, logits) -> int:
         """Sample the admission token from the prefill logits via the
@@ -364,6 +397,10 @@ class Scheduler:
             self.admit_seq[b] = self._seq
             self._seq += 1
             self.kv.insert(caches1, b)
+            if self.spec is not None:
+                # the draft shares weights, not caches: it prefills the
+                # same tokens into its own per-slot dense cache
+                self.spec.drafter.insert(b, toks)
             if self._stopping(req, first):
                 self._finish(b)
 
@@ -415,6 +452,21 @@ class Scheduler:
             if self.completed.get(r.uid) is r:
                 del self.completed[r.uid]
 
+    def _grow_active(self, active: List[int], upto_fn) -> List[int]:
+        """Paged growth with preemption-by-eviction, shared by decode
+        and spec rounds: oldest-admitted slots grow first (never
+        starved), `upto_fn(b)` gives each slot's target cache position,
+        and a slot may evict itself as the last resort.  Returns the
+        surviving active list."""
+        for b in sorted(active, key=lambda b: self.admit_seq[b]):
+            if self.slots[b] is None:   # preempted by an earlier slot
+                continue
+            while not self.kv.ensure(b, upto_fn(b)):
+                v = self._preempt_one(keep=b)
+                if v is None or v == b:
+                    break
+        return self._active()
+
     def _preempt_one(self, keep: int) -> Optional[int]:
         """Evict the latest-admitted active slot (other than `keep` when
         possible); its request requeues at the front with output kept."""
@@ -462,24 +514,153 @@ class Scheduler:
         keys = RS.make_keys(seeds, counts)
         return self.kv.decode_sampled(self.params, cur, pos, t, k, p, keys)
 
+    # ---------------- speculative decoding ----------------
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Fraction of drafted tokens the exact model accepted."""
+        return self.spec_accepted / max(self.spec_drafted, 1)
+
+    @property
+    def spec_tokens_per_step(self) -> float:
+        """Committed tokens per request per verify round (> 1.0 means
+        speculation is paying for itself in decode steps)."""
+        return self.spec_committed / max(self.spec_row_rounds, 1)
+
+    def _spec_cap(self, b: int) -> int:
+        """Cache positions request b may ever need — the bound its
+        admission was validated against."""
+        req = self.slots[b]
+        return len(np.asarray(req.prompt)) + self._max_new(req)
+
+    def _spec_step(self, active: List[int], k: int) -> bool:
+        """One draft-k / verify-once round for every active slot.
+
+        k is FIXED at spec.k so the verify forward keeps one compiled
+        shape; rows whose remaining budget is tighter than k just have
+        their surplus commits clamped host-side (their surplus verify
+        rows score positions that can never be committed — dense writes
+        past the slot are dropped by the scatter, paged writes land in
+        the trash page — so the surplus logits are garbage-but-discarded
+        by construction, never acted on).
+
+        Verify writes KV at positions pos..pos+k, so paged slots must
+        own pages through pos+k+1 up front (same preemption-by-eviction
+        rule as decode growth), capped at the request's validated
+        capacity; after acceptance the rejected suffix rolls back —
+        position rewind on dense, page truncation on paged."""
+        if self.kv.paged:
+            active = self._grow_active(
+                active,
+                lambda b: min(int(self.pos[b]) + k + 1,
+                              self._spec_cap(b) - 1))
+            if not active:
+                return bool(self.queue)
+        dr = self.spec.drafter
+        n = self.max_batch
+        # catch-up context: the committed tokens from each row's draft
+        # coverage up to its current token (1 or 2 tokens — Drafter
+        # invariant; re-processing a written position is idempotent)
+        width = 1
+        for b in active:
+            width = max(width, int(self.pos[b]) - int(dr.pos[b]) + 1)
+        all_greedy = all((self.slots[b].sampling or _GREEDY).greedy
+                         for b in active)
+        ctx = np.zeros((n, width), np.int32)
+        start = np.zeros(n, np.int32)
+        rngs: Dict[int, object] = {}
+        qs: Dict[int, list] = {}
+        for b in active:
+            stream = self._resume_tokens(self.slots[b])
+            p = int(self.pos[b])
+            start[b] = p - width + 1
+            ctx[b] = stream[start[b]: p + 1]
+            sp = self.slots[b].sampling or _GREEDY
+            rngs[b] = spec_rng(sp.seed, len(self.slots[b].out))
+            qs[b] = [None] * k
+
+        def sample_fn(logits, i):
+            # per-request draft draw; records the exact distribution q
+            # each sampled draft came from (the rejection scheme's q)
+            toks = np.zeros(n, np.int32)
+            for b in active:
+                sp = self.slots[b].sampling or _GREEDY
+                if sp.greedy:
+                    toks[b] = int(np.argmax(logits[b]))
+                else:
+                    q = filtered_probs(logits[b], sp.temperature,
+                                       sp.top_k, sp.top_p)
+                    qs[b][i] = q
+                    toks[b] = int(rngs[b].choice(q.shape[0], p=q))
+            return toks
+
+        draft_toks, _ = dr.draft(ctx, start, k, sample_fn,
+                                 greedy=all_greedy)
+        ver = np.concatenate([self.cur, draft_toks], axis=1)   # (n, k+1)
+        lg = self.kv.verify(self.params, jnp.asarray(ver),
+                            jnp.asarray(self.pos))
+        if all_greedy:
+            # mirror the fused-greedy decode path: only the (n, k+1)
+            # argmax ids come to host, never the full-vocab logits
+            argmax = np.asarray(jnp.argmax(lg, axis=-1))
+            logits = None
+        else:
+            logits = np.asarray(lg)
+            argmax = None
+        self.spec_rounds += 1
+        for b in active:
+            req = self.slots[b]
+            sp = req.sampling or _GREEDY
+            if logits is None:
+                committed, n_acc = accept_greedy(draft_toks[b], argmax[b])
+            else:
+                committed, n_acc = accept_speculative(
+                    draft_toks[b], None if sp.greedy else np.stack(qs[b]),
+                    logits[b], temperature=sp.temperature, top_k=sp.top_k,
+                    top_p=sp.top_p, rng=rngs[b])
+            old_pos = int(self.pos[b])
+            req.n_drafted += k
+            req.n_draft_accepted += n_acc
+            self.spec_drafted += k
+            self.spec_accepted += n_acc
+            self.spec_row_rounds += 1
+            budget = self._max_new(req) - len(req.out)
+            done_b = False
+            for tok in committed[:budget]:
+                req.out.append(tok)
+                self.spec_committed += 1
+                self.pos[b] += 1
+                self.cur[b, 0] = tok
+                if self._stopping(req, tok):
+                    done_b = True
+                    break
+            if done_b:
+                self._finish(b)
+                continue
+            self.kv.truncate(b, int(self.pos[b]))
+            # draft cache validity: it wrote positions old_pos..old_pos+
+            # k-1 for [cur, d_1..d_{k-1}]; the accepted prefix keeps it
+            # in sync up to min(committed end, old_pos + k)
+            dr.pos[b] = min(int(self.pos[b]), old_pos + k)
+        return True
+
+    # ---------------- main loop (continued) ----------------
+
     def step(self) -> bool:
-        """Admit, grow (paged), one decode step for all active slots."""
+        """Admit, grow (paged), one decode step for all active slots.
+        With speculation enabled the decode step becomes a draft/verify
+        round that can commit up to k+1 tokens per request."""
         self._admit()
         active = self._active()
         if not active:
             return False
+        if self.spec is not None:
+            return self._spec_step(active, self.spec.k)
         if self.kv.paged:
             # growth: each slot writes position pos[b] this step — make
-            # sure its page exists, preempting latest-admitted slots when
-            # the pool is dry (oldest slots grow first, never starved).
-            for b in sorted(active, key=lambda b: self.admit_seq[b]):
-                if self.slots[b] is None:   # preempted by an earlier slot
-                    continue
-                while not self.kv.ensure(b, int(self.pos[b]) + 1):
-                    v = self._preempt_one(keep=b)
-                    if v is None or v == b:
-                        break
-            active = self._active()
+            # sure its page exists (preemption rules: _grow_active)
+            active = self._grow_active(active,
+                                       lambda b: int(self.pos[b]) + 1)
             if not active:
                 return bool(self.queue)
         nxt = np.asarray(self._decode_active(active))

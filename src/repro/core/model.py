@@ -584,6 +584,62 @@ def prefill_chunk(cfg, stacked, plan, tokens, start, caches, *, tp,
     return logits, new_caches
 
 
+def supports_spec_decode(cfg) -> bool:
+    """Self-speculative decoding needs (a) a second sync point per block
+    to drop (spd_applicable) and (b) the cache-extension forward that
+    scores several drafted tokens in one step (same coverage as chunked
+    prefill: full-causal GQA stacks)."""
+    return cfg.spd_applicable and supports_chunked_prefill(cfg)
+
+
+def verify_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
+                axis=MODEL_AXIS, q_chunk=1024):
+    """Multi-token verify forward for speculative decoding.
+
+    tokens (B, C): the last accepted token followed by C-1 drafted
+    tokens; pos (B,): per-row absolute position of tokens[:, 0] (rows
+    may sit at DIFFERENT positions — this is the decode-time analog of
+    prefill_chunk, which assumes one scalar chunk start).  Writes each
+    token's KV at pos+j and returns logits at EVERY chunk position
+    ((B, C, Vl) fp32 shard-local) plus the updated caches: logits[:, j]
+    scores the token after tokens[:, j], which is what acceptance needs.
+
+    Rollback contract: rejected-suffix KV entries stay in the cache but
+    are never causally visible (attention masks kv_pos <= q_pos) and are
+    overwritten as soon as the position counter passes them again — so
+    dense rollback is just the scheduler rewinding pos (docs/speculative.md).
+    """
+    shard_idx = jax.lax.axis_index(axis)
+    lay = _gqa_layout_or_none(cfg, tp)
+    b, c = tokens.shape
+    pos2 = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None]     # (B, C)
+    x = embed_tokens(stacked["emb"], tokens, axis, shard_idx)
+    if cfg.pos_emb == "learned":
+        x = x + jnp.take(stacked["pos"], pos2, axis=0)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
+    new_caches = []
+    for seg_i, (s0, length, kind, dropped) in enumerate(segs):
+        sp = stacked["segs"][seg_i]
+        cache_seg = caches[seg_i]
+
+        def body(xc, xs_i, kind=kind, dropped=dropped,
+                 comm=plan.block_mode(s0)):
+            layer_p, cache = xs_i
+            out, nc = B.block_ext(cfg, kind, lay, layer_p, xc, pos2, cache,
+                                  drop=dropped, tp=tp, shard_idx=shard_idx,
+                                  axis=axis, q_chunk=q_chunk, comm=comm)
+            return out, nc
+
+        with ledger_scale(length):
+            x, nc = jax.lax.scan(body, x, (sp, cache_seg))
+        new_caches.append(nc)
+    x = (layernorm(x, stacked["lnf"]["w"], stacked["lnf"]["b"], cfg.norm_eps)
+         if cfg.norm == "layernorm"
+         else rmsnorm(x, stacked["lnf"]["w"], cfg.norm_eps))
+    logits = serve_logits(stacked, cfg, x, axis, plan)
+    return logits, new_caches
+
+
 def cache_specs_tree(cfg, plan: SPDPlanConfig, tp: int = 0):
     """Split-axis ints for each cache leaf (REPLICATED for MLA latent)."""
     segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)

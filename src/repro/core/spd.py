@@ -57,25 +57,38 @@ def capture_block_inputs(cfg, padded, tp, calib_batches, *, q_chunk=1024):
     return outs
 
 
+def sweep_sensitivity(cfg: ModelConfig, canonical: dict, calib_batches,
+                      tp: int, *, q_chunk: int = 1024):
+    """The shared sensitivity-sweep prelude: place the canonical params
+    under the no-SPD plan on the sim engine and run Algorithm 1's block
+    sweep.  Returns (SensitivityResult, padded_params) — every consumer
+    (apply_spd, assign_comm_policy, LLM.enable_spec's tiered draft)
+    measures under the SAME placement recipe."""
+    plan0 = SPDPlanConfig.none(cfg.n_layers)
+    padded = M.pad_model(canonical, cfg, tp)
+    split0 = simtp.split_stacked(M.stack_segments(padded, cfg, plan0),
+                                 cfg, plan0, tp)
+    res = S.measure_sensitivity(cfg, split0, calib_batches, tp,
+                                q_chunk=q_chunk)
+    return res, padded
+
+
 def apply_spd(cfg: ModelConfig, canonical: dict, calib_batches, tp: int, *,
               n_spd: int, tau1: float, tau2: float, lr: float = 5e-5,
               epochs: int = 10, strategies=("ZS", "B2B", "HG"),
               q_chunk: int = 1024):
     """Returns (padded_params_final, plan, report)."""
     kinds = layer_kinds(cfg)
-    padded = M.pad_model(canonical, cfg, tp)
     if not cfg.spd_applicable:
+        padded = M.pad_model(canonical, cfg, tp)
         plan = SPDPlanConfig.none(cfg.n_layers)
         rep = SPDReport(np.zeros(cfg.n_layers), np.zeros(cfg.n_layers + 1),
                         np.arange(cfg.n_layers), [], [])
         return padded, plan, rep
 
     # ---- 1-2: sensitivity + ranking ----
-    plan0 = SPDPlanConfig.none(cfg.n_layers)
-    stacked0 = M.stack_segments(padded, cfg, plan0)
-    split0 = simtp.split_stacked(stacked0, cfg, plan0, tp)
-    res = S.measure_sensitivity(cfg, split0, calib_batches, tp,
-                                q_chunk=q_chunk)
+    res, padded = sweep_sensitivity(cfg, canonical, calib_batches, tp,
+                                    q_chunk=q_chunk)
     chosen = [int(i) for i in res.ranking[:n_spd]]
     cats = S.classify(res.sensitivity[chosen], tau1, tau2)
     plan = SPDPlanConfig.from_ranking(res.ranking, n_spd, cfg.n_layers)
@@ -174,12 +187,8 @@ def assign_comm_policy(cfg: ModelConfig, canonical: dict, calib_batches,
         return plan, S.SensitivityResult(
             np.zeros(cfg.n_layers + 1), np.zeros(cfg.n_layers),
             np.arange(cfg.n_layers))
-    plan0 = SPDPlanConfig.none(cfg.n_layers)
-    padded = M.pad_model(canonical, cfg, tp)
-    stacked0 = M.stack_segments(padded, cfg, plan0)
-    split0 = simtp.split_stacked(stacked0, cfg, plan0, tp)
-    res = S.measure_sensitivity(cfg, split0, calib_batches, tp,
-                                q_chunk=q_chunk)
+    res, _ = sweep_sensitivity(cfg, canonical, calib_batches, tp,
+                               q_chunk=q_chunk)
     plan = comm_policy_from_sensitivity(
         res.sensitivity, res.ranking, cfg.n_layers, n_spd=n_spd,
         tau1=tau1, tau2=tau2, sb_level=sb_level, esb_level=esb_level,

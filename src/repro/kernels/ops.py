@@ -115,6 +115,21 @@ def scatter_token_page(pool, dense, page_table, pos):
     return pool.at[:, phys, pos % ps].set(tok)
 
 
+def scatter_chunk_pages(pool, dense, page_table, pos, n: int):
+    """Write back the `n` tokens a verify forward just produced per slot.
+
+    dense (L, B, n_pages*ps, *t) holds the post-update contiguous view;
+    the entries at sequence indices pos[b]..pos[b]+n-1 are the tokens
+    written this step (speculative verify scores n = k+1 tokens at once).
+    `n` is static and small, so this unrolls n single-token scatters —
+    each lands in its own physical page via the page table, with
+    unmapped (-1) entries absorbed by the trash page.
+    """
+    for j in range(n):
+        pool = scatter_token_page(pool, dense, page_table, pos + j)
+    return pool
+
+
 def scatter_prefill_pages(pool, dense1, page_row):
     """Insert one request's prefill cache into its allocated pages.
 

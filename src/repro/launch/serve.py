@@ -22,6 +22,14 @@ kept sync point (the all-reduces SPD did not drop) through the two-hop
 int8 quantized psum; ``--comm quant4`` uses int4; ``--comm-logits``
 sets the final logits all-gather level independently.  Composes with
 ``--spd``: a dropped block's surviving MLP sync is still quantized.
+
+Self-speculative decoding (docs/speculative.md): ``--spec-k 4
+--spec-draft all-drop`` drafts k tokens per step with the SAME weights
+under an all-dropped comm plan and verifies them with the exact model
+in one multi-token forward — greedy output is token-identical to plain
+decoding; the report gains acceptance-rate and tokens/step fields.
+(The "tiered" draft preset needs calibration data; use
+``LLM.enable_spec`` from Python.)
 """
 import argparse
 import json
@@ -57,6 +65,13 @@ def main():
     ap.add_argument("--comm-logits", choices=["exact", "quant8", "quant4"],
                     default="exact",
                     help="quantization level for the logits all-gather")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: tokens drafted per "
+                         "verify round (0 = off)")
+    ap.add_argument("--spec-draft", choices=["all-drop", "drop+quant4"],
+                    default="all-drop",
+                    help="draft comm preset (same weights, cheaper "
+                         "syncs; see docs/speculative.md)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0)
@@ -69,7 +84,7 @@ def main():
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
 
     import numpy as np
-    from repro.api import LLM, SamplingParams
+    from repro.api import LLM, SamplingParams, SpecConfig
 
     paged = args.page_size > 0 and args.num_pages > 0
     llm = LLM.load(
@@ -79,7 +94,9 @@ def main():
         cache_len=args.cache_len, max_batch=args.max_batch,
         page_size=args.page_size if paged else None,
         num_pages=args.num_pages if paged else None,
-        prefill_chunk=args.prefill_chunk or None, q_chunk=64)
+        prefill_chunk=args.prefill_chunk or None, q_chunk=64,
+        spec=(SpecConfig(k=args.spec_k, draft=args.spec_draft)
+              if args.spec_k > 0 else None))
 
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, llm.cfg.vocab_size,
@@ -96,6 +113,11 @@ def main():
     }
     if args.comm != "exact" or args.comm_logits != "exact":
         out["comm"] = {"blocks": args.comm, "logits": args.comm_logits}
+    if args.spec_k > 0:
+        out["spec"] = {"k": args.spec_k, "draft": args.spec_draft,
+                       "acceptance": round(sched.spec_acceptance, 4),
+                       "tokens_per_step":
+                           round(sched.spec_tokens_per_step, 4)}
     if paged:
         out["paged"] = {"page_size": args.page_size,
                         "num_pages": args.num_pages,

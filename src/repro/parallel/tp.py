@@ -404,6 +404,65 @@ def build_paged_decode_step(cfg: ModelConfig, plan: SPDPlanConfig,
                              out_specs=out_specs), donate_argnums=(4,))
 
 
+def _full_logits_seq(cfg, logits):
+    """(B, C, Vl) shard-local -> (B, C, V) full vocab."""
+    full = jax.lax.all_gather(logits, MODEL_AXIS, axis=2, tiled=True)
+    return full[..., : cfg.vocab_size]
+
+
+def build_verify_step(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh,
+                      *, q_chunk: int = 2048, shard_batch: bool = True):
+    """Speculative verify on the dense cache layout: one shard_map'd
+    M.verify_step scoring k+1 tokens per row in a single forward, with
+    the full-vocab logits of EVERY chunk position gathered out (the
+    host-side acceptance needs all of them)."""
+    tp = mesh.shape[MODEL_AXIS]
+    dpx = dp_axes(mesh) if shard_batch else ()
+    p_specs = param_pspecs(cfg, plan)
+    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch)
+
+    def verify_local(params, tokens, pos, caches):
+        lg, ncs = M.verify_step(cfg, params, plan, tokens, pos, caches,
+                                tp=tp, q_chunk=q_chunk)
+        return _full_logits_seq(cfg, lg), ncs
+
+    in_specs = (p_specs, P(dpx), P(dpx), c_specs)
+    out_specs = (P(dpx), c_specs)
+    return jax.jit(shard_map(verify_local, mesh, in_specs=in_specs,
+                             out_specs=out_specs), donate_argnums=(3,))
+
+
+def build_paged_verify_step(cfg: ModelConfig, plan: SPDPlanConfig,
+                            mesh: Mesh, n_tokens: int, *,
+                            q_chunk: int = 2048):
+    """Paged speculative verify: gather pages -> dense verify math ->
+    scatter the n_tokens newly written positions back into their pages
+    (batch replicated, like build_paged_decode_step)."""
+    tp = mesh.shape[MODEL_AXIS]
+    p_specs = param_pspecs(cfg, plan)
+    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch=False)
+    flags = M.cache_pageable_tree(cfg, plan)
+    from repro.kernels import ops as KOPS
+
+    def verify_local(params, tokens, pos, page_table, pcaches):
+        dense = jax.tree.map(
+            lambda f, c: KOPS.gather_pages(c, page_table) if f else c,
+            flags, pcaches)
+        lg, new_dense = M.verify_step(cfg, params, plan, tokens, pos,
+                                      dense, tp=tp, q_chunk=q_chunk)
+        new_pcaches = jax.tree.map(
+            lambda f, c, nd: (KOPS.scatter_chunk_pages(c, nd, page_table,
+                                                       pos, n_tokens)
+                              if f else nd),
+            flags, pcaches, new_dense)
+        return _full_logits_seq(cfg, lg), new_pcaches
+
+    in_specs = (p_specs, P(), P(), P(), c_specs)
+    out_specs = (P(), c_specs)
+    return jax.jit(shard_map(verify_local, mesh, in_specs=in_specs,
+                             out_specs=out_specs), donate_argnums=(4,))
+
+
 def build_prefill_chunk_step(cfg: ModelConfig, plan: SPDPlanConfig,
                              mesh: Mesh, *, q_chunk: int = 2048):
     """One chunked-prefill step (M.prefill_chunk) under shard_map; batch

@@ -17,6 +17,9 @@ and the paged-cache variants consumed by the unified api scheduler
     insert_paged(pcaches, caches1, b, page_row)
     decode_paged(params, tokens, pos, page_table, pcaches)
     decode_paged_sampled(..., temp, top_k, top_p, keys)
+and the speculative-decoding verify forwards (docs/speculative.md):
+    verify(params, tokens (B, k+1), pos, caches)       -> (logits (B,k+1,V), caches)
+    verify_paged(params, tokens, pos, page_table, pcaches)
 
 Paged layout: pageable leaves (core.model.cache_pageable_tree) swap their
 (batch, seq) axes for (num_pages + 1, page_size) — page num_pages is the
@@ -61,6 +64,33 @@ def _sim_full_logits(cfg, lg):
     return full[:, : cfg.vocab_size]
 
 
+def _sim_full_logits_seq(cfg, lg):
+    """(tp, B, C, Vl) shard logits -> full (B, C, V)."""
+    _, b, c, _ = lg.shape
+    full = jnp.moveaxis(lg, 0, -2).reshape(b, c, -1)
+    return full[..., : cfg.vocab_size]
+
+
+def bucketed_prefill(engine, params, toks, s: int, cache_len: int,
+                     chunk=None):
+    """One request's prefill through an engine, shared by the scheduler
+    admission path and the speculative Drafter: chunked when `chunk` is
+    set (and the engine/arch supports it), otherwise right-padded to the
+    next power-of-two bucket capped at the slot capacity (pad slots are
+    overwritten by decode before they become causally visible)."""
+    import math as _math
+    toks = np.asarray(toks, np.int32)
+    if chunk and hasattr(engine, "prefill_chunked"):
+        return engine.prefill_chunked(
+            params, jnp.asarray(toks[None]), cache_len=cache_len,
+            lengths=np.asarray([s]), chunk=chunk)
+    sb = min(max(16, 1 << _math.ceil(_math.log2(max(s, 1)))), cache_len)
+    padded = np.zeros((1, sb), np.int32)
+    padded[0, :s] = toks
+    return engine.prefill(params, jnp.asarray(padded), cache_len=cache_len,
+                          lengths=jnp.asarray([s], jnp.int32))
+
+
 def _drive_chunked_prefill(step, caches, tokens, lengths, chunk):
     """Host loop shared by both engines' prefill_chunked: right-pad the
     batch to a chunk multiple, feed chunks through `step(toks, start,
@@ -99,6 +129,8 @@ class SimEngine:
         self._decode_sampled = None
         self._decode_paged_sampled = None
         self._insert_paged = None
+        self._verify_c = {}
+        self._verify_paged_c = {}
 
     # ---- cache layout: split form, leading (tp, ...) axis per leaf ----
 
@@ -246,6 +278,61 @@ class SimEngine:
         return self._decode_sampled(params, tokens, pos, caches,
                                     temperature, top_k, top_p, keys)
 
+    def verify(self, params, tokens, pos, caches):
+        """Speculative verify on dense caches: tokens (B, C) — the last
+        accepted token + C-1 drafts — scored in ONE forward; returns
+        (full logits (B, C, V), new caches).  See M.verify_step for the
+        per-row position + rollback contract."""
+        key = tokens.shape
+        if key not in self._verify_c:
+            cfg, plan, tp, qc = self.cfg, self.plan, self.tp, self.q_chunk
+
+            def per_shard(p, toks, ps, cs):
+                return M.verify_step(cfg, p, plan, toks, ps, cs, tp=tp,
+                                     q_chunk=qc)
+
+            def fn(p, toks, ps, cs):
+                lg, ncs = jax.vmap(per_shard, in_axes=(0, None, None, 0),
+                                   axis_name=MODEL_AXIS)(p, toks, ps, cs)
+                return _sim_full_logits_seq(cfg, lg), ncs
+            self._verify_c[key] = jax.jit(fn, donate_argnums=(3,))
+        return self._verify_c[key](params, tokens, pos, caches)
+
+    def verify_paged(self, params, tokens, pos, page_table, pcaches):
+        """Paged speculative verify: gather pages -> dense verify math ->
+        scatter every newly written token back into its page."""
+        key = tokens.shape
+        if key not in self._verify_paged_c:
+            cfg, plan, tp, qc = self.cfg, self.plan, self.tp, self.q_chunk
+            flags = M.cache_pageable_tree(cfg, plan)
+            n_tok = int(key[1])
+
+            def per_shard(p, toks, ps, cs):
+                return M.verify_step(cfg, p, plan, toks, ps, cs, tp=tp,
+                                     q_chunk=qc)
+
+            def fn(p, toks, ps, pt, pc):
+                dense = _map_paged(
+                    flags,
+                    lambda c: jax.vmap(KOPS.gather_pages,
+                                       in_axes=(0, None))(c, pt),
+                    lambda c: c, pc)
+                lg, new_dense = jax.vmap(per_shard,
+                                         in_axes=(0, None, None, 0),
+                                         axis_name=MODEL_AXIS)(p, toks, ps,
+                                                               dense)
+                def scatter(c, nd, pt=pt, ps=ps):
+                    return KOPS.scatter_chunk_pages(c, nd, pt, ps, n_tok)
+
+                pc2 = _map_paged(
+                    flags,
+                    lambda c, nd: jax.vmap(scatter)(c, nd),
+                    lambda c, nd: nd, pc, new_dense)
+                return _sim_full_logits_seq(cfg, lg), pc2
+            self._verify_paged_c[key] = jax.jit(fn, donate_argnums=(4,))
+        return self._verify_paged_c[key](params, tokens, pos, page_table,
+                                         pcaches)
+
     def _paged_decode_math(self):
         """Shared paged decode body (gather pages -> dense decode ->
         scatter the written token) -> (full logits, new paged caches)."""
@@ -324,6 +411,8 @@ class ShardEngine:
         self._decode_sampled = None
         self._decode_paged_sampled = None
         self._insert_paged = None
+        self._verify_c = {}
+        self._verify_paged_c = {}
         self._c_pspecs = TP.cache_pspecs(cfg, plan, mesh)
         self._c_pspecs_rep = TP.cache_pspecs(cfg, plan, mesh,
                                              shard_batch=False)
@@ -446,6 +535,24 @@ class ShardEngine:
                 self.cfg, self.plan, self.mesh, sampled=True)
         return self._decode_sampled(params, tokens, pos, caches,
                                     temperature, top_k, top_p, keys)
+
+    def verify(self, params, tokens, pos, caches):
+        """See SimEngine.verify — same contract, shard_map'd."""
+        key = tokens.shape
+        if key not in self._verify_c:
+            self._verify_c[key] = TP.build_verify_step(
+                self.cfg, self.plan, self.mesh, q_chunk=self.q_chunk)
+        return self._verify_c[key](params, tokens, pos, caches)
+
+    def verify_paged(self, params, tokens, pos, page_table, pcaches):
+        """See SimEngine.verify_paged — same contract, shard_map'd."""
+        key = tokens.shape
+        if key not in self._verify_paged_c:
+            self._verify_paged_c[key] = TP.build_paged_verify_step(
+                self.cfg, self.plan, self.mesh, int(key[1]),
+                q_chunk=self.q_chunk)
+        return self._verify_paged_c[key](params, tokens, pos, page_table,
+                                         pcaches)
 
     def _decode_paged_fn(self, with_logits: bool):
         if with_logits not in self._decode_paged_c:

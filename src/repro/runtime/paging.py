@@ -109,6 +109,25 @@ class PagePool:
         self.owned[slot] = target
         return True
 
+    def shrink(self, slot: int, n_tokens: int) -> int:
+        """Truncate `slot`'s allocation to cover only n_tokens cache
+        positions, returning suffix pages to the free list.
+
+        This is the paged rollback of a rejected speculative suffix: the
+        verify forward grew the slot to hold k+1 positions, acceptance
+        committed fewer, and the pages past `pages_for(committed)` go
+        straight back to the pool (table row keeps its valid-prefix /
+        -1-suffix invariant).  Returns the number of pages released."""
+        target = self.pages_for(n_tokens)
+        have = int(self.owned[slot])
+        if target >= have:
+            return 0
+        for i in range(have - 1, target - 1, -1):
+            self.free.append(int(self.table[slot, i]))
+            self.table[slot, i] = -1
+        self.owned[slot] = target
+        return have - target
+
     def release(self, slot: int) -> int:
         """Free every page owned by `slot`; returns the count released."""
         n = int(self.owned[slot])

@@ -32,7 +32,21 @@ __all__ = ["Server", "PagedServer", "Request", "Scheduler", "CacheConfig",
            "InvalidRequestError"]
 
 
+# classes that have already warned this process (once-per-class: a
+# server constructed in a loop should not spam the log on every request
+# batch; tests reset this set to lock the semantics)
+_WARNED = set()
+
+
+def _reset_deprecation_warnings():
+    """Test hook: make the next construction of each shim warn again."""
+    _WARNED.clear()
+
+
 def _deprecated(old: str):
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
     warnings.warn(
         f"repro.runtime.server.{old} is deprecated; use repro.api.LLM / "
         "repro.api.Scheduler(engine, params, CacheConfig(...)) instead",

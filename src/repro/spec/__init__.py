@@ -1,0 +1,24 @@
+"""`repro.spec` — self-speculative decoding with zero extra weights.
+
+Draft = the target's own parameters under an aggressive SPD `CommPolicy`
+(every attention sync dropped and/or quantized); verify = the exact
+model scoring k drafted tokens in one multi-token forward, with greedy
+acceptance (token-identical to plain greedy) or rejection sampling
+(distribution-preserving under `SamplingParams`).  Design notes in
+docs/speculative.md; the scheduler loop lives in `repro.api.scheduler`.
+
+    from repro.api import LLM, SamplingParams
+    from repro.spec import SpecConfig
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim",
+                   spec=SpecConfig(k=4, draft="all-drop"))
+    outs = llm.generate(prompts, SamplingParams(max_new=16))
+"""
+from repro.spec.draft import (DRAFT_PRESETS, Drafter, SpecConfig, SpecError,
+                              SpecState, derive_draft_plan, spec_supported)
+from repro.spec.verify import accept_speculative, filtered_probs, spec_rng
+
+__all__ = [
+    "SpecConfig", "SpecError", "SpecState", "DRAFT_PRESETS", "Drafter",
+    "derive_draft_plan", "spec_supported",
+    "accept_speculative", "filtered_probs", "spec_rng",
+]

@@ -1,0 +1,201 @@
+"""Draft side of self-speculative decoding: the target model under a
+cheaper CommPolicy.
+
+SPD's accuracy/latency knob produces exactly the profile a speculative
+draft model needs — nearly free on the wire, approximately right — with
+ZERO extra weights: the draft plan reuses the target's canonical
+parameters under an aggressive sync-point policy and runs its own
+lightweight dense KV cache.  Presets (`DRAFT_PRESETS`):
+
+  all-drop     every attention-output sync dropped (the paper's 100% SPD
+               point); kept MLP syncs stay exact.
+  drop+quant4  every block dropped AND its surviving MLP sync + the
+               logits all-gather quantized to int4 — the cheapest wire
+               profile the comm stack offers.
+  tiered       Algorithm-1 ISB/SB/ESB tiers reused as a draft policy
+               (core.spd.comm_policy_from_sensitivity): insensitive
+               blocks drop, sensitive ones keep an int8 or exact sync.
+               Needs a measured sensitivity profile (LLM.enable_spec
+               runs the sweep from calibration batches).
+
+`Drafter` is the runtime half: it owns the draft engine + placed params
++ a dense per-slot cache, mirrors the committed stream position by
+position, and proposes k tokens per round for the target's verify
+forward (api/scheduler.py drives it; acceptance math in spec/verify.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.config.base import ModelConfig, SPDPlanConfig
+
+__all__ = ["SpecConfig", "SpecError", "SpecState", "DRAFT_PRESETS",
+           "derive_draft_plan", "Drafter", "spec_supported"]
+
+DRAFT_PRESETS = ("all-drop", "drop+quant4", "tiered")
+
+
+class SpecError(ValueError):
+    """Speculative decoding misconfiguration."""
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """How to speculate.
+
+    k        drafted tokens per verify round (the verify forward scores
+             k+1 positions at once).
+    draft    one of DRAFT_PRESETS, or an explicit SPDPlanConfig to use
+             as the draft plan directly.
+    n_spd / tau1 / tau2
+             Algorithm-1 tiering knobs for the "tiered" preset (n_spd
+             defaults to every layer being drop-eligible; the taus split
+             ISB / SB / ESB exactly as `apply_spd` does).
+    """
+
+    k: int = 4
+    draft: object = "all-drop"
+    n_spd: Optional[int] = None
+    tau1: float = 0.05
+    tau2: float = 0.5
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise SpecError(f"spec k must be >= 1, got {self.k}")
+        if (not isinstance(self.draft, SPDPlanConfig)
+                and self.draft not in DRAFT_PRESETS):
+            raise SpecError(f"draft must be an SPDPlanConfig or one of "
+                            f"{DRAFT_PRESETS}, got {self.draft!r}")
+
+
+def spec_supported(cfg: ModelConfig) -> bool:
+    from repro.core import model as M
+    return M.supports_spec_decode(cfg)
+
+
+def derive_draft_plan(cfg: ModelConfig, spec: SpecConfig, *,
+                      sensitivity=None, ranking=None) -> SPDPlanConfig:
+    """Draft plan for `spec` on `cfg` (see module docstring).
+
+    The tiered preset needs the Algorithm-1 sensitivity profile
+    (`core.sensitivity.measure_sensitivity`); pass its `sensitivity` and
+    `ranking`.  Raises SpecError when the arch cannot self-draft (pure
+    SSM: no droppable sync; non-GQA/windowed stacks: no multi-token
+    verify forward yet)."""
+    if not spec_supported(cfg):
+        raise SpecError(
+            f"{cfg.name}: self-speculative decoding needs an SPD-droppable "
+            "sync point and the cache-extension verify forward "
+            "(full-causal GQA stacks)")
+    n = cfg.n_layers
+    if isinstance(spec.draft, SPDPlanConfig):
+        if len(spec.draft.drop_mask) != n:
+            raise SpecError(f"draft plan covers {len(spec.draft.drop_mask)} "
+                            f"layers, model has {n}")
+        return spec.draft
+    if spec.draft == "all-drop":
+        return SPDPlanConfig.full(n)
+    if spec.draft == "drop+quant4":
+        return SPDPlanConfig.from_modes(("drop+quant4",) * n, logits="quant4")
+    # tiered
+    if sensitivity is None or ranking is None:
+        raise SpecError(
+            "the 'tiered' draft preset needs a measured sensitivity "
+            "profile: call LLM.enable_spec(spec, calib_batches) or pass "
+            "sensitivity/ranking from core.sensitivity.measure_sensitivity")
+    from repro.core.spd import comm_policy_from_sensitivity
+    n_spd = n if spec.n_spd is None else spec.n_spd
+    return comm_policy_from_sensitivity(
+        np.asarray(sensitivity), ranking, n, n_spd=n_spd,
+        tau1=spec.tau1, tau2=spec.tau2, sb_level="quant8",
+        esb_level="exact", logits="exact")
+
+
+@dataclass
+class SpecState:
+    """Runtime bundle handed to `api.scheduler.Scheduler(spec=...)`:
+    the per-round draft budget plus a Drafter (or any object with the
+    same `pos` / `insert` / `draft` surface — the soak tests stub it)."""
+
+    k: int
+    drafter: object
+
+
+class Drafter:
+    """Per-scheduler draft runtime: draft engine + params + dense cache.
+
+    Invariant the scheduler maintains (docs/speculative.md): for every
+    active slot b, `pos[b]` — the next cache position the draft will
+    write — trails the target's position by at most one token, so each
+    round's catch-up context is 1 or 2 tokens (re-processing an
+    already-written position is idempotent: same tokens, same cache
+    prefix, same KV).
+    """
+
+    def __init__(self, engine, params, max_batch: int, cache_len: int,
+                 prefill_chunk: Optional[int] = None):
+        self.engine = engine
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.prefill_chunk = prefill_chunk
+        self.caches = engine.blank_caches(max_batch, cache_len)
+        self.pos = np.zeros(max_batch, np.int32)
+
+    def insert(self, b: int, toks):
+        """Draft-prefill one admitted request into slot b (the draft
+        needs its own KV for the prompt — that is the price of sharing
+        weights instead of sharing caches)."""
+        from repro.runtime.engines import bucketed_prefill
+        toks = np.asarray(toks, np.int32)
+        s = len(toks)
+        _, c1 = bucketed_prefill(self.engine, self.params, toks, s,
+                                 self.cache_len, self.prefill_chunk)
+        self.caches = self.engine.insert_slot(self.caches, c1, b)
+        self.pos[b] = s
+
+    def draft(self, ctx, start, k: int, sample_fn, greedy: bool = False):
+        """Propose k tokens per row.
+
+        ctx (B, C): committed tokens ending at each row's current token;
+        start (B,): absolute position of ctx[:, 0] (the catch-up prefix
+        re-syncs rows whose draft cache trails the target — see class
+        docstring).  sample_fn(full_logits (B, V), i) -> (B,) tokens is
+        the scheduler's per-request draw (it records the distribution
+        used, which the rejection scheme needs as q).
+
+        `greedy=True` (every active request greedy) skips sample_fn and
+        drafts by argmax through the engines' fused greedy decode —
+        only token ids cross to host, mirroring the verify fast path.
+
+        Returns (draft_toks (B, k) int32, draft_logits (B, k, V) fp32 —
+        None when greedy).
+        """
+        import jax.numpy as jnp
+        ctx = np.asarray(ctx, np.int32)
+        start = np.asarray(start, np.int32)
+        c = ctx.shape[1]
+        lg, self.caches = self.engine.verify(
+            self.params, jnp.asarray(ctx), jnp.asarray(start), self.caches)
+        base = start + c - 1            # each row's current-token position
+        last = lg[:, -1]                # device-side slice of (B, C, V)
+        if greedy:
+            toks = [np.asarray(jnp.argmax(last, -1), np.int32)]
+            for i in range(1, k):
+                nxt, self.caches = self.engine.decode(
+                    self.params, jnp.asarray(toks[-1][:, None]),
+                    jnp.asarray(base + i), self.caches)
+                toks.append(np.asarray(nxt, np.int32)[:, 0])
+            return np.stack(toks, 1), None
+        logits = [np.asarray(last)]
+        toks = [np.asarray(sample_fn(logits[0], 0), np.int32)]
+        for i in range(1, k):
+            _, full, self.caches = self.engine.decode_with_logits(
+                self.params, jnp.asarray(toks[-1][:, None]),
+                jnp.asarray(base + i), self.caches)
+            logits.append(np.asarray(full))
+            toks.append(np.asarray(sample_fn(logits[-1], i), np.int32))
+        return np.stack(toks, 1), np.stack(logits, 1)

@@ -1,0 +1,156 @@
+"""Acceptance math for self-speculative decoding.
+
+The verify forward (runtime/engines.py `verify` / `verify_paged`) scores
+the last accepted token plus k drafted tokens in one step and hands the
+full-vocab target logits to this module.  Two schemes:
+
+  * greedy rows (temperature <= 0): accept draft i iff it equals the
+    target argmax after the accepted prefix; the first mismatch (or the
+    position after the last accepted draft) commits the target argmax
+    instead.  The committed stream is therefore TOKEN-IDENTICAL to plain
+    greedy decoding — speculation only changes how many forwards it took.
+
+  * sampled rows: the standard rejection scheme (Leviathan et al. /
+    Chen et al.).  Draft token d ~ q is accepted with probability
+    min(1, p(d)/q(d)); on rejection the replacement is drawn from the
+    residual max(p - q, 0)/Z, and when every draft survives a bonus
+    token is drawn from the target's next-position distribution.  With
+    q the EXACT distribution each draft was sampled from (the Drafter
+    records it draw-by-draw) the committed tokens are distributed
+    exactly as sampling the target model alone — speculation is
+    distribution-preserving, though not stream-identical (the draws
+    differ from plain decoding's; see docs/speculative.md).
+
+Both p and q go through `filtered_probs`, the numpy mirror of the jitted
+sampling step's temperature / top-k / top-p filtering
+(runtime/sampling.py `sample_core`), so the preserved distribution is the
+one `SamplingParams` promises, not the raw softmax.
+
+Everything here is host-side numpy over (V,) rows: acceptance is a
+per-request decision on small arrays, and keeping it out of the jitted
+step lets one compiled verify forward serve every SamplingParams mix.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+__all__ = ["filtered_probs", "accept_greedy", "accept_speculative",
+           "spec_rng"]
+
+_TINY = 1e-12
+
+
+def _softmax(x):
+    m = np.max(x)
+    if not np.isfinite(m):
+        # all -inf (fully filtered) cannot happen: the top token always
+        # survives both filters; guard anyway
+        return np.full_like(x, 1.0 / x.size)
+    e = np.exp(x - m)
+    return e / e.sum()
+
+
+def filtered_probs(logits, temperature: float, top_k: int,
+                   top_p: float) -> np.ndarray:
+    """One row's sampling distribution under SamplingParams filtering.
+
+    Mirrors `runtime.sampling.sample_core`: temperature <= 0 is greedy
+    (a one-hot at the argmax, first index on ties); top-k keeps the k
+    highest logits (threshold = k-th largest); top-p keeps the smallest
+    descending-probability prefix reaching mass p (top token always
+    kept), with the cutoff carried back as a logit threshold.
+    """
+    lg = np.asarray(logits, np.float64).copy()
+    v = lg.shape[-1]
+    if temperature <= 0.0:
+        p = np.zeros(v)
+        p[int(np.argmax(lg))] = 1.0
+        return p
+    t = max(float(temperature), 1e-6)
+    desc = np.sort(lg)[::-1]
+    if top_k > 0:
+        kth = desc[min(max(int(top_k) - 1, 0), v - 1)]
+        lg = np.where(lg < kth, -np.inf, lg)
+        desc = np.where(desc < kth, -np.inf, desc)
+    ds = desc / t
+    ps = _softmax(ds)
+    keep = (np.cumsum(ps) - ps) < float(top_p)
+    thr = np.min(np.where(keep, ds, np.inf))
+    scaled = np.where(lg / t < thr, -np.inf, lg / t)
+    return _softmax(scaled)
+
+
+def spec_rng(seed: int, n_generated: int) -> np.random.Generator:
+    """Per-request, per-round RNG: a function of (seed, committed token
+    count) only — independent of batch composition and scheduling, like
+    the jitted sampling step's fold_in keys."""
+    return np.random.default_rng([seed & 0xFFFFFFFF, n_generated])
+
+
+def accept_greedy(draft_toks, target_argmax) -> Tuple[List[int], int]:
+    """Greedy acceptance from argmax ids alone (the all-greedy fast
+    path: only (k+1,) ints leave the device, mirroring the fused-greedy
+    decode).  target_argmax[i] is the target's argmax after draft i-1
+    (i=0: after the accepted prefix).  Identical decisions to
+    `accept_speculative` on greedy rows."""
+    draft_toks = np.asarray(draft_toks)
+    committed: List[int] = []
+    for i in range(draft_toks.shape[0]):
+        g = int(target_argmax[i])
+        committed.append(g)
+        if int(draft_toks[i]) != g:
+            return committed, i
+    committed.append(int(target_argmax[draft_toks.shape[0]]))
+    return committed, draft_toks.shape[0]
+
+
+def accept_speculative(draft_toks, draft_probs, target_logits, *,
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0,
+                       rng: np.random.Generator | None = None,
+                       ) -> Tuple[List[int], int]:
+    """One row's acceptance decision.
+
+    draft_toks    (k,)    drafted tokens
+    draft_probs   (k, V)  the exact distribution each draft was drawn
+                          from (ignored for greedy rows)
+    target_logits (k+1, V) verify-forward logits; row i scores the token
+                          after draft i-1 (row 0 after the accepted
+                          prefix), row k the bonus position
+    returns (committed tokens, n_accepted) with len(committed) ==
+    n_accepted + 1 — every round commits at least one target-approved
+    token, so speculative decoding never stalls.
+    """
+    draft_toks = np.asarray(draft_toks)
+    k = draft_toks.shape[0]
+    greedy = temperature <= 0.0
+    committed: List[int] = []
+    for i in range(k):
+        d = int(draft_toks[i])
+        if greedy:
+            g = int(np.argmax(target_logits[i]))
+            if d == g:
+                committed.append(d)
+                continue
+            committed.append(g)
+            return committed, i
+        p = filtered_probs(target_logits[i], temperature, top_k, top_p)
+        q = np.asarray(draft_probs[i], np.float64)
+        if rng.random() < p[d] / max(q[d], _TINY):
+            committed.append(d)
+            continue
+        resid = np.maximum(p - q, 0.0)
+        z = resid.sum()
+        if z <= _TINY:          # q covers p exactly: resample from p
+            resid, z = p, p.sum()
+        committed.append(int(rng.choice(resid.shape[0], p=resid / z)))
+        return committed, i
+    # every draft accepted: bonus token from the target's next position
+    if greedy:
+        committed.append(int(np.argmax(target_logits[k])))
+    else:
+        p = filtered_probs(target_logits[k], temperature, top_k, top_p)
+        committed.append(int(rng.choice(p.shape[0], p=p)))
+    return committed, k

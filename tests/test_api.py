@@ -120,9 +120,10 @@ def _prompts(cfg, n=3, seed=0):
 
 def test_generate_greedy_matches_legacy_server(llm_sim):
     """Regression lock: LLM.generate == the pre-facade dense Server."""
-    from repro.runtime.server import Server
+    from repro.runtime.server import Server, _reset_deprecation_warnings
     prompts = _prompts(llm_sim.cfg)
     outs = llm_sim.generate(prompts, SamplingParams(max_new=MAXNEW))
+    _reset_deprecation_warnings()      # shims warn once per class
     with pytest.deprecated_call():
         srv = Server(llm_sim.engine, llm_sim.params, max_batch=2,
                      cache_len=64)

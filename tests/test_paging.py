@@ -1,18 +1,19 @@
-"""Paged KV-cache runtime: allocator invariants, paged-vs-dense decode
-equivalence on both engines, chunked prefill, and a preemption soak."""
+"""Paged KV-cache runtime: allocator invariants (grow/release/shrink),
+paged-vs-dense decode equivalence on both engines, chunked prefill, and
+a preemption soak."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import make_cfg
+from repro.api.scheduler import CacheConfig, Request, Scheduler
 from repro.config.base import SPDPlanConfig
 from repro.core import model as M, simtp
 from repro.launch.mesh import make_test_mesh
 from repro.parallel import tp as TP
 from repro.runtime.engines import ShardEngine, SimEngine
 from repro.runtime.paging import PagePool
-from repro.runtime.server import PagedServer, Request, Server
 
 
 # ---------------------------------------------------------------------------
@@ -43,6 +44,31 @@ def test_pool_alloc_free_invariants():
     pool.reset()
     pool.check()
     assert pool.num_free == 8
+
+
+def test_pool_shrink_truncates_and_returns_pages():
+    """Speculative rollback: shrink returns exactly the suffix pages to
+    the free list and preserves the table's valid-prefix invariant."""
+    pool = PagePool(num_pages=8, page_size=4, max_slots=2, pages_per_slot=4)
+    assert pool.grow(0, 16)               # 4 pages
+    kept = [int(p) for p in pool.table[0][:2]]
+    assert pool.shrink(0, 7) == 2         # 7 tokens -> 2 pages
+    pool.check()
+    assert int(pool.owned[0]) == 2
+    assert [int(p) for p in pool.table[0][:2]] == kept   # prefix untouched
+    assert (pool.table[0][2:] == -1).all()
+    assert pool.num_free == 6
+    # no-ops: shrink to >= current allocation, or on an empty slot
+    assert pool.shrink(0, 8) == 0 and pool.shrink(0, 100) == 0
+    assert pool.shrink(1, 0) == 0
+    pool.check()
+    # shrink to zero tokens == release
+    assert pool.shrink(0, 0) == 2
+    assert pool.num_free == 8
+    pool.check()
+    # released pages are immediately reusable by another slot
+    assert pool.grow(1, 16)
+    pool.check()
 
 
 def test_pool_fits_alone():
@@ -215,10 +241,11 @@ def _reqs(cfg, n=6, seed=1, max_new=6):
 def test_paged_server_soak_with_preemption(served):
     """Demand (6 requests, up to 35 tokens each) far exceeds the pool
     (6 pages x 8 tokens): every request must still complete, via
-    preemption-by-eviction, and match the dense server's outputs."""
+    preemption-by-eviction, and match the dense scheduler's outputs."""
     cfg, split, eng = served
-    srv = PagedServer(eng, split, max_slots=4, cache_len=64, page_size=8,
-                      num_pages=6, prefill_chunk=8)
+    srv = Scheduler(eng, split, CacheConfig(
+        cache_len=64, max_batch=4, page_size=8, num_pages=6,
+        prefill_chunk=8))
     for r in _reqs(cfg):
         srv.submit(r)
     done = srv.run()
@@ -228,7 +255,7 @@ def test_paged_server_soak_with_preemption(served):
     assert srv.n_preemptions > 0          # the pool really was exhausted
     assert srv.pool.num_free == srv.pool.num_pages   # all pages returned
 
-    ref = Server(eng, split, max_batch=2, cache_len=64)
+    ref = Scheduler(eng, split, CacheConfig(cache_len=64, max_batch=2))
     for r in _reqs(cfg):
         ref.submit(r)
     ref_done = ref.run()
@@ -236,10 +263,52 @@ def test_paged_server_soak_with_preemption(served):
         assert done[uid].out == ref_done[uid].out, uid
 
 
+def test_spec_paged_truncation_invariants():
+    """Draft-token churn against a small pool: after every scheduler
+    step the allocator invariants hold and each active slot owns exactly
+    the pages its COMMITTED length needs (the speculative suffix the
+    verify round rejected has been truncated back to the free list)."""
+    from repro.api import LLM, SamplingParams, SpecConfig
+    from repro.runtime.paging import pages_for
+
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim",
+                   dtype="float32", cache_len=64, max_batch=2,
+                   page_size=4, num_pages=12, q_chunk=64,
+                   spec=SpecConfig(k=3, draft="all-drop"))
+    sched = llm.serve()
+    rng = np.random.default_rng(2)
+    for uid in range(4):
+        sched.submit(Request(
+            uid=uid, prompt=rng.integers(0, llm.cfg.vocab_size,
+                                         3 + 4 * uid).astype(np.int32),
+            max_new=7))
+    saw_truncation = False
+    steps = 0
+    while sched.has_work() and steps < 200:
+        sched.step()
+        steps += 1
+        sched.pool.check()
+        for b, r in enumerate(sched.slots):
+            if r is None:
+                assert int(sched.pool.owned[b]) == 0
+                continue
+            pos = int(sched.pos[b])
+            owned = int(sched.pool.owned[b])
+            ps = sched.pool.page_size
+            assert pages_for(pos, ps) <= owned <= pages_for(pos + 1, ps), \
+                (b, pos, owned)
+            if owned == pages_for(pos, ps) < pages_for(pos + 3 + 1, ps):
+                saw_truncation = True    # grew for k+1, gave pages back
+    assert all(r.done for r in sched.completed.values())
+    assert sched.pool.num_free == sched.pool.num_pages
+    assert saw_truncation
+    assert sched.spec_rounds > 0
+
+
 def test_paged_server_rejects_oversized(served):
     cfg, split, eng = served
-    srv = PagedServer(eng, split, max_slots=2, cache_len=64, page_size=8,
-                      num_pages=4)                  # 32-token pool
+    srv = Scheduler(eng, split, CacheConfig(
+        cache_len=64, max_batch=2, page_size=8, num_pages=4))  # 32-token pool
     with pytest.raises(ValueError):
         srv.submit(Request(uid=0,
                            prompt=np.zeros(30, np.int32), max_new=8))

@@ -105,6 +105,59 @@ class FakeEngine:
     def decode_paged(self, params, cur, pos, page_table, pcaches):
         return self._dec(cur, pos), pcaches
 
+    # speculative verify: one-hot next-token logits for every chunk
+    # position (token toks[:, j] sits at absolute position pos + j)
+    def verify(self, params, toks, pos, caches):
+        toks = np.asarray(toks)
+        pos = np.asarray(pos)
+        b, c = toks.shape
+        logits = np.full((b, c, V), -1.0, np.float32)
+        for j in range(c):
+            nxt = (toks[:, j] * 31 + pos + j + 2) % V
+            logits[np.arange(b), j, nxt] = 1.0
+        return jnp.asarray(logits), caches
+
+    def verify_paged(self, params, toks, pos, page_table, pcaches):
+        lg, _ = self.verify(params, toks, pos, None)
+        return lg, pcaches
+
+
+class FakeDrafter:
+    """Drafter-contract stub over the same closed-form recurrence, with
+    a deterministic corruption: every position divisible by 3 proposes a
+    WRONG token.  The verify round must reject exactly there, so spec
+    scheduling exercises partial acceptance, rollback/truncation, and
+    preemption/cancel of requests carrying unverified draft tokens —
+    while the committed greedy streams stay equal to the reference."""
+
+    def __init__(self, max_batch):
+        self.pos = np.zeros(max_batch, np.int32)
+
+    def insert(self, b, toks):
+        self.pos[b] = len(toks)
+
+    def draft(self, ctx, start, k, sample_fn, greedy=False):
+        # greedy=True permits skipping sample_fn; calling it is also
+        # valid (it draws argmax for greedy rows), which keeps this stub
+        # on the one code path
+        ctx = np.asarray(ctx)
+        start = np.asarray(start)
+        b, c = ctx.shape
+        base = start + c - 1
+        cur = ctx[:, -1].copy()
+        toks, logits = [], []
+        for i in range(k):
+            p = base + i
+            nxt = (cur * 31 + p + 2) % V
+            prop = np.where(p % 3 == 0, (nxt + 1) % V, nxt)
+            lg = np.full((b, V), -1.0, np.float32)
+            lg[np.arange(b), prop] = 1.0
+            chosen = np.asarray(sample_fn(lg, i))
+            toks.append(chosen)
+            logits.append(lg)
+            cur = chosen
+        return np.stack(toks, 1), np.stack(logits, 1)
+
 
 def _check_invariants(sched: Scheduler):
     sched.kv.pool.check()      # free-list/page-table invariants
@@ -175,6 +228,67 @@ def test_scheduler_random_ops_soak(data):
         assert req.uid not in sched.completed
     # no page leaks once everything drained
     assert sched.kv.pool.num_free == cc.num_pages
+
+
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(st.data())
+def test_scheduler_spec_soak(data):
+    """The random-ops soak with speculative decoding on: draft-token
+    churn (partial acceptance every round), cancel of requests holding
+    unverified drafts, preemption under pool pressure mid-speculation —
+    invariants must hold after every op and the committed greedy streams
+    must still equal the closed-form reference."""
+    from repro.spec import SpecState
+
+    cc = CacheConfig(cache_len=32, max_batch=3, page_size=4, num_pages=9)
+    k = data.draw(st.integers(1, 3), label="k")
+    sched = Scheduler(FakeEngine(), None, cc,
+                      spec=SpecState(k=k, drafter=FakeDrafter(cc.max_batch)))
+    submitted, cancelled = [], []
+    uid = 0
+    for _ in range(data.draw(st.integers(4, 14), label="n_ops")):
+        op = data.draw(st.sampled_from(["submit", "step", "steps",
+                                        "cancel"]), label="op")
+        if op == "submit":
+            plen = data.draw(st.integers(1, 12), label="plen")
+            max_new = data.draw(st.integers(1, 8), label="max_new")
+            prompt = np.asarray(
+                data.draw(st.lists(st.integers(0, V - 1), min_size=plen,
+                                   max_size=plen), label="prompt"),
+                np.int32)
+            req = Request(uid=uid, prompt=prompt, max_new=max_new)
+            uid += 1
+            try:
+                sched.submit(req)
+                submitted.append(req)
+            except InvalidRequestError:
+                assert plen + max_new > cc.cache_len \
+                    or not sched.kv.pool.fits_alone(plen + max_new)
+        elif op == "cancel" and submitted:
+            req = submitted.pop(
+                data.draw(st.integers(0, len(submitted) - 1), label="ci"))
+            sched.cancel([req])
+            cancelled.append(req)
+        else:
+            for _ in range(1 if op == "step"
+                           else data.draw(st.integers(2, 4), label="k2")):
+                sched.step()
+        _check_invariants(sched)
+
+    sched.run(max_steps=500)
+    _check_invariants(sched)
+    for req in submitted:
+        assert req.done, req.uid
+        assert req.out == reference_stream(req.prompt, req.max_new), \
+            (req.uid, req.n_preempted, req.n_drafted, req.n_draft_accepted)
+        assert req.n_draft_accepted <= req.n_drafted
+    for req in cancelled:
+        assert req.uid not in sched.completed
+    assert sched.kv.pool.num_free == cc.num_pages
+    assert sched.spec_accepted <= sched.spec_drafted
+    if sched.spec_row_rounds:
+        # every verify round commits at least one target-approved token
+        assert sched.spec_tokens_per_step >= 1.0
 
 
 @settings(max_examples=max(5, EXAMPLES // 5), deadline=None)

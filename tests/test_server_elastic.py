@@ -10,8 +10,13 @@ from repro.config.base import SPDPlanConfig
 from repro.core import model as M, simtp
 from repro.launch.mesh import make_test_mesh
 from repro.parallel import tp as TP
+from repro.api.scheduler import CacheConfig, Request, Scheduler
 from repro.runtime.engines import SimEngine
-from repro.runtime.server import Request, Server
+
+
+def _dense_server(eng, split, *, max_batch, cache_len):
+    return Scheduler(eng, split, CacheConfig(cache_len=cache_len,
+                                             max_batch=max_batch))
 
 
 @pytest.fixture(scope="module")
@@ -27,7 +32,7 @@ def served():
 
 def test_server_matches_teacher_forced_argmax(served):
     cfg, plan, tp, split, eng = served
-    server = Server(eng, split, max_batch=2, cache_len=64)
+    server = _dense_server(eng, split, max_batch=2, cache_len=64)
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
     server.submit(Request(uid=0, prompt=prompt, max_new=6))
@@ -45,7 +50,7 @@ def test_server_matches_teacher_forced_argmax(served):
 
 def test_continuous_batching_staggered(served):
     cfg, plan, tp, split, eng = served
-    server = Server(eng, split, max_batch=2, cache_len=64)
+    server = _dense_server(eng, split, max_batch=2, cache_len=64)
     rng = np.random.default_rng(1)
     for uid in range(5):
         server.submit(Request(
@@ -57,7 +62,7 @@ def test_continuous_batching_staggered(served):
     for uid, r in done.items():
         assert len(r.out) == 4 + uid
     # single-request reference for uid 3
-    solo = Server(eng, split, max_batch=1, cache_len=64)
+    solo = _dense_server(eng, split, max_batch=1, cache_len=64)
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab_size, 4 + 3 * u).astype(np.int32)
                for u in range(5)]

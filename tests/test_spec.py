@@ -1,0 +1,288 @@
+"""Self-speculative decoding (src/repro/spec, docs/speculative.md).
+
+Locks the subsystem's three contracts:
+  * greedy spec decoding is TOKEN-IDENTICAL to plain greedy decoding on
+    both engines and both cache layouts (including under paged-pool
+    preemption);
+  * sampled spec decoding preserves the target distribution via the
+    rejection scheme (statistical check on real model logits; tolerance
+    documented at the assert);
+  * a less aggressive draft (Algorithm-1 "tiered") is accepted at least
+    as often as the fully-desynced "all-drop" draft.
+Plus bench_spec's headline numbers and the deprecated-shim warnings.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import make_cfg
+from repro.api import LLM, Request, SamplingParams, SpecConfig
+from repro.spec import SpecError, accept_speculative, filtered_probs
+from repro.spec.verify import spec_rng
+
+MAXNEW = 10
+
+
+def _prompts(cfg, n=5, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, int(m)).astype(np.int32)
+            for m in rng.integers(3, 12, n)]
+
+
+def _load(engine, paged, spec=None, max_batch=3):
+    kw = dict(tp=2, engine=engine, dtype="float32", cache_len=64,
+              max_batch=max_batch, q_chunk=64, spec=spec)
+    if engine == "shard":
+        kw["dp"] = 1
+    if paged:
+        kw.update(page_size=4, num_pages=14)
+    return LLM.load("smollm-360m-reduced", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Greedy spec == plain greedy, every engine x cache layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def greedy_ref():
+    llm = _load("sim", paged=False)
+    prompts = _prompts(llm.cfg)
+    sp = SamplingParams(max_new=MAXNEW)
+    return prompts, sp, [o.token_ids for o in llm.generate(prompts, sp)]
+
+
+@pytest.mark.parametrize("engine,paged", [("sim", False), ("sim", True),
+                                          ("shard", False), ("shard", True)],
+                         ids=["sim-dense", "sim-paged", "shard-dense",
+                              "shard-paged"])
+def test_greedy_spec_token_identical(engine, paged, greedy_ref):
+    prompts, sp, ref = greedy_ref
+    llm = _load(engine, paged, spec=SpecConfig(k=3, draft="all-drop"))
+    outs = llm.generate(prompts, sp)
+    assert [o.token_ids for o in outs] == ref
+    sched = llm.serve()
+    assert sched.spec_rounds > 0
+    assert sched.spec_tokens_per_step >= 1.0
+
+
+def test_greedy_spec_identical_under_preemption(greedy_ref):
+    """A pool small enough to force eviction mid-speculation: requests
+    carrying unverified draft state are preempted, resumed, and still
+    produce the exact greedy streams."""
+    prompts, sp, ref = greedy_ref
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim",
+                   dtype="float32", cache_len=64, max_batch=3, q_chunk=64,
+                   page_size=4, num_pages=10,
+                   spec=SpecConfig(k=3, draft="all-drop"))
+    outs = llm.generate(prompts, sp)
+    sched = llm.serve()
+    sched.pool.check()
+    assert [o.token_ids for o in outs] == ref
+    assert sched.n_preemptions > 0, "pool was meant to be under pressure"
+    assert sched.pool.num_free == sched.pool.num_pages
+
+
+def test_spec_stream_cancel_midway(greedy_ref):
+    """Abandoning a spec stream mid-generation must release slots and
+    draft state so the next batch runs clean (cancel-mid-verify)."""
+    prompts, sp, ref = greedy_ref
+    llm = _load("sim", paged=True, spec=SpecConfig(k=3, draft="all-drop"))
+    seen = 0
+    for ev in llm.generate_stream(prompts, sp):
+        seen += 1
+        if seen >= 4:
+            break                      # abandon: GeneratorExit -> cancel
+    sched = llm.serve()
+    assert all(s is None for s in sched.slots)
+    assert not sched.queue
+    outs = llm.generate(prompts, sp)   # same scheduler, fresh batch
+    assert [o.token_ids for o in outs] == ref
+
+
+# ---------------------------------------------------------------------------
+# Rejection sampling preserves the target distribution
+# ---------------------------------------------------------------------------
+
+
+def test_rejection_scheme_preserves_target_distribution():
+    """Statistical lock on spec/verify.py with REAL model logits: draft
+    the reduced model's all-drop logits, verify with its exact logits,
+    and check the first committed token's empirical distribution against
+    the filtered target distribution.
+
+    Tolerance: with top_k=16 the support has <= 16 tokens, so the
+    expected total-variation distance of an N=30000-sample empirical
+    distribution is ~0.5*sqrt(16/N) ~ 0.012; we assert TV < 0.03 (a
+    ~2.5x margin, deterministic under the fixed seeds)."""
+    llm = _load("sim", paged=False, spec=SpecConfig(k=3, draft="all-drop"))
+    prompts = _prompts(llm.cfg, n=1)
+    # real target + draft logits for one verify round, captured by
+    # running one greedy generate round manually through the scheduler
+    sched = llm.serve()
+    sched.submit(Request(uid=0, prompt=prompts[0], max_new=4))
+    sched._admit()
+    dr = sched.spec.drafter
+    k = 3
+    pos = sched.pos.copy()
+    ctx = np.zeros((sched.max_batch, 1), np.int32)
+    ctx[0, 0] = sched.cur[0, 0]
+    qs = {}
+
+    def sample_fn(logits, i):
+        qs[i] = logits.copy()
+        return np.argmax(logits, -1).astype(np.int32)
+
+    draft_toks, draft_logits = dr.draft(ctx, pos, k, sample_fn)
+    ver = np.concatenate([sched.cur, draft_toks], 1)
+    import jax.numpy as jnp
+    target_logits = sched.kv.verify(llm.params, jnp.asarray(ver),
+                                    jnp.asarray(pos))[0]
+    dlg = draft_logits[0]
+
+    temp, top_k, top_p = 0.8, 16, 0.95
+    q = np.stack([filtered_probs(dlg[i], temp, top_k, top_p)
+                  for i in range(k)])
+    p0 = filtered_probs(target_logits[0], temp, top_k, top_p)
+    V = p0.shape[0]
+    N = 30_000
+    counts = np.zeros(V)
+    for t in range(N):
+        rng = np.random.default_rng(10_000 + t)
+        drafts = np.asarray([rng.choice(V, p=q[i]) for i in range(k)])
+        committed, _ = accept_speculative(
+            drafts, q, target_logits, temperature=temp, top_k=top_k,
+            top_p=top_p, rng=rng)
+        counts[committed[0]] += 1
+    tv = 0.5 * np.abs(counts / N - p0).sum()
+    assert tv < 0.03, tv
+    # and the scheme really was exercised: drafts disagree with the
+    # target sometimes (all-drop draft) but not always
+    assert 0 < (counts > 0).sum() <= 16
+
+
+def test_greedy_acceptance_is_argmax_chain():
+    rng = np.random.default_rng(0)
+    k, v = 3, 32
+    tl = rng.standard_normal((k + 1, v))
+    g = np.argmax(tl, -1)
+    # perfect drafts: all accepted + bonus
+    committed, n_acc = accept_speculative(g[:k], None, tl)
+    assert n_acc == k and committed == list(g)
+    # first draft wrong: replacement is the target argmax
+    bad = g[:k].copy()
+    bad[0] = (bad[0] + 1) % v
+    committed, n_acc = accept_speculative(bad, None, tl)
+    assert n_acc == 0 and committed == [int(g[0])]
+
+
+def test_filtered_probs_matches_sample_core_greedy_and_support():
+    rng = np.random.default_rng(1)
+    lg = rng.standard_normal(64)
+    p = filtered_probs(lg, 0.0, 0, 1.0)
+    assert p[np.argmax(lg)] == 1.0 and p.sum() == 1.0
+    # top-k support bound and renormalization
+    p = filtered_probs(lg, 1.0, 8, 1.0)
+    assert (p > 0).sum() == 8 and abs(p.sum() - 1.0) < 1e-9
+    # top-p keeps the smallest prefix reaching the mass (top token kept)
+    p = filtered_probs(lg, 1.0, 0, 1e-9)
+    assert (p > 0).sum() == 1
+    assert spec_rng(-5, 3).random() == spec_rng(-5, 3).random()
+
+
+def test_sampled_spec_runs_and_respects_budget():
+    llm = _load("sim", paged=True, spec=SpecConfig(k=3, draft="all-drop"))
+    prompts = _prompts(llm.cfg)
+    sp = SamplingParams(temperature=0.9, top_k=32, top_p=0.95, seed=7,
+                        max_new=MAXNEW)
+    outs = llm.generate(prompts, sp)
+    assert all(len(o.token_ids) == MAXNEW for o in outs)
+    assert all(0 <= t < llm.cfg.vocab_size
+               for o in outs for t in o.token_ids)
+
+
+# ---------------------------------------------------------------------------
+# Draft presets
+# ---------------------------------------------------------------------------
+
+
+def test_tiered_draft_accepts_at_least_all_drop():
+    """A draft that keeps the sensitive blocks' syncs (Algorithm-1
+    tiers) must be at least as acceptable as dropping every sync."""
+    from repro.data.synthetic import calibration_batches
+
+    prompts = _prompts(make_cfg("smollm-360m"), n=6, seed=0)
+    sp = SamplingParams(max_new=12)
+
+    def rate(llm):
+        llm.generate(prompts, sp)
+        return llm.serve().spec_acceptance
+
+    all_drop = _load("sim", paged=False,
+                     spec=SpecConfig(k=3, draft="all-drop"))
+    r_all = rate(all_drop)
+    tiered = _load("sim", paged=False)
+    calib = calibration_batches(tiered.cfg.vocab_size, 4, 32)
+    tiered.enable_spec(SpecConfig(k=3, draft="tiered", n_spd=2,
+                                  tau1=0.05, tau2=0.5), calib)
+    assert tiered.draft_plan.n_dropped < tiered.cfg.n_layers
+    r_tiered = rate(tiered)
+    assert r_tiered >= r_all, (r_tiered, r_all)
+
+
+def test_spec_config_validation():
+    with pytest.raises(SpecError):
+        SpecConfig(k=0)
+    with pytest.raises(SpecError):
+        SpecConfig(draft="nope")
+    # tiered without a sensitivity profile
+    with pytest.raises(SpecError):
+        _load("sim", paged=False, spec=SpecConfig(draft="tiered"))
+    # archs without a droppable sync point cannot self-draft
+    with pytest.raises(SpecError):
+        LLM.load(make_cfg("mamba2-370m"), tp=2, engine="sim",
+                 cache_len=64, q_chunk=64,
+                 spec=SpecConfig(k=2, draft="all-drop"))
+
+
+# ---------------------------------------------------------------------------
+# bench_spec headline numbers
+# ---------------------------------------------------------------------------
+
+
+def test_bench_spec_reports_speedup_and_wire_saving(tmp_path, monkeypatch):
+    import benchmarks.bench_spec as BS
+
+    monkeypatch.setattr(BS, "BENCH_JSON_ROOT", str(tmp_path), raising=False)
+    rows = BS.run(lambda *a, **k: None)
+    head = [r for r in rows if r.get("kind") == "serve"]
+    assert head and all(r["tokens_per_step"] > 1.0 for r in head)
+    wire = [r for r in rows if r.get("kind") == "wire"]
+    assert {r["tp"] for r in wire} == {2, 4, 8}
+    # the SPD draft moves strictly fewer bytes than an exact-comm
+    # draft would — the ledger-measured saving speculation banks on
+    assert all(r["draft_wire_saved_bytes_per_tok"] > 0 for r in wire)
+    assert (tmp_path / "BENCH_spec.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# Deprecated Server/PagedServer shims warn once per class
+# ---------------------------------------------------------------------------
+
+
+def test_server_shims_warn_once_per_class():
+    from repro.runtime import server as RSRV
+
+    llm = _load("sim", paged=False, max_batch=2)
+    RSRV._reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        RSRV.Server(llm.engine, llm.params, max_batch=2, cache_len=64)
+        RSRV.Server(llm.engine, llm.params, max_batch=2, cache_len=64)
+        RSRV.PagedServer(llm.engine, llm.params, max_slots=2, cache_len=64,
+                         page_size=8, num_pages=8)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 2, [str(x.message) for x in dep]
+    assert "Server is deprecated" in str(dep[0].message)
+    assert "PagedServer is deprecated" in str(dep[1].message)
