@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-cov test-soak lint bench-smoke example-smoke spec-smoke
+.PHONY: test test-cov test-soak lint bench-smoke example-smoke spec-smoke \
+	backend-parity
 
 test:
 	$(PY) -m pytest -x -q
@@ -38,3 +39,9 @@ example-smoke:
 # token-equivalence, dense + paged (docs/speculative.md)
 spec-smoke:
 	$(PY) scripts/spec_smoke.py
+
+# registry-driven backend parity sweep: every registered parallel
+# backend, TP in {2,4}, dense + paged, token-identical greedy streams
+# (docs/architecture.md)
+backend-parity:
+	$(PY) scripts/backend_parity.py

@@ -38,7 +38,17 @@ def emit_json(bench: str, config: dict, metrics, root: str = None) -> str:
     machine-readable artifact the perf trajectory can be tracked from
     across PRs.  `metrics` is whatever the bench's `run()` returns
     (typically its rows list); `config` the knobs that shaped the run.
-    Returns the path written."""
+    Every config block records the RESOLVED parallel backend (registry
+    name + class) behind the run's `engine`.  Unstated engine defaults
+    to "sim" — correct for every bench here, which all run either the
+    sim Engine or the simtp vmap math (the same backend regime); a
+    bench with no model execution at all can pass `engine=None` to
+    record `backend: null`.  Returns the path written."""
+    from repro.parallel.backend import resolved_backend_name
+    config = dict(config)
+    engine = config.get("engine", "sim")
+    config.setdefault(
+        "backend", resolved_backend_name(engine) if engine else None)
     path = os.path.join(root or REPO_ROOT, f"BENCH_{bench}.json")
     with open(path, "w") as f:
         json.dump({"bench": bench, "config": config, "metrics": metrics,

@@ -87,6 +87,33 @@ def run(csv):
         f"preempt={paged.n_preemptions}")
     rows.append({"mode": "ratio", "paged_over_dense": tps_p / tps_d})
     csv("serving/ratio", 0.0, f"paged/dense tok/s = {tps_p / tps_d:.2f}")
+
+    # decode steps DONATE the KV cache (runtime/forward.py StepSpec):
+    # after one step the input cache buffers must be gone — reused in
+    # place, not copied.  jax deletes donated buffers even where XLA
+    # ends up copying, so pair it with the compile-time aliasing count.
+    import jax
+    import jax.numpy as jnp
+    cs = llm.engine.blank_caches(4, cache_len)
+    leaves = jax.tree.leaves(cs)
+    _, cs2 = llm.engine.decode(llm.params, jnp.zeros((4, 1), jnp.int32),
+                               jnp.zeros((4,), jnp.int32), cs)
+    assert all(leaf.is_deleted() for leaf in leaves), \
+        "dense decode no longer donates its KV cache"
+    pcs = llm.engine.blank_paged_caches(4, cache_len, page_size=8,
+                                        num_pages=20)
+    pleaves = jax.tree.leaves(pcs)
+    table = jnp.full((4, cache_len // 8), -1, jnp.int32)
+    _, pcs2 = llm.engine.decode_paged(
+        llm.params, jnp.zeros((4, 1), jnp.int32),
+        jnp.zeros((4,), jnp.int32), table, pcs)
+    assert all(leaf.is_deleted() for leaf in pleaves), \
+        "paged decode no longer donates its KV cache"
+    rows.append({"mode": "donation", "dense_cache_donated": True,
+                 "paged_cache_donated": True})
+    csv("serving/donation", 0.0, "decode steps donate the KV cache")
+
     emit_json("serving", {"arch": cfg.name, "n_req": n_req,
-                          "cache_len": cache_len, "tp": 2}, rows)
+                          "cache_len": cache_len, "tp": 2,
+                          "engine": "sim"}, rows)
     return rows

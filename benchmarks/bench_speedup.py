@@ -65,7 +65,8 @@ def run(csv):
         csv("speedup/skipped", 0, "run the §Perf dry-run cells first "
             "(results/perf/A_*.json)")
         rows = _measured_rows(csv)
-        emit_json("speedup", {"source": "measured-only"}, rows)
+        emit_json("speedup", {"source": "measured-only", "engine": "sim"},
+                  rows)
         return rows
     rows = _measured_rows(csv)
     base = {}
@@ -92,5 +93,6 @@ def run(csv):
         hi = [r for r in rows
               if r.get("bw") == bw_name and r["spd"] >= 0.7]
         assert hi and max(r["speedup"] for r in hi) >= 1.10, (bw_name, rows)
-    emit_json("speedup", {"source": "results/perf/A_*.json"}, rows)
+    emit_json("speedup", {"source": "results/perf/A_*.json",
+                          "engine": "sim"}, rows)
     return rows

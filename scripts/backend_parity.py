@@ -1,0 +1,60 @@
+"""Registry-driven backend parity sweep (`make backend-parity`).
+
+For EVERY backend registered in `repro.parallel.backend`, run the same
+greedy batch through `LLM.load(engine=<name>)` at TP in {2, 4}, dense
+AND paged, and require token-identical streams across backends.  The
+backend axis is read from the registry at runtime, so a newly
+registered backend is swept with zero changes here — this is the CI
+gate that keeps backend parity a generated matrix instead of
+hand-written engine pairs (docs/architecture.md).
+
+    PYTHONPATH=src python scripts/backend_parity.py
+"""
+import json
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+
+TPS = (2, 4)
+MAX_NEW = 8
+
+
+def main():
+    from repro.api import LLM, SamplingParams
+    from repro.parallel.backend import backend_names, resolved_backend_name
+
+    names = backend_names()
+    assert len(names) >= 2, names
+    report = {"backends": [resolved_backend_name(n) for n in names]}
+    for tp in TPS:
+        streams = {}
+        prompts = None
+        for name in names:
+            for paged in (False, True):
+                kw = dict(tp=tp, engine=name, dtype="float32",
+                          cache_len=64, max_batch=3, q_chunk=64)
+                if paged:
+                    kw.update(page_size=8, num_pages=18)
+                llm = LLM.load("smollm-360m-reduced", **kw)
+                if prompts is None:
+                    rng = np.random.default_rng(tp)
+                    prompts = [rng.integers(0, llm.cfg.vocab_size,
+                                            int(n)).astype(np.int32)
+                               for n in rng.integers(4, 14, 4)]
+                outs = llm.generate(prompts,
+                                    SamplingParams(max_new=MAX_NEW))
+                streams[(name, paged)] = [o.token_ids for o in outs]
+        ref = streams[(names[0], False)]
+        mismatches = [f"{n}{'-paged' if p else ''}"
+                      for (n, p), s in streams.items() if s != ref]
+        assert not mismatches, f"tp={tp}: parity broken on {mismatches}"
+        report[f"tp{tp}"] = {"cells": len(streams), "parity": "ok",
+                             "tokens": ref}
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

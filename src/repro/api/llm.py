@@ -121,6 +121,11 @@ class LLM:
              q_chunk: int = 64, mesh=None, spec=None) -> "LLM":
         """Load `arch` (config name or ModelConfig) onto an engine.
 
+        engine     a parallel-backend registry name
+                   (`repro.parallel.backend.backend_names()`): "sim"
+                   (vmap simulated TP, one device) or "shard"
+                   (shard_map over a dp x tp mesh); a newly registered
+                   backend is loadable here by its name.
         spd        fraction of blocks to SPD-drop (first-k plan) —
                    ignored when an explicit `plan` is given; use
                    `apply_spd` for the paper's sensitivity-ranked plan.
@@ -165,12 +170,8 @@ class LLM:
             # only the logits gather
             plan = plan.with_comm(
                 _resolve_comm(comm, cfg.n_layers, comm_logits))
-        if engine not in ("sim", "shard"):
-            raise ValueError(f"unknown engine {engine!r} "
-                             "(expected 'sim' or 'shard')")
-        if engine == "sim" and dp != 1:
-            raise ValueError("engine='sim' simulates TP on one device; "
-                             f"dp must be 1 (got {dp})")
+        from repro.parallel.backend import resolve_backend
+        resolve_backend(engine)       # fail fast on unknown engine names
         canonical = (params if params is not None
                      else M.init_model(jax.random.PRNGKey(seed), cfg))
         cache = CacheConfig(cache_len=cache_len, max_batch=max_batch,
@@ -184,17 +185,20 @@ class LLM:
         return llm
 
     def _make_engine(self, plan=None):
-        """Fresh engine for `plan` (default: the current serving plan) —
-        the single place that knows how each engine kind is built."""
-        from repro.runtime.engines import ShardEngine, SimEngine
+        """Fresh engine for `plan` (default: the current serving plan):
+        the engine kind resolves through the backend registry
+        (repro.parallel.backend), so a newly registered backend is
+        loadable here with zero facade changes."""
+        from repro.parallel.backend import make_backend
+        from repro.runtime.engines import Engine
 
         plan = plan if plan is not None else self.plan
-        if self.engine_kind == "sim":
-            return SimEngine(self.cfg, plan, self.tp, q_chunk=self.q_chunk)
-        if self.mesh is None:
-            from repro.launch.mesh import make_test_mesh
-            self.mesh = make_test_mesh(self.dp, self.tp)
-        return ShardEngine(self.cfg, plan, self.mesh, q_chunk=self.q_chunk)
+        backend = make_backend(self.engine_kind, self.cfg, plan,
+                               tp=self.tp, dp=self.dp, mesh=self.mesh)
+        # backends that build a device mesh share it with later engines
+        # (the draft engine must live on the same devices)
+        self.mesh = getattr(backend, "mesh", self.mesh)
+        return Engine(self.cfg, plan, backend, q_chunk=self.q_chunk)
 
     def _build_engine(self):
         """(Re)build the engine for `self.plan` and place canonical
@@ -207,25 +211,19 @@ class LLM:
             # rebuild it whenever the canonical weights may have moved
             self._build_spec()
 
-    def _place(self, tree, *, padded: bool, plan=None):
-        """Canonical (or already-padded) params -> engine-native layout
-        under `plan` (default: the serving plan).  The draft places the
-        SAME canonical tensors under its own plan — zero extra trained
-        weights, just a second layout."""
-        import jax
-        import jax.numpy as jnp
+    def _place(self, tree, *, padded: bool, engine=None):
+        """Canonical (or already-padded) params -> the backend-native
+        layout of `engine` (default: the serving engine).  The backend
+        carries the plan it was built with, so placement and compiled
+        steps can never disagree on segmentation; the draft engine
+        places the SAME canonical tensors under its own plan — zero
+        extra trained weights, just a second layout."""
         from repro.core import model as M
-        from repro.core import simtp
-        from repro.parallel import tp as TP
 
-        plan = plan if plan is not None else self.plan
+        backend = (engine if engine is not None else self.engine).backend
         pt = tree if padded else M.pad_model(tree, self.cfg, self.tp)
-        stacked = M.stack_segments(pt, self.cfg, plan)
-        if self.engine_kind == "sim":
-            return simtp.split_stacked(stacked, self.cfg, plan, self.tp)
-        stacked = jax.tree.map(jnp.array, stacked)
-        return jax.device_put(stacked, TP.named(
-            self.mesh, TP.param_pspecs(self.cfg, plan)))
+        return backend.place_params(
+            M.stack_segments(pt, self.cfg, backend.plan))
 
     # ---------------- speculative decoding ----------------
 
@@ -268,7 +266,7 @@ class LLM:
         under the draft plan's segmentation."""
         self.draft_engine = self._make_engine(self.draft_plan)
         self.draft_params = self._place(self.canonical, padded=False,
-                                        plan=self.draft_plan)
+                                        engine=self.draft_engine)
         self._sched = None
 
     def _spec_state(self, cache: CacheConfig):

@@ -6,10 +6,11 @@ admission + preemption-by-eviction).  They are collapsed here into a
 single `Scheduler` driven by a `CacheConfig`: dense is simply the
 `page_size=num_pages=None` degenerate case, realized by a pluggable
 `KVCacheManager` (`DenseKVCacheManager` / `PagedKVCacheManager`).  The
-old constructors in `repro.runtime.server` remain as deprecated shims
-over this class.
+deprecated `repro.runtime.server` shims over this class were deleted
+in PR 5 — this IS the serving entrypoint.
 
-Engine contract (runtime/engines.py — SimEngine and ShardEngine):
+Engine contract (the unified runtime/engines.py Engine, identical on
+every registered parallel backend — docs/architecture.md):
     prefill / prefill_chunked            -> (logits, caches1)
     decode / decode_sampled              dense decode step
     decode_paged / decode_paged_sampled  paged decode step

@@ -172,16 +172,28 @@ def run_cell(arch, shape_name, mesh_kind, spd,
             opt_structs = jax.eval_shape(init, pstructs)
             lowered = step.lower(pstructs, opt_structs, ins)
         elif shape_cfg.kind == "prefill":
-            pre = TP.build_prefill(cfg, plan, mesh,
-                                   q_chunk=min(1024, shape_cfg.seq_len),
-                                   shard_batch=shard_batch)
-            args = [pstructs, ins["tokens"]]
-            if cfg.frontend_dim:
-                args.append(ins["embeds"])
-            lowered = pre.lower(*args)
+            # the shared step table lifted by the registered shard
+            # backend; logits stay vocab-sharded (gather_logits=False)
+            # so the per-cell ledger measures the model's own syncs,
+            # not the serve-path logits gather
+            from repro.parallel.backend import make_backend
+            from repro.runtime import forward as F
+            backend = make_backend("shard", cfg, plan, mesh=mesh)
+            pre = backend.wrap(*F.prefill_step(
+                cfg, plan, tp=tp, q_chunk=min(1024, shape_cfg.seq_len),
+                cache_len=0, gather_logits=False,
+                shard_batch=shard_batch))
+            lowered = pre.lower(pstructs, ins["tokens"], None,
+                                ins["embeds"] if cfg.frontend_dim
+                                else None)
         else:
-            dec = TP.build_decode_step(cfg, plan, mesh,
-                                       shard_batch=shard_batch)
+            # the production decode: the shared step table lifted by the
+            # registered shard backend (exactly what serving compiles)
+            from repro.parallel.backend import make_backend
+            from repro.runtime import forward as F
+            backend = make_backend("shard", cfg, plan, mesh=mesh)
+            dec = backend.wrap(*F.decode_step(cfg, plan, tp=tp,
+                                              shard_batch=shard_batch))
             lowered = dec.lower(pstructs, ins["tokens"], ins["pos"],
                                 ins["caches"])
 

@@ -1,4 +1,4 @@
-"""Real tensor parallelism: the whole train/serve step under one shard_map.
+"""Real tensor parallelism: pspec/topology helpers + the train step.
 
 Megatron-style explicit collectives (repro.parallel.collectives) over the
 "model" mesh axis; DP over "data" (+ "pod" for multi-pod).  Gradients and
@@ -11,22 +11,21 @@ Memory discipline for large configs: microbatched gradient accumulation
 (lax.scan) + per-layer remat keeps live activations to one microbatch ×
 one layer; ZeRO-1 (parallel/zero1.py) shards optimizer state over "data".
 
-Comm policy: the serve-step builders below inherit any CommPolicy
-attached to `plan` (plan.comm) — kept sync points inside M.decode_step /
-M.prefill lower to the quantized two-hop psum and the serve-path logits
-carry the logits-gather qdq, so the compiled HLO and the trace-time
-ledger both reflect the per-block wire precision.  Training steps should
-use exact plans (quantization is inference-only; see docs/comm.md).
+The per-step SERVE builders that used to live here (decode, paged
+decode, verify, chunked prefill) moved to the backend-agnostic step
+table in `repro.runtime.forward`, lifted under shard_map by
+`repro.parallel.backend.ShardMapBackend` — this module now owns only
+the partition-spec builders those backends (and the train step) share.
+Training steps should use exact comm plans (quantization is
+inference-only; see docs/comm.md).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import ModelConfig, SPDPlanConfig
@@ -34,7 +33,6 @@ from repro.core import model as M
 from repro.parallel import zero1 as Z
 from repro.parallel.collectives import (MODEL_AXIS, psum_plain)
 from repro.parallel.layout import REPLICATED
-from repro.runtime import sampling as RS
 
 
 def shard_map(f, mesh, in_specs, out_specs):
@@ -258,225 +256,3 @@ def build_train_step(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh,
     init = jax.jit(shard_map(init_local, mesh, in_specs=(p_specs,),
                              out_specs=opt_specs))
     return step, init, {"params": p_specs, "opt": opt_specs, "batch": b_specs}
-
-
-# ---------------------------------------------------------------------------
-# Serve steps
-# ---------------------------------------------------------------------------
-
-def build_prefill(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh, *,
-                  q_chunk: int = 2048, shard_batch: bool = True,
-                  cache_len: int = 0):
-    tp = mesh.shape[MODEL_AXIS]
-    dpx = dp_axes(mesh) if shard_batch else ()
-    p_specs = param_pspecs(cfg, plan)
-    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch)
-
-    out_specs = (P(dpx, MODEL_AXIS), c_specs)
-    if cfg.frontend_dim:
-        def prefill_local(params, tokens, embeds):
-            return M.prefill(cfg, params, plan, tokens, tp=tp,
-                             q_chunk=q_chunk, embeds=embeds,
-                             cache_len=cache_len)
-        in_specs = (p_specs, P(dpx), P(dpx))
-    else:
-        def prefill_local(params, tokens):
-            return M.prefill(cfg, params, plan, tokens, tp=tp,
-                             q_chunk=q_chunk, cache_len=cache_len)
-        in_specs = (p_specs, P(dpx))
-    return jax.jit(shard_map(prefill_local, mesh, in_specs=in_specs,
-                             out_specs=out_specs))
-
-
-def _greedy_sample(cfg, logits):
-    """Greedy next token across vocab-parallel shard-local logits (B,Vl)."""
-    vl = logits.shape[-1]
-    shard = jax.lax.axis_index(MODEL_AXIS)
-    gcol = shard * vl + jnp.arange(vl)
-    masked = jnp.where(gcol[None] < cfg.vocab_size, logits, -jnp.inf)
-    mx = jnp.max(masked, -1)
-    gmx = jax.lax.pmax(mx, MODEL_AXIS)
-    lidx = jnp.argmax(masked, -1) + shard * vl
-    cand = jnp.where(mx >= gmx, lidx, cfg.vocab_size + 1)
-    return jax.lax.pmin(cand, MODEL_AXIS).astype(jnp.int32)
-
-
-def _full_logits(cfg, logits):
-    full = jax.lax.all_gather(logits, MODEL_AXIS, axis=1, tiled=True)
-    return full[:, : cfg.vocab_size]
-
-
-def build_decode_step(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh,
-                      shard_batch: bool = True, with_logits: bool = False,
-                      sampled: bool = False):
-    """Greedy decode keeps the gather-free `_greedy_sample` trick;
-    `sampled=True` builds the SamplingParams-honoring variant instead:
-    full logits are all-gathered and the shared jitted sampling step
-    (runtime/sampling.py) runs replicated on every model shard."""
-    tp = mesh.shape[MODEL_AXIS]
-    dpx = dp_axes(mesh) if shard_batch else ()
-    p_specs = param_pspecs(cfg, plan)
-    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch)
-
-    if sampled:
-        def decode_sampled_local(params, tokens, pos, caches, t, k, p, keys):
-            logits, new_caches = M.decode_step(cfg, params, plan, tokens,
-                                               pos, caches, tp=tp)
-            nxt = RS.sample_core(_full_logits(cfg, logits), t, k, p, keys)
-            return nxt[:, None], new_caches
-
-        in_specs = (p_specs, P(dpx), P(dpx), c_specs,
-                    P(dpx), P(dpx), P(dpx), P(dpx))
-        out_specs = (P(dpx), c_specs)
-        return jax.jit(shard_map(decode_sampled_local, mesh,
-                                 in_specs=in_specs, out_specs=out_specs),
-                       donate_argnums=(3,))
-
-    def decode_local(params, tokens, pos, caches):
-        logits, new_caches = M.decode_step(cfg, params, plan, tokens, pos,
-                                           caches, tp=tp)
-        nxt = _greedy_sample(cfg, logits)
-        if with_logits:
-            return nxt[:, None], _full_logits(cfg, logits), new_caches
-        return nxt[:, None], new_caches
-
-    in_specs = (p_specs, P(dpx), P(dpx), c_specs)
-    out_specs = ((P(dpx), P(dpx), c_specs) if with_logits
-                 else (P(dpx), c_specs))
-    return jax.jit(shard_map(decode_local, mesh, in_specs=in_specs,
-                             out_specs=out_specs), donate_argnums=(3,))
-
-
-def build_paged_decode_step(cfg: ModelConfig, plan: SPDPlanConfig,
-                            mesh: Mesh, with_logits: bool = False,
-                            sampled: bool = False):
-    """Paged decode: gather each slot's pages into a contiguous view,
-    run the dense decode math, scatter the newly written token back into
-    its page (kernels/ops.py).  The pool's page axis is replicated over
-    the DP axes (any slot may map to any page), so the paged decode runs
-    the batch replicated across DP; the model axis sharding is unchanged —
-    SPD-dropped blocks keep their divergent per-shard caches because the
-    page axis simply replaces the (batch, seq) axes inside each shard's
-    local leaf."""
-    tp = mesh.shape[MODEL_AXIS]
-    p_specs = param_pspecs(cfg, plan)
-    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch=False)
-    flags = M.cache_pageable_tree(cfg, plan)
-    from repro.kernels import ops as KOPS
-
-    def paged_math(params, tokens, pos, page_table, pcaches):
-        dense = jax.tree.map(
-            lambda f, c: KOPS.gather_pages(c, page_table) if f else c,
-            flags, pcaches)
-        logits, new_dense = M.decode_step(cfg, params, plan, tokens, pos,
-                                          dense, tp=tp)
-        new_pcaches = jax.tree.map(
-            lambda f, c, nd: (KOPS.scatter_token_page(c, nd, page_table, pos)
-                              if f else nd),
-            flags, pcaches, new_dense)
-        return logits, new_pcaches
-
-    if sampled:
-        def decode_sampled_local(params, tokens, pos, page_table, pcaches,
-                                 t, k, p, keys):
-            logits, new_pcaches = paged_math(params, tokens, pos,
-                                             page_table, pcaches)
-            nxt = RS.sample_core(_full_logits(cfg, logits), t, k, p, keys)
-            return nxt[:, None], new_pcaches
-
-        in_specs = (p_specs, P(), P(), P(), c_specs, P(), P(), P(), P())
-        out_specs = (P(), c_specs)
-        return jax.jit(shard_map(decode_sampled_local, mesh,
-                                 in_specs=in_specs, out_specs=out_specs),
-                       donate_argnums=(4,))
-
-    def decode_local(params, tokens, pos, page_table, pcaches):
-        logits, new_pcaches = paged_math(params, tokens, pos, page_table,
-                                         pcaches)
-        nxt = _greedy_sample(cfg, logits)
-        if with_logits:
-            return nxt[:, None], _full_logits(cfg, logits), new_pcaches
-        return nxt[:, None], new_pcaches
-
-    in_specs = (p_specs, P(), P(), P(), c_specs)
-    out_specs = ((P(), P(), c_specs) if with_logits else (P(), c_specs))
-    return jax.jit(shard_map(decode_local, mesh, in_specs=in_specs,
-                             out_specs=out_specs), donate_argnums=(4,))
-
-
-def _full_logits_seq(cfg, logits):
-    """(B, C, Vl) shard-local -> (B, C, V) full vocab."""
-    full = jax.lax.all_gather(logits, MODEL_AXIS, axis=2, tiled=True)
-    return full[..., : cfg.vocab_size]
-
-
-def build_verify_step(cfg: ModelConfig, plan: SPDPlanConfig, mesh: Mesh,
-                      *, q_chunk: int = 2048, shard_batch: bool = True):
-    """Speculative verify on the dense cache layout: one shard_map'd
-    M.verify_step scoring k+1 tokens per row in a single forward, with
-    the full-vocab logits of EVERY chunk position gathered out (the
-    host-side acceptance needs all of them)."""
-    tp = mesh.shape[MODEL_AXIS]
-    dpx = dp_axes(mesh) if shard_batch else ()
-    p_specs = param_pspecs(cfg, plan)
-    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch)
-
-    def verify_local(params, tokens, pos, caches):
-        lg, ncs = M.verify_step(cfg, params, plan, tokens, pos, caches,
-                                tp=tp, q_chunk=q_chunk)
-        return _full_logits_seq(cfg, lg), ncs
-
-    in_specs = (p_specs, P(dpx), P(dpx), c_specs)
-    out_specs = (P(dpx), c_specs)
-    return jax.jit(shard_map(verify_local, mesh, in_specs=in_specs,
-                             out_specs=out_specs), donate_argnums=(3,))
-
-
-def build_paged_verify_step(cfg: ModelConfig, plan: SPDPlanConfig,
-                            mesh: Mesh, n_tokens: int, *,
-                            q_chunk: int = 2048):
-    """Paged speculative verify: gather pages -> dense verify math ->
-    scatter the n_tokens newly written positions back into their pages
-    (batch replicated, like build_paged_decode_step)."""
-    tp = mesh.shape[MODEL_AXIS]
-    p_specs = param_pspecs(cfg, plan)
-    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch=False)
-    flags = M.cache_pageable_tree(cfg, plan)
-    from repro.kernels import ops as KOPS
-
-    def verify_local(params, tokens, pos, page_table, pcaches):
-        dense = jax.tree.map(
-            lambda f, c: KOPS.gather_pages(c, page_table) if f else c,
-            flags, pcaches)
-        lg, new_dense = M.verify_step(cfg, params, plan, tokens, pos,
-                                      dense, tp=tp, q_chunk=q_chunk)
-        new_pcaches = jax.tree.map(
-            lambda f, c, nd: (KOPS.scatter_chunk_pages(c, nd, page_table,
-                                                       pos, n_tokens)
-                              if f else nd),
-            flags, pcaches, new_dense)
-        return _full_logits_seq(cfg, lg), new_pcaches
-
-    in_specs = (p_specs, P(), P(), P(), c_specs)
-    out_specs = (P(), c_specs)
-    return jax.jit(shard_map(verify_local, mesh, in_specs=in_specs,
-                             out_specs=out_specs), donate_argnums=(4,))
-
-
-def build_prefill_chunk_step(cfg: ModelConfig, plan: SPDPlanConfig,
-                             mesh: Mesh, *, q_chunk: int = 2048):
-    """One chunked-prefill step (M.prefill_chunk) under shard_map; batch
-    axis replicated (per-request admission uses batch 1)."""
-    tp = mesh.shape[MODEL_AXIS]
-    p_specs = param_pspecs(cfg, plan)
-    c_specs = cache_pspecs(cfg, plan, mesh, shard_batch=False)
-
-    def chunk_local(params, tokens, start, lengths, caches):
-        lg, ncs = M.prefill_chunk(cfg, params, plan, tokens, start, caches,
-                                  tp=tp, lengths=lengths, q_chunk=q_chunk)
-        return _full_logits(cfg, lg), ncs
-
-    in_specs = (p_specs, P(), P(), P(), c_specs)
-    out_specs = (P(), c_specs)
-    return jax.jit(shard_map(chunk_local, mesh, in_specs=in_specs,
-                             out_specs=out_specs), donate_argnums=(4,))

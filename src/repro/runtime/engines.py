@@ -1,203 +1,116 @@
-"""Serving engines: the Server's model-execution backends.
+"""The serving engine: ONE `Engine` over pluggable parallel backends.
 
-SimEngine  — vmap simulated TP (1 CPU device), for algorithm work + tests.
-ShardEngine — shard_map over a real device mesh (the production path).
+Historically this module carried two mirrored engines — `SimEngine`
+(vmap simulated TP) and `ShardEngine` (shard_map over a device mesh) —
+each re-implementing every forward step.  The forward math now lives
+once in `repro.runtime.forward` (backend-agnostic local functions) and
+`repro.parallel.backend.ParallelBackend` owns the lift: `Engine(cfg,
+plan, backend)` compiles each step lazily through `backend.wrap` and
+keeps caches in the backend's native layout between calls.
 
-Both keep caches in their engine-native layout between calls and expose:
     prefill(params, tokens, *, cache_len, lengths) -> (full logits, caches1)
     prefill_chunked(...)  — incremental prefill in fixed-size chunks
-    decode(params, tokens, pos, caches) -> (next_tokens (B,1), caches)
-    decode_sampled(params, tokens, pos, caches, temp, top_k, top_p, keys)
-        — per-request sampling (runtime/sampling.py) fused into the
-        decode jit; greedy rows (temp <= 0) reproduce decode() exactly
-    blank_caches(batch, cache_len), insert_slot(caches, caches1, b)
-and the paged-cache variants consumed by the unified api scheduler
-(design: docs/serving.md; allocator: runtime/paging.py):
-    blank_paged_caches(max_slots, cache_len, *, page_size, num_pages)
-    insert_paged(pcaches, caches1, b, page_row)
-    decode_paged(params, tokens, pos, page_table, pcaches)
-    decode_paged_sampled(..., temp, top_k, top_p, keys)
-and the speculative-decoding verify forwards (docs/speculative.md):
-    verify(params, tokens (B, k+1), pos, caches)       -> (logits (B,k+1,V), caches)
-    verify_paged(params, tokens, pos, page_table, pcaches)
+    decode / decode_with_logits / decode_sampled       dense decode
+    decode_paged / decode_paged_with_logits / decode_paged_sampled
+    verify / verify_paged                 multi-token speculative verify
+    blank_caches / blank_paged_caches, insert_slot / insert_paged
 
-Paged layout: pageable leaves (core.model.cache_pageable_tree) swap their
-(batch, seq) axes for (num_pages + 1, page_size) — page num_pages is the
-trash page — while SSM state / conv / windowed-KV leaves stay dense
-per-slot.  The swap happens INSIDE each TP shard's local leaf, so the
-split (tp, layer, ...) layout is untouched and SPD-dropped blocks keep
-their divergent per-shard caches.
+`SimEngine(cfg, plan, tp)` and `ShardEngine(cfg, plan, mesh)` remain as
+thin constructors over the registered backends, so pre-unification call
+sites keep working; new code should resolve backends by registry name
+(`repro.parallel.backend.make_backend`, or `LLM.load(engine=...)`).
 
 Comm policy: a plan with an attached CommPolicy (plan.comm — see
-docs/comm.md) changes what both engines' compiled steps emit per block:
-kept sync points lower to the two-hop quantized psum and the serve-path
-logits carry the wire qdq for the final all-gather.  The policy also
-refines the scan segmentation (layer_kinds.plan_segments), so engine,
+docs/comm.md) changes what the compiled steps emit per block; engine,
 param placement, and cache trees must all be built from the SAME plan
-object — `repro.api.LLM` guarantees this.
+object — `repro.api.LLM` guarantees this.  KV caches are donated on
+every decode/verify step (runtime/forward.py documents the contract).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config.base import ModelConfig, SPDPlanConfig
 from repro.core import model as M
-from repro.kernels import ops as KOPS
-from repro.parallel import tp as TP
-from repro.parallel.collectives import MODEL_AXIS
-from repro.parallel.layout import REPLICATED
-from repro.runtime import sampling as RS
+from repro.parallel.backend import ParallelBackend, make_backend
+from repro.runtime import forward as F
+from repro.runtime.forward import bucketed_prefill  # re-export  # noqa: F401
+
+__all__ = ["Engine", "SimEngine", "ShardEngine", "bucketed_prefill"]
 
 
-def _map_paged(flags, fn_paged, fn_dense, *trees):
-    """tree.map over cache trees, dispatching on the pageable-flag tree."""
-    return jax.tree.map(
-        lambda f, *ls: fn_paged(*ls) if f else fn_dense(*ls), flags, *trees)
+class Engine:
+    """One serving engine over a `ParallelBackend` (see module doc)."""
 
+    def __init__(self, cfg: ModelConfig, plan: SPDPlanConfig,
+                 backend: ParallelBackend, q_chunk: int = 1024):
+        self.cfg, self.plan, self.backend = cfg, plan, backend
+        self.q_chunk = q_chunk
+        self.tp = backend.tp
+        self.mesh = getattr(backend, "mesh", None)
+        self._steps = {}
 
-def _sim_full_logits(cfg, lg):
-    """Assemble vocab-parallel shard logits (tp, B, Vl) -> full (B, V)."""
-    b = lg.shape[1]
-    full = jnp.moveaxis(lg, 0, -2).reshape(b, -1)
-    return full[:, : cfg.vocab_size]
+    def _step(self, key, builder):
+        if key not in self._steps:
+            self._steps[key] = self.backend.wrap(*builder())
+        return self._steps[key]
 
+    # ---- cache trees (backend-native layout) ----
 
-def _sim_full_logits_seq(cfg, lg):
-    """(tp, B, C, Vl) shard logits -> full (B, C, V)."""
-    _, b, c, _ = lg.shape
-    full = jnp.moveaxis(lg, 0, -2).reshape(b, c, -1)
-    return full[..., : cfg.vocab_size]
-
-
-def bucketed_prefill(engine, params, toks, s: int, cache_len: int,
-                     chunk=None):
-    """One request's prefill through an engine, shared by the scheduler
-    admission path and the speculative Drafter: chunked when `chunk` is
-    set (and the engine/arch supports it), otherwise right-padded to the
-    next power-of-two bucket capped at the slot capacity (pad slots are
-    overwritten by decode before they become causally visible)."""
-    import math as _math
-    toks = np.asarray(toks, np.int32)
-    if chunk and hasattr(engine, "prefill_chunked"):
-        return engine.prefill_chunked(
-            params, jnp.asarray(toks[None]), cache_len=cache_len,
-            lengths=np.asarray([s]), chunk=chunk)
-    sb = min(max(16, 1 << _math.ceil(_math.log2(max(s, 1)))), cache_len)
-    padded = np.zeros((1, sb), np.int32)
-    padded[0, :s] = toks
-    return engine.prefill(params, jnp.asarray(padded), cache_len=cache_len,
-                          lengths=jnp.asarray([s], jnp.int32))
-
-
-def _drive_chunked_prefill(step, caches, tokens, lengths, chunk):
-    """Host loop shared by both engines' prefill_chunked: right-pad the
-    batch to a chunk multiple, feed chunks through `step(toks, start,
-    lengths, caches)`, and keep each row's final-token logits from the
-    chunk containing its lengths-1 (rows finish in different chunks for
-    ragged batches)."""
-    lengths = np.asarray(lengths)
-    s_real = int(lengths.max())
-    n = max(1, -(-s_real // chunk))
-    toks = np.zeros((tokens.shape[0], n * chunk), np.int32)
-    m = min(tokens.shape[1], n * chunk)
-    toks[:, :m] = np.asarray(tokens)[:, :m]
-    ln = jnp.asarray(lengths, jnp.int32)
-    final_chunk = (lengths - 1) // chunk
-    logits = None
-    for i in range(n):
-        lg, caches = step(jnp.asarray(toks[:, i * chunk:(i + 1) * chunk]),
-                          jnp.int32(i * chunk), ln, caches)
-        if logits is None:
-            logits = np.asarray(lg).copy()
-        else:
-            sel = final_chunk == i
-            if sel.any():
-                logits[sel] = np.asarray(lg)[sel]
-    return jnp.asarray(logits), caches
-
-
-class SimEngine:
-    def __init__(self, cfg: ModelConfig, plan: SPDPlanConfig, tp: int,
-                 q_chunk: int = 1024):
-        self.cfg, self.plan, self.tp, self.q_chunk = cfg, plan, tp, q_chunk
-        self._prefill_c = {}
-        self._chunk_c = {}
-        self._decode_c = {}
-        self._decode_paged_c = {}
-        self._decode_sampled = None
-        self._decode_paged_sampled = None
-        self._insert_paged = None
-        self._verify_c = {}
-        self._verify_paged_c = {}
-
-    # ---- cache layout: split form, leading (tp, ...) axis per leaf ----
-
-    def _cache_ints(self):
-        return M.cache_specs_tree(self.cfg, self.plan)
-
-    def _split_blank(self, structs):
-        ints = self._cache_ints()
-
-        def one(s, a):
-            if a == REPLICATED:
-                return jnp.zeros((self.tp,) + s.shape, s.dtype)
-            shp = list(s.shape)
-            shp[a] //= self.tp
-            return jnp.zeros((self.tp,) + tuple(shp), s.dtype)
-
-        return [jax.tree.map(one, s, i) for s, i in zip(structs, ints)]
-
-    def blank_caches(self, batch: int, cache_len: int):
-        return self._split_blank(M.cache_struct(self.cfg, self.plan, batch,
-                                                cache_len, self.tp))
+    def blank_caches(self, batch: int, cache_len: int, replicated=False):
+        structs = M.cache_struct(self.cfg, self.plan, batch, cache_len,
+                                 self.tp)
+        return self.backend.blank_caches(structs,
+                                         shard_batch=not replicated)
 
     def blank_paged_caches(self, max_slots: int, cache_len: int, *,
                            page_size: int, num_pages: int):
-        return self._split_blank(M.paged_cache_struct(
+        structs = M.paged_cache_struct(
             self.cfg, self.plan, max_slots, cache_len, self.tp,
-            page_size=page_size, num_pages=num_pages))
+            page_size=page_size, num_pages=num_pages)
+        return self.backend.blank_caches(structs, shard_batch=False)
 
     def insert_slot(self, caches, caches1, b: int):
-        # batch axis is 2 in split form (tp, layer, batch, ...)
-        return jax.tree.map(lambda c, c1: c.at[:, :, b].set(c1[:, :, 0]),
-                            caches, caches1)
+        return F.insert_slot(caches, caches1, b,
+                             batch_axis=self.backend.cache_batch_axis)
 
     def insert_paged(self, pcaches, caches1, b: int, page_row):
-        if self._insert_paged is None:
-            flags = M.cache_pageable_tree(self.cfg, self.plan)
+        step = self._step(("insert_paged",),
+                          lambda: F.insert_paged_step(self.cfg, self.plan))
+        return step(pcaches, caches1, jnp.int32(b),
+                    jnp.asarray(page_row, jnp.int32))[0]
 
-            def fn(pc, c1, bb, row):
-                return _map_paged(
-                    flags,
-                    lambda p, c: jax.vmap(KOPS.scatter_prefill_pages,
-                                          in_axes=(0, 0, None))(p, c, row),
-                    lambda p, c: p.at[:, :, bb].set(c[:, :, 0]),
-                    pc, c1)
-            self._insert_paged = jax.jit(fn)
-        return self._insert_paged(pcaches, caches1, jnp.int32(b),
-                                  jnp.asarray(page_row, jnp.int32))
-
-    # ---- compiled paths ----
+    # ---- compiled forward steps ----
 
     def prefill(self, params, tokens, *, cache_len: int, lengths=None,
                 embeds=None):
-        key = (tokens.shape, cache_len, embeds is not None)
-        if key not in self._prefill_c:
-            cfg, plan, tp, qc = self.cfg, self.plan, self.tp, self.q_chunk
-
-            def per_shard(p, toks, ln, emb):
-                return M.prefill(cfg, p, plan, toks, tp=tp, q_chunk=qc,
-                                 cache_len=cache_len, lengths=ln,
-                                 embeds=emb)
-
-            def fn(p, toks, ln, emb):
-                lg, caches = jax.vmap(per_shard, in_axes=(0, None, None, None),
-                                      axis_name=MODEL_AXIS)(p, toks, ln, emb)
-                return _sim_full_logits(cfg, lg), caches
-            self._prefill_c[key] = jax.jit(fn)
-        return self._prefill_c[key](params, tokens, lengths, embeds)
+        # pad the request batch to a multiple of the data axes (single
+        # requests on a dp>1 mesh); slice the result back out after
+        dpn = self.backend.dp_total
+        b0 = tokens.shape[0]
+        pad = (-b0) % dpn
+        if pad:
+            tokens = jnp.concatenate(
+                [tokens, jnp.zeros((pad,) + tokens.shape[1:], tokens.dtype)])
+            if lengths is not None:
+                lengths = jnp.concatenate(
+                    [lengths, jnp.ones((pad,), lengths.dtype)])
+            if embeds is not None:
+                embeds = jnp.concatenate(
+                    [embeds, jnp.zeros((pad,) + embeds.shape[1:],
+                                       embeds.dtype)])
+        key = ("prefill", tokens.shape, cache_len, embeds is not None)
+        step = self._step(key, lambda: F.prefill_step(
+            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk,
+            cache_len=cache_len))
+        lg, caches = step(params, tokens, lengths, embeds)
+        if pad:
+            lg = lg[:b0]
+            pre = (slice(None),) * self.backend.cache_batch_axis
+            caches = jax.tree.map(lambda c: c[pre + (slice(None, b0),)],
+                                  caches)
+        return lg, caches
 
     def prefill_chunked(self, params, tokens, *, cache_len: int, lengths,
                         chunk: int):
@@ -211,371 +124,88 @@ class SimEngine:
         if not M.supports_chunked_prefill(self.cfg):
             return self.prefill(params, tokens, cache_len=cache_len,
                                 lengths=jnp.asarray(lengths, jnp.int32))
-        key = (int(chunk), cache_len)
-        if key not in self._chunk_c:
-            cfg, plan, tp, qc = self.cfg, self.plan, self.tp, self.q_chunk
-
-            def per_shard(p, toks, st, ln, cs):
-                return M.prefill_chunk(cfg, p, plan, toks, st, cs, tp=tp,
-                                       lengths=ln, q_chunk=qc)
-
-            def fn(p, toks, st, ln, cs):
-                lg, ncs = jax.vmap(per_shard,
-                                   in_axes=(0, None, None, None, 0),
-                                   axis_name=MODEL_AXIS)(p, toks, st, ln, cs)
-                return _sim_full_logits(cfg, lg), ncs
-            self._chunk_c[key] = jax.jit(fn, donate_argnums=(4,))
-        step = self._chunk_c[key]
-        return _drive_chunked_prefill(
+        key = ("prefill_chunk", int(chunk), cache_len)
+        step = self._step(key, lambda: F.prefill_chunk_step(
+            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk))
+        return F.drive_chunked_prefill(
             lambda t, st, ln, cs: step(params, t, st, ln, cs),
-            self.blank_caches(tokens.shape[0], cache_len),
+            self.blank_caches(tokens.shape[0], cache_len, replicated=True),
             tokens, lengths, chunk)
 
-    def _dense_decode_math(self):
-        """Shared dense decode body -> (full logits (B, V), new caches);
-        greedy/logits/sampled variants differ only in token selection."""
-        cfg, plan, tp = self.cfg, self.plan, self.tp
-
-        def per_shard(p, toks, ps, cs):
-            return M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
-
-        def math(p, toks, ps, cs):
-            lg, ncs = jax.vmap(per_shard, in_axes=(0, None, None, 0),
-                               axis_name=MODEL_AXIS)(p, toks, ps, cs)
-            return _sim_full_logits(cfg, lg), ncs
-        return math
-
-    def _decode_fn(self, with_logits: bool):
-        if with_logits not in self._decode_c:
-            math = self._dense_decode_math()
-
-            def fn(p, toks, ps, cs):
-                full, ncs = math(p, toks, ps, cs)
-                nxt = RS.greedy_tokens(full)[:, None]
-                if with_logits:
-                    return nxt, full, ncs
-                return nxt, ncs
-            self._decode_c[with_logits] = jax.jit(fn)
-        return self._decode_c[with_logits]
+    def _decode(self, with_logits: bool):
+        return self._step(("decode", with_logits), lambda: F.decode_step(
+            self.cfg, self.plan, tp=self.tp, with_logits=with_logits))
 
     def decode(self, params, tokens, pos, caches):
-        return self._decode_fn(False)(params, tokens, pos, caches)
+        return self._decode(False)(params, tokens, pos, caches)
 
     def decode_with_logits(self, params, tokens, pos, caches):
-        return self._decode_fn(True)(params, tokens, pos, caches)
+        return self._decode(True)(params, tokens, pos, caches)
 
     def decode_sampled(self, params, tokens, pos, caches, temperature,
                        top_k, top_p, keys):
         """Decode with the jitted sampling step fused in (per-request
         temperature / top-k / top-p / key; temp <= 0 rows are greedy)."""
-        if self._decode_sampled is None:
-            math = self._dense_decode_math()
-
-            def fn(p, toks, ps, cs, t, k, pp, keys):
-                full, ncs = math(p, toks, ps, cs)
-                return RS.sample_core(full, t, k, pp, keys)[:, None], ncs
-            self._decode_sampled = jax.jit(fn)
-        return self._decode_sampled(params, tokens, pos, caches,
-                                    temperature, top_k, top_p, keys)
+        step = self._step(("decode_sampled",), lambda: F.decode_step(
+            self.cfg, self.plan, tp=self.tp, sampled=True))
+        return step(params, tokens, pos, caches, temperature, top_k,
+                    top_p, keys)
 
     def verify(self, params, tokens, pos, caches):
         """Speculative verify on dense caches: tokens (B, C) — the last
         accepted token + C-1 drafts — scored in ONE forward; returns
         (full logits (B, C, V), new caches).  See M.verify_step for the
         per-row position + rollback contract."""
-        key = tokens.shape
-        if key not in self._verify_c:
-            cfg, plan, tp, qc = self.cfg, self.plan, self.tp, self.q_chunk
-
-            def per_shard(p, toks, ps, cs):
-                return M.verify_step(cfg, p, plan, toks, ps, cs, tp=tp,
-                                     q_chunk=qc)
-
-            def fn(p, toks, ps, cs):
-                lg, ncs = jax.vmap(per_shard, in_axes=(0, None, None, 0),
-                                   axis_name=MODEL_AXIS)(p, toks, ps, cs)
-                return _sim_full_logits_seq(cfg, lg), ncs
-            self._verify_c[key] = jax.jit(fn, donate_argnums=(3,))
-        return self._verify_c[key](params, tokens, pos, caches)
+        step = self._step(("verify", tokens.shape), lambda: F.verify_step(
+            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk))
+        return step(params, tokens, pos, caches)
 
     def verify_paged(self, params, tokens, pos, page_table, pcaches):
         """Paged speculative verify: gather pages -> dense verify math ->
         scatter every newly written token back into its page."""
-        key = tokens.shape
-        if key not in self._verify_paged_c:
-            cfg, plan, tp, qc = self.cfg, self.plan, self.tp, self.q_chunk
-            flags = M.cache_pageable_tree(cfg, plan)
-            n_tok = int(key[1])
+        key = ("verify_paged", tokens.shape)
+        step = self._step(key, lambda: F.paged_verify_step(
+            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk,
+            n_tokens=int(tokens.shape[1])))
+        return step(params, tokens, pos, page_table, pcaches)
 
-            def per_shard(p, toks, ps, cs):
-                return M.verify_step(cfg, p, plan, toks, ps, cs, tp=tp,
-                                     q_chunk=qc)
-
-            def fn(p, toks, ps, pt, pc):
-                dense = _map_paged(
-                    flags,
-                    lambda c: jax.vmap(KOPS.gather_pages,
-                                       in_axes=(0, None))(c, pt),
-                    lambda c: c, pc)
-                lg, new_dense = jax.vmap(per_shard,
-                                         in_axes=(0, None, None, 0),
-                                         axis_name=MODEL_AXIS)(p, toks, ps,
-                                                               dense)
-                def scatter(c, nd, pt=pt, ps=ps):
-                    return KOPS.scatter_chunk_pages(c, nd, pt, ps, n_tok)
-
-                pc2 = _map_paged(
-                    flags,
-                    lambda c, nd: jax.vmap(scatter)(c, nd),
-                    lambda c, nd: nd, pc, new_dense)
-                return _sim_full_logits_seq(cfg, lg), pc2
-            self._verify_paged_c[key] = jax.jit(fn, donate_argnums=(4,))
-        return self._verify_paged_c[key](params, tokens, pos, page_table,
-                                         pcaches)
-
-    def _paged_decode_math(self):
-        """Shared paged decode body (gather pages -> dense decode ->
-        scatter the written token) -> (full logits, new paged caches)."""
-        cfg, plan, tp = self.cfg, self.plan, self.tp
-        flags = M.cache_pageable_tree(cfg, plan)
-
-        def per_shard(p, toks, ps, cs):
-            return M.decode_step(cfg, p, plan, toks, ps, cs, tp=tp)
-
-        def math(p, toks, ps, pt, pc):
-            dense = _map_paged(
-                flags,
-                lambda c: jax.vmap(KOPS.gather_pages,
-                                   in_axes=(0, None))(c, pt),
-                lambda c: c, pc)
-            lg, new_dense = jax.vmap(per_shard,
-                                     in_axes=(0, None, None, 0),
-                                     axis_name=MODEL_AXIS)(p, toks, ps,
-                                                           dense)
-            pc2 = _map_paged(
-                flags,
-                lambda c, nd: jax.vmap(KOPS.scatter_token_page,
-                                       in_axes=(0, 0, None, None))(
-                    c, nd, pt, ps),
-                lambda c, nd: nd, pc, new_dense)
-            return _sim_full_logits(cfg, lg), pc2
-        return math
-
-    def _decode_paged_fn(self, with_logits: bool):
-        if with_logits not in self._decode_paged_c:
-            math = self._paged_decode_math()
-
-            def fn(p, toks, ps, pt, pc):
-                full, pc2 = math(p, toks, ps, pt, pc)
-                nxt = RS.greedy_tokens(full)[:, None]
-                if with_logits:
-                    return nxt, full, pc2
-                return nxt, pc2
-            self._decode_paged_c[with_logits] = jax.jit(fn, donate_argnums=(4,))
-        return self._decode_paged_c[with_logits]
+    def _decode_paged(self, with_logits: bool):
+        return self._step(
+            ("decode_paged", with_logits),
+            lambda: F.paged_decode_step(self.cfg, self.plan, tp=self.tp,
+                                        with_logits=with_logits))
 
     def decode_paged(self, params, tokens, pos, page_table, pcaches):
-        return self._decode_paged_fn(False)(params, tokens, pos,
-                                            page_table, pcaches)
+        return self._decode_paged(False)(params, tokens, pos,
+                                         page_table, pcaches)
 
     def decode_paged_with_logits(self, params, tokens, pos, page_table,
                                  pcaches):
-        return self._decode_paged_fn(True)(params, tokens, pos,
-                                           page_table, pcaches)
+        return self._decode_paged(True)(params, tokens, pos,
+                                        page_table, pcaches)
 
     def decode_paged_sampled(self, params, tokens, pos, page_table, pcaches,
                              temperature, top_k, top_p, keys):
         """Paged decode with the jitted sampling step fused in."""
-        if self._decode_paged_sampled is None:
-            math = self._paged_decode_math()
-
-            def fn(p, toks, ps, pt, pc, t, k, pp, keys):
-                full, pc2 = math(p, toks, ps, pt, pc)
-                return RS.sample_core(full, t, k, pp, keys)[:, None], pc2
-            self._decode_paged_sampled = jax.jit(fn, donate_argnums=(4,))
-        return self._decode_paged_sampled(params, tokens, pos, page_table,
-                                          pcaches, temperature, top_k,
-                                          top_p, keys)
+        step = self._step(
+            ("decode_paged_sampled",),
+            lambda: F.paged_decode_step(self.cfg, self.plan, tp=self.tp,
+                                        sampled=True))
+        return step(params, tokens, pos, page_table, pcaches,
+                    temperature, top_k, top_p, keys)
 
 
-class ShardEngine:
-    def __init__(self, cfg: ModelConfig, plan: SPDPlanConfig, mesh,
-                 q_chunk: int = 1024):
-        self.cfg, self.plan, self.mesh = cfg, plan, mesh
-        self.tp = mesh.shape[MODEL_AXIS]
-        self.q_chunk = q_chunk
-        self._prefill_c = {}
-        self._chunk_c = {}
-        self._decode_c = {}
-        self._decode_paged_c = {}
-        self._decode_sampled = None
-        self._decode_paged_sampled = None
-        self._insert_paged = None
-        self._verify_c = {}
-        self._verify_paged_c = {}
-        self._c_pspecs = TP.cache_pspecs(cfg, plan, mesh)
-        self._c_pspecs_rep = TP.cache_pspecs(cfg, plan, mesh,
-                                             shard_batch=False)
+def SimEngine(cfg: ModelConfig, plan: SPDPlanConfig, tp: int,
+              q_chunk: int = 1024) -> Engine:
+    """Simulated-TP engine (vmap, 1 CPU device) — thin constructor over
+    the registered "sim" backend."""
+    return Engine(cfg, plan, make_backend("sim", cfg, plan, tp=tp),
+                  q_chunk=q_chunk)
 
-    def _blank(self, structs, pspecs):
-        sh = TP.named(self.mesh, pspecs)
-        return [jax.tree.map(
-            lambda s, h: jax.device_put(jnp.zeros(s.shape, s.dtype), h),
-            st, shh) for st, shh in zip(structs, sh)]
 
-    def blank_caches(self, batch: int, cache_len: int, replicated=False):
-        structs = M.cache_struct(self.cfg, self.plan, batch, cache_len,
-                                 self.tp)
-        return self._blank(structs, self._c_pspecs_rep if replicated
-                           else self._c_pspecs)
-
-    def blank_paged_caches(self, max_slots: int, cache_len: int, *,
-                           page_size: int, num_pages: int):
-        structs = M.paged_cache_struct(
-            self.cfg, self.plan, max_slots, cache_len, self.tp,
-            page_size=page_size, num_pages=num_pages)
-        return self._blank(structs, self._c_pspecs_rep)
-
-    def insert_slot(self, caches, caches1, b: int):
-        return jax.tree.map(lambda c, c1: c.at[:, b].set(c1[:, 0]),
-                            caches, caches1)
-
-    def insert_paged(self, pcaches, caches1, b: int, page_row):
-        if self._insert_paged is None:
-            flags = M.cache_pageable_tree(self.cfg, self.plan)
-
-            def fn(pc, c1, bb, row):
-                return _map_paged(
-                    flags,
-                    lambda p, c: KOPS.scatter_prefill_pages(p, c, row),
-                    lambda p, c: p.at[:, bb].set(c[:, 0]),
-                    pc, c1)
-            self._insert_paged = jax.jit(
-                fn, out_shardings=TP.named(self.mesh, self._c_pspecs_rep))
-        return self._insert_paged(pcaches, caches1, jnp.int32(b),
-                                  jnp.asarray(page_row, jnp.int32))
-
-    def prefill(self, params, tokens, *, cache_len: int, lengths=None,
-                embeds=None):
-        # pad the request batch to a multiple of the data axis (single
-        # requests on a dp>1 mesh); slice the result back out after
-        dpn = 1
-        for a_ in TP.dp_axes(self.mesh):
-            dpn *= self.mesh.shape[a_]
-        b0 = tokens.shape[0]
-        pad = (-b0) % dpn
-        if pad:
-            tokens = jnp.concatenate(
-                [tokens, jnp.zeros((pad,) + tokens.shape[1:], tokens.dtype)])
-            if lengths is not None:
-                lengths = jnp.concatenate(
-                    [lengths, jnp.ones((pad,), lengths.dtype)])
-            if embeds is not None:
-                embeds = jnp.concatenate(
-                    [embeds, jnp.zeros((pad,) + embeds.shape[1:],
-                                       embeds.dtype)])
-        key = (tokens.shape, cache_len, embeds is not None)
-        if key not in self._prefill_c:
-            cfg, plan, mesh, qc = self.cfg, self.plan, self.mesh, self.q_chunk
-            tp = self.tp
-            from jax.sharding import PartitionSpec as P
-            dpx = TP.dp_axes(mesh)
-            p_specs = TP.param_pspecs(cfg, plan)
-
-            def local(p, toks, ln, emb):
-                lg, caches = M.prefill(cfg, p, plan, toks, tp=tp, q_chunk=qc,
-                                       cache_len=cache_len, lengths=ln,
-                                       embeds=emb)
-                full = jax.lax.all_gather(lg, MODEL_AXIS, axis=1, tiled=True)
-                return full[:, : cfg.vocab_size], caches
-
-            self._prefill_c[key] = jax.jit(TP.shard_map(
-                local, mesh,
-                in_specs=(p_specs, P(dpx), P(dpx), P(dpx)),
-                out_specs=(P(dpx), self._c_pspecs)))
-        lg, caches = self._prefill_c[key](params, tokens, lengths, embeds)
-        if pad:
-            lg = lg[:b0]
-            caches = jax.tree.map(lambda c: c[:, :b0], caches)
-        return lg, caches
-
-    def prefill_chunked(self, params, tokens, *, cache_len: int, lengths,
-                        chunk: int):
-        """See SimEngine.prefill_chunked — same contract, shard_map'd."""
-        if not M.supports_chunked_prefill(self.cfg):
-            return self.prefill(params, tokens, cache_len=cache_len,
-                                lengths=jnp.asarray(lengths, jnp.int32))
-        key = (int(chunk), cache_len)
-        if key not in self._chunk_c:
-            self._chunk_c[key] = TP.build_prefill_chunk_step(
-                self.cfg, self.plan, self.mesh, q_chunk=self.q_chunk)
-        step = self._chunk_c[key]
-        return _drive_chunked_prefill(
-            lambda t, st, ln, cs: step(params, t, st, ln, cs),
-            self.blank_caches(tokens.shape[0], cache_len, replicated=True),
-            tokens, lengths, chunk)
-
-    def _decode_fn(self, with_logits: bool):
-        if with_logits not in self._decode_c:
-            self._decode_c[with_logits] = TP.build_decode_step(
-                self.cfg, self.plan, self.mesh, with_logits=with_logits)
-        return self._decode_c[with_logits]
-
-    def decode(self, params, tokens, pos, caches):
-        return self._decode_fn(False)(params, tokens, pos, caches)
-
-    def decode_with_logits(self, params, tokens, pos, caches):
-        return self._decode_fn(True)(params, tokens, pos, caches)
-
-    def decode_sampled(self, params, tokens, pos, caches, temperature,
-                       top_k, top_p, keys):
-        """See SimEngine.decode_sampled — same contract, shard_map'd."""
-        if self._decode_sampled is None:
-            self._decode_sampled = TP.build_decode_step(
-                self.cfg, self.plan, self.mesh, sampled=True)
-        return self._decode_sampled(params, tokens, pos, caches,
-                                    temperature, top_k, top_p, keys)
-
-    def verify(self, params, tokens, pos, caches):
-        """See SimEngine.verify — same contract, shard_map'd."""
-        key = tokens.shape
-        if key not in self._verify_c:
-            self._verify_c[key] = TP.build_verify_step(
-                self.cfg, self.plan, self.mesh, q_chunk=self.q_chunk)
-        return self._verify_c[key](params, tokens, pos, caches)
-
-    def verify_paged(self, params, tokens, pos, page_table, pcaches):
-        """See SimEngine.verify_paged — same contract, shard_map'd."""
-        key = tokens.shape
-        if key not in self._verify_paged_c:
-            self._verify_paged_c[key] = TP.build_paged_verify_step(
-                self.cfg, self.plan, self.mesh, int(key[1]),
-                q_chunk=self.q_chunk)
-        return self._verify_paged_c[key](params, tokens, pos, page_table,
-                                         pcaches)
-
-    def _decode_paged_fn(self, with_logits: bool):
-        if with_logits not in self._decode_paged_c:
-            self._decode_paged_c[with_logits] = TP.build_paged_decode_step(
-                self.cfg, self.plan, self.mesh, with_logits=with_logits)
-        return self._decode_paged_c[with_logits]
-
-    def decode_paged(self, params, tokens, pos, page_table, pcaches):
-        return self._decode_paged_fn(False)(params, tokens, pos,
-                                            page_table, pcaches)
-
-    def decode_paged_with_logits(self, params, tokens, pos, page_table,
-                                 pcaches):
-        return self._decode_paged_fn(True)(params, tokens, pos,
-                                           page_table, pcaches)
-
-    def decode_paged_sampled(self, params, tokens, pos, page_table, pcaches,
-                             temperature, top_k, top_p, keys):
-        """See SimEngine.decode_paged_sampled — same contract,
-        shard_map'd."""
-        if self._decode_paged_sampled is None:
-            self._decode_paged_sampled = TP.build_paged_decode_step(
-                self.cfg, self.plan, self.mesh, sampled=True)
-        return self._decode_paged_sampled(params, tokens, pos, page_table,
-                                          pcaches, temperature, top_k,
-                                          top_p, keys)
+def ShardEngine(cfg: ModelConfig, plan: SPDPlanConfig, mesh,
+                q_chunk: int = 1024) -> Engine:
+    """Real-TP engine (shard_map over `mesh`) — thin constructor over
+    the registered "shard" backend."""
+    return Engine(cfg, plan, make_backend("shard", cfg, plan, mesh=mesh),
+                  q_chunk=q_chunk)

@@ -1,0 +1,297 @@
+"""The backend-agnostic forward step table.
+
+Every serving forward (prefill, chunked prefill, greedy / with-logits /
+sampled decode, multi-token verify, their paged variants, and paged
+slot insertion) is written ONCE here as a *local function*: the math of
+a single model shard, using named collectives over `MODEL_AXIS` that
+mean the same thing under `vmap` (VmapSimBackend) and `shard_map`
+(ShardMapBackend).  Each builder returns ``(local_fn, StepSpec)`` and a
+`repro.parallel.backend.ParallelBackend` turns that into the runnable
+jitted step — so a new backend inherits the whole table for free and a
+new step is written once for every backend.
+
+Numerics contract (locked by tests/test_golden_trace.py): the full-
+vocab logits assembled by `full_logits` are bit-identical to both
+pre-unification engines (tiled all-gather concatenates shards in the
+same order the sim engine's moveaxis/reshape did), and `greedy_token`
+reproduces `argmax(full_logits)` exactly — including first-occurrence
+tie-breaking — without materializing the gather on the greedy path.
+
+Paged layout (docs/serving.md): pageable cache leaves swap their
+(batch, seq) axes for (num_pages + 1, page_size) INSIDE each shard's
+local leaf — page `num_pages` is the trash page — so SPD-dropped blocks
+keep their divergent per-shard caches; SSM/conv/windowed leaves stay
+dense per-slot (`_map_paged` dispatches on the pageable-flag tree).
+
+KV caches are DONATED on every decode/verify/chunk/insert step
+(StepSpec.donate): the compiled step updates the cache in place instead
+of copying it, which `benchmarks/bench_serving.py` asserts.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as M
+from repro.kernels import ops as KOPS
+from repro.parallel.backend import StepSpec
+from repro.parallel.collectives import MODEL_AXIS
+from repro.runtime import sampling as RS
+
+
+def _map_paged(flags, fn_paged, fn_dense, *trees):
+    """tree.map over cache trees, dispatching on the pageable-flag tree."""
+    return jax.tree.map(
+        lambda f, *ls: fn_paged(*ls) if f else fn_dense(*ls), flags, *trees)
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard assembly primitives
+# ---------------------------------------------------------------------------
+
+
+def full_logits(cfg, logits):
+    """Vocab-parallel shard logits (B, Vl) -> full (B, V)."""
+    full = jax.lax.all_gather(logits, MODEL_AXIS, axis=1, tiled=True)
+    return full[:, : cfg.vocab_size]
+
+
+def full_logits_seq(cfg, logits):
+    """(B, C, Vl) shard-local -> (B, C, V) full vocab."""
+    full = jax.lax.all_gather(logits, MODEL_AXIS, axis=2, tiled=True)
+    return full[..., : cfg.vocab_size]
+
+
+def greedy_token(cfg, logits):
+    """Greedy next token across vocab-parallel shard-local logits
+    (B, Vl) without gathering the full vocab: shard-local masked argmax,
+    then a pmax/pmin pair picks the globally-first maximal column —
+    token-identical to `argmax(full_logits(cfg, logits))`."""
+    vl = logits.shape[-1]
+    shard = jax.lax.axis_index(MODEL_AXIS)
+    gcol = shard * vl + jnp.arange(vl)
+    masked = jnp.where(gcol[None] < cfg.vocab_size, logits, -jnp.inf)
+    mx = jnp.max(masked, -1)
+    gmx = jax.lax.pmax(mx, MODEL_AXIS)
+    lidx = jnp.argmax(masked, -1) + shard * vl
+    cand = jnp.where(mx >= gmx, lidx, cfg.vocab_size + 1)
+    return jax.lax.pmin(cand, MODEL_AXIS).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Step builders: each returns (local_fn, StepSpec)
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(cfg, plan, *, tp, q_chunk, cache_len,
+                 gather_logits=True, shard_batch=True):
+    """Whole-batch prefill.  `gather_logits=False` leaves the logits
+    vocab-sharded ("logits_shard" kind) — the dry-run lowering uses it
+    so the per-cell collective accounting stays focused on the model's
+    own syncs, not the serve-path logits gather."""
+    def local(p, toks, ln, emb):
+        lg, caches = M.prefill(cfg, p, plan, toks, tp=tp, q_chunk=q_chunk,
+                               cache_len=cache_len, lengths=ln, embeds=emb)
+        return (full_logits(cfg, lg) if gather_logits else lg), caches
+
+    return local, StepSpec(
+        ("params", "batch", "batch", "batch"),
+        (("batch" if gather_logits else "logits_shard"), "cache"),
+        shard_batch=shard_batch)
+
+
+def prefill_chunk_step(cfg, plan, *, tp, q_chunk):
+    """One chunked-prefill step (M.prefill_chunk); batch replicated —
+    per-request admission uses batch 1 (driver: drive_chunked_prefill)."""
+    def local(p, toks, start, ln, cs):
+        lg, ncs = M.prefill_chunk(cfg, p, plan, toks, start, cs, tp=tp,
+                                  lengths=ln, q_chunk=q_chunk)
+        return full_logits(cfg, lg), ncs
+
+    return local, StepSpec(("params", "rep", "rep", "rep", "cache"),
+                           ("rep", "cache"), donate=(4,), shard_batch=False)
+
+
+def decode_step(cfg, plan, *, tp, with_logits=False, sampled=False,
+                shard_batch=True):
+    """Dense decode.  Greedy keeps the gather-free `greedy_token` path;
+    `sampled=True` gathers the full logits and runs the shared jitted
+    sampling step (runtime/sampling.py) replicated on every shard."""
+    if sampled:
+        def local(p, toks, pos, cs, t, k, pp, keys):
+            lg, ncs = M.decode_step(cfg, p, plan, toks, pos, cs, tp=tp)
+            nxt = RS.sample_core(full_logits(cfg, lg), t, k, pp, keys)
+            return nxt[:, None], ncs
+
+        return local, StepSpec(
+            ("params", "batch", "batch", "cache",
+             "batch", "batch", "batch", "batch"),
+            ("batch", "cache"), donate=(3,), shard_batch=shard_batch)
+
+    def local(p, toks, pos, cs):
+        lg, ncs = M.decode_step(cfg, p, plan, toks, pos, cs, tp=tp)
+        nxt = greedy_token(cfg, lg)
+        if with_logits:
+            return nxt[:, None], full_logits(cfg, lg), ncs
+        return nxt[:, None], ncs
+
+    out = (("batch", "batch", "cache") if with_logits
+           else ("batch", "cache"))
+    return local, StepSpec(("params", "batch", "batch", "cache"), out,
+                           donate=(3,), shard_batch=shard_batch)
+
+
+def paged_decode_step(cfg, plan, *, tp, with_logits=False, sampled=False):
+    """Paged decode: gather each slot's pages into a contiguous view,
+    run the dense decode math, scatter the newly written token back into
+    its page (kernels/ops.py).  The page pool is replicated over the DP
+    axes (any slot may map to any page), so the batch runs replicated;
+    the model-axis sharding is untouched."""
+    flags = M.cache_pageable_tree(cfg, plan)
+
+    def math(p, toks, pos, pt, pc):
+        dense = _map_paged(flags, lambda c: KOPS.gather_pages(c, pt),
+                           lambda c: c, pc)
+        lg, new_dense = M.decode_step(cfg, p, plan, toks, pos, dense, tp=tp)
+        pc2 = _map_paged(
+            flags, lambda c, nd: KOPS.scatter_token_page(c, nd, pt, pos),
+            lambda c, nd: nd, pc, new_dense)
+        return lg, pc2
+
+    if sampled:
+        def local(p, toks, pos, pt, pc, t, k, pp, keys):
+            lg, pc2 = math(p, toks, pos, pt, pc)
+            nxt = RS.sample_core(full_logits(cfg, lg), t, k, pp, keys)
+            return nxt[:, None], pc2
+
+        return local, StepSpec(
+            ("params", "rep", "rep", "rep", "cache",
+             "rep", "rep", "rep", "rep"),
+            ("rep", "cache"), donate=(4,), shard_batch=False)
+
+    def local(p, toks, pos, pt, pc):
+        lg, pc2 = math(p, toks, pos, pt, pc)
+        nxt = greedy_token(cfg, lg)
+        if with_logits:
+            return nxt[:, None], full_logits(cfg, lg), pc2
+        return nxt[:, None], pc2
+
+    out = ("rep", "rep", "cache") if with_logits else ("rep", "cache")
+    return local, StepSpec(("params", "rep", "rep", "rep", "cache"), out,
+                           donate=(4,), shard_batch=False)
+
+
+def verify_step(cfg, plan, *, tp, q_chunk):
+    """Speculative verify on dense caches: tokens (B, C) — the last
+    accepted token + C-1 drafts — scored in ONE forward, full-vocab
+    logits of EVERY chunk position gathered out (host-side acceptance
+    needs all of them; M.verify_step has the per-row position +
+    rollback contract)."""
+    def local(p, toks, pos, cs):
+        lg, ncs = M.verify_step(cfg, p, plan, toks, pos, cs, tp=tp,
+                                q_chunk=q_chunk)
+        return full_logits_seq(cfg, lg), ncs
+
+    return local, StepSpec(("params", "batch", "batch", "cache"),
+                           ("batch", "cache"), donate=(3,))
+
+
+def paged_verify_step(cfg, plan, *, tp, q_chunk, n_tokens):
+    """Paged speculative verify: gather pages -> dense verify math ->
+    scatter the n_tokens newly written positions back into their pages
+    (batch replicated, like paged_decode_step)."""
+    flags = M.cache_pageable_tree(cfg, plan)
+
+    def local(p, toks, pos, pt, pc):
+        dense = _map_paged(flags, lambda c: KOPS.gather_pages(c, pt),
+                           lambda c: c, pc)
+        lg, new_dense = M.verify_step(cfg, p, plan, toks, pos, dense,
+                                      tp=tp, q_chunk=q_chunk)
+        pc2 = _map_paged(
+            flags,
+            lambda c, nd: KOPS.scatter_chunk_pages(c, nd, pt, pos, n_tokens),
+            lambda c, nd: nd, pc, new_dense)
+        return full_logits_seq(cfg, lg), pc2
+
+    return local, StepSpec(("params", "rep", "rep", "rep", "cache"),
+                           ("rep", "cache"), donate=(4,), shard_batch=False)
+
+
+def insert_paged_step(cfg, plan):
+    """Scatter one prefilled request (batch-1 dense caches1) into slot
+    `b` of the paged pool: pageable leaves scatter along `page_row`,
+    dense leaves copy into the slot stripe."""
+    flags = M.cache_pageable_tree(cfg, plan)
+
+    def local(pc, c1, b, row):
+        return (_map_paged(
+            flags,
+            lambda p, c: KOPS.scatter_prefill_pages(p, c, row),
+            lambda p, c: p.at[:, b].set(c[:, 0]),
+            pc, c1),)
+
+    return local, StepSpec(("cache", "cache", "rep", "rep"), ("cache",),
+                           donate=(0,), shard_batch=False)
+
+
+# ---------------------------------------------------------------------------
+# Host-side drivers (backend-independent)
+# ---------------------------------------------------------------------------
+
+
+def insert_slot(caches, caches1, b: int, *, batch_axis: int):
+    """Copy a prefilled batch-1 cache tree into slot `b` of the dense
+    serving caches (`batch_axis` comes from the backend's cache layout:
+    1 for shard-local (layer, batch, ...), 2 under the sim split form's
+    leading (tp, ...) axis)."""
+    pre = (slice(None),) * batch_axis
+    return jax.tree.map(lambda c, c1: c.at[pre + (b,)].set(c1[pre + (0,)]),
+                        caches, caches1)
+
+
+def bucketed_prefill(engine, params, toks, s: int, cache_len: int,
+                     chunk=None):
+    """One request's prefill through an engine, shared by the scheduler
+    admission path and the speculative Drafter: chunked when `chunk` is
+    set (and the engine/arch supports it), otherwise right-padded to the
+    next power-of-two bucket capped at the slot capacity (pad slots are
+    overwritten by decode before they become causally visible)."""
+    toks = np.asarray(toks, np.int32)
+    if chunk and hasattr(engine, "prefill_chunked"):
+        return engine.prefill_chunked(
+            params, jnp.asarray(toks[None]), cache_len=cache_len,
+            lengths=np.asarray([s]), chunk=chunk)
+    sb = min(max(16, 1 << math.ceil(math.log2(max(s, 1)))), cache_len)
+    padded = np.zeros((1, sb), np.int32)
+    padded[0, :s] = toks
+    return engine.prefill(params, jnp.asarray(padded), cache_len=cache_len,
+                          lengths=jnp.asarray([s], jnp.int32))
+
+
+def drive_chunked_prefill(step, caches, tokens, lengths, chunk):
+    """Host loop for chunked prefill: right-pad the batch to a chunk
+    multiple, feed chunks through `step(toks, start, lengths, caches)`,
+    and keep each row's final-token logits from the chunk containing its
+    lengths-1 (rows finish in different chunks for ragged batches)."""
+    lengths = np.asarray(lengths)
+    s_real = int(lengths.max())
+    n = max(1, -(-s_real // chunk))
+    toks = np.zeros((tokens.shape[0], n * chunk), np.int32)
+    m = min(tokens.shape[1], n * chunk)
+    toks[:, :m] = np.asarray(tokens)[:, :m]
+    ln = jnp.asarray(lengths, jnp.int32)
+    final_chunk = (lengths - 1) // chunk
+    logits = None
+    for i in range(n):
+        lg, caches = step(jnp.asarray(toks[:, i * chunk:(i + 1) * chunk]),
+                          jnp.int32(i * chunk), ln, caches)
+        if logits is None:
+            logits = np.asarray(lg).copy()
+        else:
+            sel = final_chunk == i
+            if sel.any():
+                logits[sel] = np.asarray(lg)[sel]
+    return jnp.asarray(logits), caches

@@ -49,6 +49,38 @@ def make_cfg(name, **kw):
     return replace(get_config(name, reduced=True), dtype="float32", **kw)
 
 
+def engine_for_backend(name, cfg, plan, tp, *, params=None, q_chunk=64,
+                       dp=None):
+    """Unified `Engine` + placed params for one REGISTRY backend.
+
+    The parity tests sweep `repro.parallel.backend.backend_names()`
+    through this helper, so registering a new backend automatically
+    enrolls it in the whole parity matrix.  `dp` defaults to the widest
+    data parallelism the 8 test devices allow (backends that reject
+    dp > 1, like "sim", fall back to dp=1)."""
+    from repro.parallel.backend import make_backend
+    from repro.runtime.engines import Engine
+
+    canonical = (params if params is not None
+                 else M.init_model(jax.random.PRNGKey(0), cfg))
+    if dp is None:
+        try:
+            backend = make_backend(name, cfg, plan, tp=tp,
+                                   dp=min(2, dp_for(tp)))
+        except ValueError as e:
+            # only the documented "this backend cannot do DP" rejection
+            # falls back — any other build failure is a real bug
+            if "dp must be 1" not in str(e):
+                raise
+            backend = make_backend(name, cfg, plan, tp=tp, dp=1)
+    else:
+        backend = make_backend(name, cfg, plan, tp=tp, dp=dp)
+    eng = Engine(cfg, plan, backend, q_chunk=q_chunk)
+    placed = backend.place_params(
+        M.stack_segments(M.pad_model(canonical, cfg, tp), cfg, plan))
+    return eng, placed
+
+
 def make_batch(cfg, b=2, s=32, seed=0):
     r = np.random.default_rng(seed)
     batch = {"tokens": jnp.asarray(r.integers(0, cfg.vocab_size, (b, s))),

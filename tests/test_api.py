@@ -1,11 +1,15 @@
 """`repro.api` facade: LLM/SamplingParams/Scheduler.
 
-Covers the acceptance criteria of the facade PR: greedy parity with the
-legacy Server/PagedServer (regression lock), sim-vs-shard engine parity
-through `LLM.generate`, top-k/top-p sampling determinism under fixed
-per-request seeds, admission validation with typed errors, chunked
-prefill on the DENSE path, streaming, and the jitted sampling kernel
-itself."""
+Covers the acceptance criteria of the facade PR: greedy parity with a
+directly driven Scheduler (the pre-facade Server protocol; the legacy
+`runtime.server` shims themselves are deleted — import-error-locked
+below), sim-vs-shard engine parity through `LLM.generate`, top-k/top-p
+sampling determinism under fixed per-request seeds, admission
+validation with typed errors, chunked prefill on the DENSE path,
+streaming, the jitted sampling kernel itself, and backend-registry
+resolution of `LLM.load(engine=...)`."""
+import importlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -118,15 +122,13 @@ def _prompts(cfg, n=3, seed=0):
             for i in range(n)]
 
 
-def test_generate_greedy_matches_legacy_server(llm_sim):
-    """Regression lock: LLM.generate == the pre-facade dense Server."""
-    from repro.runtime.server import Server, _reset_deprecation_warnings
+def test_generate_greedy_matches_direct_scheduler(llm_sim):
+    """Regression lock: LLM.generate == driving a fresh Scheduler over
+    the same engine by hand (the pre-facade dense Server protocol)."""
     prompts = _prompts(llm_sim.cfg)
     outs = llm_sim.generate(prompts, SamplingParams(max_new=MAXNEW))
-    _reset_deprecation_warnings()      # shims warn once per class
-    with pytest.deprecated_call():
-        srv = Server(llm_sim.engine, llm_sim.params, max_batch=2,
-                     cache_len=64)
+    srv = Scheduler(llm_sim.engine, llm_sim.params,
+                    CacheConfig(cache_len=64, max_batch=2))
     for i, p in enumerate(prompts):
         srv.submit(Request(uid=i, prompt=p, max_new=MAXNEW))
     done = srv.run()
@@ -134,6 +136,32 @@ def test_generate_greedy_matches_legacy_server(llm_sim):
         assert o.token_ids == done[i].out, i
         assert o.finish_reason == "length"
         assert o.prompt_token_ids == [int(t) for t in prompts[i]]
+
+
+def test_legacy_server_module_removed():
+    """The deprecated `runtime/server.py` Server/PagedServer shims
+    (deprecated PR 2, warning since PR 4) are GONE: importing the module
+    must fail, so nothing can silently depend on it again."""
+    with pytest.raises(ImportError):
+        importlib.import_module("repro.runtime.server")
+
+
+def test_llm_load_resolves_backend_registry():
+    """LLM.load(engine=) goes through the parallel-backend registry:
+    both built-ins resolve, unknown names fail fast and name the
+    registered backends."""
+    from repro.parallel.backend import (ParallelBackend, backend_names,
+                                        resolve_backend,
+                                        resolved_backend_name)
+    assert {"sim", "shard"} <= set(backend_names())
+    for name in backend_names():
+        assert issubclass(resolve_backend(name), ParallelBackend)
+        assert resolved_backend_name(name).startswith(f"{name}/")
+    cfg = make_cfg("smollm-360m")
+    with pytest.raises(ValueError, match="unknown engine"):
+        LLM.load(cfg, tp=2, engine="nope", cache_len=16)
+    with pytest.raises(ValueError, match="dp must be 1"):
+        LLM.load(cfg, tp=2, dp=2, engine="sim", cache_len=16)
 
 
 def test_paged_scheduler_matches_dense(llm_sim):

@@ -109,11 +109,13 @@ def test_int8_kv_shard_engine_compiles():
     """The real shard_map decode step lowers+compiles with int8 caches."""
     cfg = replace(make_cfg("smollm-360m"), kv_dtype="int8")
     from repro.launch.mesh import make_test_mesh
-    from repro.parallel import tp as TP
+    from repro.parallel.backend import make_backend
+    from repro.runtime import forward as F
     plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     mesh = make_test_mesh(2, 2)
-    dec = TP.build_decode_step(cfg, plan, mesh)
+    backend = make_backend("shard", cfg, plan, mesh=mesh)
+    dec = backend.wrap(*F.decode_step(cfg, plan, tp=2))
     cs = M.cache_struct(cfg, plan, batch=4, seq_len=32, tp=2)
     pp = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
                       M.stack_segments(M.pad_model(params, cfg, 2), cfg,

@@ -207,15 +207,16 @@ def test_ledger_quant8_wire_bytes_ratio():
 QUANT8_LOGIT_TOL = 0.05
 
 
-def test_quant_decode_parity_sim_vs_shard(tp_degree):
-    """Per-token decode logits under a mixed drop/quant plan: sim and
-    shard engines agree to exact-parity tolerance, and both stay within
-    the documented tolerance of the exact-psum logits."""
+def test_quant_decode_parity_across_backends(tp_degree):
+    """Per-token decode logits under a mixed drop/quant plan: every
+    REGISTRY backend agrees with the first one to the documented quant
+    tolerance, and the quantized logits stay within that tolerance of
+    the exact-psum logits.  The backend axis is generated from
+    `backend_names()`, so a new backend joins the sweep automatically."""
     import jax.numpy as jnp
+    from conftest import engine_for_backend
     from repro.core import model as M
-    from repro.launch.mesh import make_test_mesh
-    from repro.parallel import tp as TP
-    from repro.runtime.engines import ShardEngine, SimEngine
+    from repro.parallel.backend import backend_names
 
     tp = tp_degree
     cfg = make_cfg("smollm-360m")
@@ -229,41 +230,38 @@ def test_quant_decode_parity_sim_vs_shard(tp_degree):
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 15)))
     pos = jnp.full((2,), 15, jnp.int32)
 
-    def sim_run(p, cur=None):
+    def run(backend_name, p, cur=None):
         """prefill (+ one decode fed `cur` or the greedy token)."""
-        eng = SimEngine(cfg, p, tp, q_chunk=64)
-        sp = simtp.prepare_params(params, cfg, p, tp)
-        lg0, caches = eng.prefill(sp, toks, cache_len=24)
+        eng, placed = engine_for_backend(backend_name, cfg, p, tp,
+                                         params=params)
+        lg0, caches = eng.prefill(placed, toks, cache_len=24)
         if cur is None:
             cur = jnp.asarray(np.argmax(np.asarray(lg0), -1)[:, None]
                               .astype(np.int32))
-        _, lg1, _ = eng.decode_with_logits(sp, cur, pos, caches)
+        _, lg1, _ = eng.decode_with_logits(placed, cur, pos, caches)
         return np.asarray(lg0), np.asarray(lg1), cur
 
-    lg0_q, lg1_q, cur = sim_run(plan)
-    lg0_e, lg1_e, _ = sim_run(plan_exact, cur=cur)
+    ref_name = backend_names()[0]
+    lg0_q, lg1_q, cur = run(ref_name, plan)
+    lg0_e, lg1_e, _ = run(ref_name, plan_exact, cur=cur)
 
     # quantization error within the documented tolerance on every token
     assert np.abs(lg0_q - lg0_e).max() <= QUANT8_LOGIT_TOL
     assert np.abs(lg1_q - lg1_e).max() <= QUANT8_LOGIT_TOL
 
-    mesh = make_test_mesh(min(2, dp_for(tp)), tp)
-    eng = ShardEngine(cfg, plan, mesh, q_chunk=64)
-    stacked = jax.tree.map(jnp.array, M.stack_segments(
-        M.pad_model(params, cfg, tp), cfg, plan))
-    gp = jax.device_put(stacked, TP.named(mesh, TP.param_pspecs(cfg, plan)))
-    lg0_s, c_sh = eng.prefill(gp, toks, cache_len=24)
-    # feed the shard engine the sim engine's token so the decode step is
-    # compared on identical inputs
-    _, lg1_s, _ = eng.decode_with_logits(gp, cur, pos, c_sh)
-    # sim-vs-shard under quantization: round() is discontinuous, so the
-    # engines' O(1e-7) partial-sum differences can flip a code and move
-    # an element by one quantization step — parity therefore holds to
-    # the documented quant tolerance elementwise and much tighter in the
-    # mean, not to the 2e-4 of exact plans (docs/comm.md)
-    for a, b in ((lg0_q, np.asarray(lg0_s)), (lg1_q, np.asarray(lg1_s))):
-        assert np.abs(a - b).max() <= QUANT8_LOGIT_TOL, np.abs(a - b).max()
-        assert np.abs(a - b).mean() <= 5e-3, np.abs(a - b).mean()
+    # cross-backend parity under quantization: round() is discontinuous,
+    # so O(1e-7) partial-sum differences between backends can flip a
+    # code and move an element by one quantization step — parity holds
+    # to the documented quant tolerance elementwise and much tighter in
+    # the mean, not to the 2e-4 of exact plans (docs/comm.md).  The
+    # decode is fed the reference backend's token so every backend is
+    # compared on identical inputs.
+    for name in backend_names()[1:]:
+        lg0_b, lg1_b, _ = run(name, plan, cur=cur)
+        for a, b in ((lg0_q, lg0_b), (lg1_q, lg1_b)):
+            assert np.abs(a - b).max() <= QUANT8_LOGIT_TOL, \
+                (name, np.abs(a - b).max())
+            assert np.abs(a - b).mean() <= 5e-3, (name, np.abs(a - b).mean())
 
 
 def test_llm_facade_comm_generate():

@@ -1,15 +1,19 @@
-"""Engine equivalence: simulated TP (vmap) vs real TP (shard_map) must be
-numerically identical for the same weights/plan/inputs, TP and SPD."""
+"""Engine equivalence across the parallel-backend registry: every
+registered backend (vmap sim, shard_map, and anything added later) must
+be numerically identical for the same weights/plan/inputs, TP and SPD.
+The serve-path parity tests sweep `backend_names()` — registering a new
+backend enrolls it automatically."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import dp_for, make_batch, make_cfg
+from conftest import dp_for, engine_for_backend, make_batch, make_cfg
 from repro.config.base import SPDPlanConfig
 from repro.core import model as M, simtp
 from repro.launch.mesh import make_test_mesh
 from repro.parallel import tp as TP
+from repro.parallel.backend import backend_names
 
 
 def _shard_loss(cfg, plan, mesh, stacked, batch, q_chunk=64):
@@ -67,37 +71,47 @@ def test_sim_vs_shard_loss(arch, spd, tp_degree):
     np.testing.assert_allclose(l_sim, l_shard, rtol=2e-5, atol=2e-5)
 
 
-def test_sim_vs_shard_decode(tp_degree):
-    """Decode parity: one decode step after prefill, both engines."""
+# serve-path parity reference: outputs of the FIRST registry backend,
+# cached per tp so the per-backend parametrization below compares every
+# other backend against it without recomputing
+_DECODE_REF = {}
+
+
+def _prefill_decode_outputs(backend_name, tp):
+    """(prefill logits, greedy next, decode next) for one backend."""
     cfg = make_cfg("smollm-360m")
     plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
     params = M.init_model(jax.random.PRNGKey(0), cfg)
-    tp = tp_degree
     rng = np.random.default_rng(3)
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 31)))
 
-    from repro.runtime.engines import ShardEngine, SimEngine
-    sim = SimEngine(cfg, plan, tp, q_chunk=64)
-    sp = simtp.prepare_params(params, cfg, plan, tp)
-    lg_sim, c_sim = sim.prefill(sp, toks, cache_len=40)
-    nxt_sim = np.argmax(np.asarray(lg_sim), -1)
-
-    mesh = make_test_mesh(min(2, dp_for(tp)), tp)
-    eng = ShardEngine(cfg, plan, mesh, q_chunk=64)
-    stacked = jax.tree.map(
-        jnp.array, M.stack_segments(M.pad_model(params, cfg, tp), cfg, plan))
-    gp = jax.device_put(stacked, TP.named(mesh, TP.param_pspecs(cfg, plan)))
-    lg_sh, c_sh = eng.prefill(gp, toks, cache_len=40)
-    nxt_sh = np.argmax(np.asarray(lg_sh), -1)
-    np.testing.assert_array_equal(nxt_sim, nxt_sh)
-    np.testing.assert_allclose(np.asarray(lg_sim), np.asarray(lg_sh),
-                               atol=2e-4, rtol=2e-4)
-
+    eng, placed = engine_for_backend(backend_name, cfg, plan, tp,
+                                     params=params)
+    lg, caches = eng.prefill(placed, toks, cache_len=40)
+    nxt = np.argmax(np.asarray(lg), -1)
     pos = jnp.full((4,), 31, jnp.int32)
-    cur = jnp.asarray(nxt_sim[:, None].astype(np.int32))
-    n1, _ = sim.decode(sp, cur, pos, c_sim)
-    n2, _ = eng.decode(gp, cur, pos, c_sh)
-    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+    cur = jnp.asarray(nxt[:, None].astype(np.int32))
+    n1, _ = eng.decode(placed, cur, pos, caches)
+    return np.asarray(lg), nxt, np.asarray(n1)
+
+
+@pytest.mark.parametrize("backend_name", backend_names())
+def test_backend_decode_parity(backend_name, tp_degree):
+    """Decode parity, generated from the backend registry: one prefill
+    + one decode step per backend, each compared against the first
+    registered backend's outputs."""
+    ref_name = backend_names()[0]
+    key = (ref_name, tp_degree)
+    if key not in _DECODE_REF:
+        _DECODE_REF[key] = _prefill_decode_outputs(ref_name, tp_degree)
+    lg_r, nxt_r, n1_r = _DECODE_REF[key]
+    if backend_name == ref_name:
+        assert lg_r.shape[1] == make_cfg("smollm-360m").vocab_size
+        return
+    lg, nxt, n1 = _prefill_decode_outputs(backend_name, tp_degree)
+    np.testing.assert_array_equal(nxt_r, nxt)
+    np.testing.assert_allclose(lg_r, lg, atol=2e-4, rtol=2e-4)
+    np.testing.assert_array_equal(n1_r, n1)
 
 
 def test_multipod_mesh_axes():

@@ -1,18 +1,17 @@
 """Paged KV-cache runtime: allocator invariants (grow/release/shrink),
-paged-vs-dense decode equivalence on both engines, chunked prefill, and
-a preemption soak."""
+paged-vs-dense decode equivalence on every registry backend, chunked
+prefill, and a preemption soak."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_cfg
+from conftest import engine_for_backend, make_cfg
 from repro.api.scheduler import CacheConfig, Request, Scheduler
 from repro.config.base import SPDPlanConfig
 from repro.core import model as M, simtp
-from repro.launch.mesh import make_test_mesh
-from repro.parallel import tp as TP
-from repro.runtime.engines import ShardEngine, SimEngine
+from repro.parallel.backend import backend_names
+from repro.runtime.engines import SimEngine
 from repro.runtime.paging import PagePool
 
 
@@ -133,28 +132,14 @@ def _drive_equiv(engine, params, cfg, n_slots, steps=3):
     pool.check()
 
 
+@pytest.mark.parametrize("backend_name", backend_names())
 @pytest.mark.parametrize("spd", [0, 2])
-def test_paged_equals_dense_sim(spd):
+def test_paged_equals_dense(spd, backend_name):
+    """Paged == dense decode logits, registry-generated backend axis."""
     cfg = make_cfg("smollm-360m")
     plan = SPDPlanConfig.first_k(cfg.n_layers, spd)
-    params = M.init_model(jax.random.PRNGKey(0), cfg)
-    tp = 2
-    split = simtp.prepare_params(params, cfg, plan, tp)
-    eng = SimEngine(cfg, plan, tp, q_chunk=64)
-    _drive_equiv(eng, split, cfg, n_slots=4)
-
-
-def test_paged_equals_dense_shard():
-    cfg = make_cfg("smollm-360m")
-    plan = SPDPlanConfig.first_k(cfg.n_layers, 2)
-    params = M.init_model(jax.random.PRNGKey(0), cfg)
-    tp = 2
-    mesh = make_test_mesh(2, tp)
-    eng = ShardEngine(cfg, plan, mesh, q_chunk=64)
-    stacked = jax.tree.map(
-        jnp.array, M.stack_segments(M.pad_model(params, cfg, tp), cfg, plan))
-    gp = jax.device_put(stacked, TP.named(mesh, TP.param_pspecs(cfg, plan)))
-    _drive_equiv(eng, gp, cfg, n_slots=4)
+    eng, placed = engine_for_backend(backend_name, cfg, plan, 2)
+    _drive_equiv(eng, placed, cfg, n_slots=4)
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +168,7 @@ def test_chunked_prefill_matches_full():
         np.testing.assert_allclose(np.asarray(lg_full), np.asarray(lg_chunk),
                                    atol=2e-4, rtol=2e-4)
     # one compilation covers all prompt lengths
-    assert len(eng._chunk_c) == 1
+    assert sum(1 for k in eng._steps if k[0] == "prefill_chunk") == 1
     # ragged batch: rows finish in different chunks; each row's logits
     # must come from the chunk containing ITS final token
     lens = np.asarray([5, 27])
@@ -215,7 +200,7 @@ def test_chunked_prefill_unsupported_falls_back():
 
 
 # ---------------------------------------------------------------------------
-# PagedServer: soak under pool pressure, preemption, dense equivalence
+# Paged scheduler: soak under pool pressure, preemption, dense equivalence
 # ---------------------------------------------------------------------------
 
 

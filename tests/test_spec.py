@@ -9,19 +9,24 @@ Locks the subsystem's three contracts:
     documented at the assert);
   * a less aggressive draft (Algorithm-1 "tiered") is accepted at least
     as often as the fully-desynced "all-drop" draft.
-Plus bench_spec's headline numbers and the deprecated-shim warnings.
+Plus bench_spec's headline numbers.  The engine axis is generated from
+the parallel-backend registry, so a newly registered backend is swept
+through the greedy-identity matrix automatically.
 """
-import warnings
-
 import numpy as np
 import pytest
 
 from conftest import make_cfg
 from repro.api import LLM, Request, SamplingParams, SpecConfig
+from repro.parallel.backend import backend_names
 from repro.spec import SpecError, accept_speculative, filtered_probs
 from repro.spec.verify import spec_rng
 
 MAXNEW = 10
+
+# every registered backend x both cache layouts
+ENGINE_MATRIX = [(n, p) for n in backend_names() for p in (False, True)]
+ENGINE_IDS = [f"{n}-{'paged' if p else 'dense'}" for n, p in ENGINE_MATRIX]
 
 
 def _prompts(cfg, n=5, seed=3):
@@ -33,8 +38,6 @@ def _prompts(cfg, n=5, seed=3):
 def _load(engine, paged, spec=None, max_batch=3):
     kw = dict(tp=2, engine=engine, dtype="float32", cache_len=64,
               max_batch=max_batch, q_chunk=64, spec=spec)
-    if engine == "shard":
-        kw["dp"] = 1
     if paged:
         kw.update(page_size=4, num_pages=14)
     return LLM.load("smollm-360m-reduced", **kw)
@@ -53,10 +56,7 @@ def greedy_ref():
     return prompts, sp, [o.token_ids for o in llm.generate(prompts, sp)]
 
 
-@pytest.mark.parametrize("engine,paged", [("sim", False), ("sim", True),
-                                          ("shard", False), ("shard", True)],
-                         ids=["sim-dense", "sim-paged", "shard-dense",
-                              "shard-paged"])
+@pytest.mark.parametrize("engine,paged", ENGINE_MATRIX, ids=ENGINE_IDS)
 def test_greedy_spec_token_identical(engine, paged, greedy_ref):
     prompts, sp, ref = greedy_ref
     llm = _load(engine, paged, spec=SpecConfig(k=3, draft="all-drop"))
@@ -264,25 +264,7 @@ def test_bench_spec_reports_speedup_and_wire_saving(tmp_path, monkeypatch):
     # draft would — the ledger-measured saving speculation banks on
     assert all(r["draft_wire_saved_bytes_per_tok"] > 0 for r in wire)
     assert (tmp_path / "BENCH_spec.json").exists()
-
-
-# ---------------------------------------------------------------------------
-# Deprecated Server/PagedServer shims warn once per class
-# ---------------------------------------------------------------------------
-
-
-def test_server_shims_warn_once_per_class():
-    from repro.runtime import server as RSRV
-
-    llm = _load("sim", paged=False, max_batch=2)
-    RSRV._reset_deprecation_warnings()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        RSRV.Server(llm.engine, llm.params, max_batch=2, cache_len=64)
-        RSRV.Server(llm.engine, llm.params, max_batch=2, cache_len=64)
-        RSRV.PagedServer(llm.engine, llm.params, max_slots=2, cache_len=64,
-                         page_size=8, num_pages=8)
-    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
-    assert len(dep) == 2, [str(x.message) for x in dep]
-    assert "Server is deprecated" in str(dep[0].message)
-    assert "PagedServer is deprecated" in str(dep[1].message)
+    # every BENCH json records the RESOLVED backend behind its engine
+    import json
+    rec = json.loads((tmp_path / "BENCH_spec.json").read_text())
+    assert rec["config"]["backend"] == "sim/VmapSimBackend"
