@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-cov test-soak lint bench-smoke example-smoke spec-smoke \
-	backend-parity
+	backend-parity paged-parity
 
 test:
 	$(PY) -m pytest -x -q
@@ -21,13 +21,15 @@ lint:
 	$(PY) -m compileall -q src benchmarks examples tests scripts
 	$(PY) scripts/lint.py
 
-# fast end-to-end sanity: paged serving + serving benchmark (the
+# fast end-to-end sanity: paged serving + serving benchmark, gated on
+# paged decode >= dense and prefix-cache-hit prefill < cold (the
 # quickstart example runs under example-smoke)
 bench-smoke:
 	$(PY) -m repro.launch.serve --arch smollm-360m-reduced --engine sim \
 	    --tp 2 --requests 4 --max-new 4 --cache-len 64 \
 	    --page-size 8 --num-pages 16 --prefill-chunk 16
 	$(PY) -m benchmarks.run --only serving
+	$(PY) scripts/check_serving_bench.py
 
 # public-API smoke: the quickstart example + a 4-request LLM.generate
 # (greedy / sampled / paged) — keeps the repro.api facade honest in CI
@@ -45,3 +47,9 @@ spec-smoke:
 # (docs/architecture.md)
 backend-parity:
 	$(PY) scripts/backend_parity.py
+
+# prefix-cache parity sweep: every registered backend, TP in {2,4},
+# cold (prefix-miss) vs warm (prefix-hit) paged serving vs dense —
+# token-identical streams, warm pass must hit (docs/serving.md)
+paged-parity:
+	$(PY) scripts/paged_parity.py

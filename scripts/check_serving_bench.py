@@ -1,0 +1,32 @@
+"""CI gate over BENCH_serving.json (`make bench-smoke`): paged decode
+must be at least as fast as dense (the fused paged-attention path — a
+regression back to gather/scatter materialization shows up here), and a
+prefix-cache-hit prefill must beat a cold one.
+
+    PYTHONPATH=src python scripts/check_serving_bench.py
+"""
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main():
+    with open(os.path.join(ROOT, "BENCH_serving.json")) as f:
+        rows = {m["mode"]: m for m in json.load(f)["metrics"]}
+    ratio = rows["ratio"]["paged_over_dense"]
+    assert ratio >= 1.0, \
+        f"paged decode regressed below dense: paged_over_dense={ratio:.3f}"
+    cold = rows["prefix_cold"]["prefill_us"]
+    warm = rows["prefix_warm"]["prefill_us"]
+    assert warm < cold, \
+        f"prefix-cache-hit prefill ({warm:.0f}us) not below cold " \
+        f"({cold:.0f}us)"
+    assert rows["prefix_warm"]["hits"] > 0
+    print(f"serving bench ok: paged_over_dense={ratio:.2f} "
+          f"prefix cold/warm={cold / warm:.2f}x")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,88 @@
+"""Prefix-cache parity sweep (`make paged-parity`).
+
+For EVERY backend registered in `repro.parallel.backend`, at TP in
+{2, 4}, serve a shared-prefix batch through the paged scheduler twice:
+
+  * COLD — empty pool, every prompt fully prefilled (prefix MISSES);
+  * WARM — same batch again, every prompt's full pages now resident, so
+    admission shares pages and prefills only the uncached suffix
+    (prefix HITS).
+
+Both passes must be token-identical to each other AND to the dense
+(per-slot cache) scheduler on the same backend; the warm pass must
+actually hit the prefix index (the sweep fails if sharing silently
+stopped engaging).  The backend axis is read from the registry at
+runtime, so a newly registered backend is swept with zero changes here
+(docs/serving.md#prefix-caching).
+
+    PYTHONPATH=src python scripts/paged_parity.py
+"""
+import json
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+
+TPS = (2, 4)
+MAX_NEW = 6
+
+
+def _prompts(vocab, seed):
+    """Two long prompts sharing a 16-token (2-page) prefix + one short
+    prompt below a full page (always a miss)."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, vocab, 19).astype(np.int32)
+    return [base,
+            np.concatenate([base[:16],
+                            rng.integers(0, vocab, 7).astype(np.int32)]),
+            rng.integers(0, vocab, 5).astype(np.int32)]
+
+
+def main():
+    from repro.api import LLM, SamplingParams
+    from repro.parallel.backend import backend_names, resolved_backend_name
+
+    names = backend_names()
+    assert len(names) >= 2, names
+    report = {"backends": [resolved_backend_name(n) for n in names]}
+    sp = SamplingParams(max_new=MAX_NEW)
+    for tp in TPS:
+        streams = {}
+        prompts = None
+        hits = {}
+        for name in names:
+            dense = LLM.load("smollm-360m-reduced", tp=tp, engine=name,
+                             dtype="float32", cache_len=64, max_batch=3,
+                             q_chunk=64)
+            if prompts is None:
+                prompts = _prompts(dense.cfg.vocab_size, seed=tp)
+            streams[(name, "dense")] = [
+                o.token_ids for o in dense.generate(prompts, sp)]
+            paged = LLM.load("smollm-360m-reduced", tp=tp, engine=name,
+                             dtype="float32", cache_len=64, max_batch=3,
+                             q_chunk=64, page_size=8, num_pages=24)
+            sched = paged.serve()
+            assert sched.kv.prefix_cache, name
+            streams[(name, "cold")] = [
+                o.token_ids for o in paged.generate(prompts, sp)]
+            streams[(name, "warm")] = [
+                o.token_ids for o in paged.generate(prompts, sp)]
+            assert sched.kv.prefix_hits > 0, \
+                f"{name} tp={tp}: warm pass never hit the prefix cache"
+            hits[name] = {"hits": sched.kv.prefix_hits,
+                          "queries": sched.kv.prefix_queries,
+                          "tokens_reused": sched.kv.prefix_tokens_reused}
+            sched.pool.check()
+        ref = streams[(names[0], "dense")]
+        mismatches = [f"{n}-{mode}"
+                      for (n, mode), s in streams.items() if s != ref]
+        assert not mismatches, f"tp={tp}: parity broken on {mismatches}"
+        report[f"tp{tp}"] = {"cells": len(streams), "parity": "ok",
+                             "prefix": hits, "tokens": ref}
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

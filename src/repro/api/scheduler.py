@@ -93,6 +93,11 @@ class CacheConfig:
     page_size: Optional[int] = None
     num_pages: Optional[int] = None
     prefill_chunk: Optional[int] = None
+    # prefix caching (paged only): None = auto — enabled when the engine
+    # and arch support the fused paged forward (model.supports_paged_
+    # attention), since suffix prefill runs through verify_paged and COW
+    # through copy_paged_pages.  True forces it on, False off.
+    prefix_cache: Optional[bool] = None
 
     def __post_init__(self):
         if self.cache_len <= 0 or self.max_batch <= 0:
@@ -163,6 +168,21 @@ class DenseKVCacheManager:
     def can_admit(self, slot: int, total: int) -> bool:
         return True                       # slot freeness is checked upstream
 
+    def admit_begin(self, slot: int, toks, total: int) -> Optional[int]:
+        """Reserve capacity for admission; returns the number of prompt
+        tokens already resident (always 0 — dense slots never share),
+        or None when admission must wait.  Mirrors the paged manager so
+        the scheduler has one admission flow."""
+        return 0
+
+    def register_prefix(self, slot: int, toks):
+        pass                              # no prefix index on dense slots
+
+    # prefix-cache stats (always zero on dense — kept for uniform reporting)
+    prefix_queries = 0
+    prefix_hits = 0
+    prefix_tokens_reused = 0
+
     def ensure(self, slot: int, upto: int) -> bool:
         return upto <= self.cc.cache_len
 
@@ -196,7 +216,11 @@ class DenseKVCacheManager:
 
 
 class PagedKVCacheManager:
-    """Page-pool allocator + page tables (runtime/paging.py)."""
+    """Page-pool allocator + page tables (runtime/paging.py), plus the
+    prefix cache: admission matches a new prompt's full pages against
+    resident registered pages, shares the hit read-only (refcounts), and
+    prefills only the uncached suffix through `verify_paged` with every
+    other batch row masked to the trash page."""
 
     paged = True
 
@@ -209,6 +233,55 @@ class PagedKVCacheManager:
         self.pcaches = engine.blank_paged_caches(
             cc.max_batch, cc.cache_len, page_size=cc.page_size,
             num_pages=cc.num_pages)
+        self.prefix_cache = cc.prefix_cache
+        if self.prefix_cache is None:
+            # auto: needs the fused paged forward (suffix prefill rides
+            # verify_paged) and the COW copy step; engines without a cfg
+            # (test fakes) and uncovered archs stay cold-path only
+            cfg = getattr(engine, "cfg", None)
+            if cfg is None or not hasattr(engine, "copy_paged_pages"):
+                self.prefix_cache = False
+            else:
+                from repro.core.model import supports_paged_attention
+                self.prefix_cache = supports_paged_attention(cfg)
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
+
+    def _table(self, rows=None):
+        """Device page table, width-bucketed to the next power of two of
+        the largest row (fewer K/V positions to attend over; powers of
+        two keep XLA's reduction trees associating the valid prefix
+        identically, so bucketing never changes tokens — and bound the
+        compile count to log2(pages_per_slot) variants)."""
+        t = self.pool.table if rows is None else rows
+        w = max(1, int(self.pool.owned.max()))
+        b = 1
+        while b < w:
+            b <<= 1
+        return jnp.asarray(t[:, :min(b, self.pool.pages_per_slot)])
+
+    def _cow(self, pos, n_tokens: int):
+        """Copy-on-write barrier before writing n_tokens at pos[b]:
+        every page about to be written must be privately owned.  In the
+        steady state this never copies (writes sit above any shared
+        prefix); it exists so sharing can never corrupt another slot."""
+        pairs = []
+        ps = self.cc.page_size
+        for b in range(self.cc.max_batch):
+            own = int(self.pool.owned[b])
+            if own == 0:
+                continue
+            lo = int(pos[b]) // ps
+            hi = min((int(pos[b]) + n_tokens - 1) // ps, own - 1)
+            for pg in range(lo, hi + 1):
+                pr = self.pool.ensure_writable(b, pg)
+                if pr is not None:
+                    pairs.append(pr)
+        if pairs:
+            src, dst = zip(*pairs)
+            self.pcaches = self.engine.copy_paged_pages(
+                self.pcaches, list(src), list(dst))
 
     def capacity_error(self, prompt_len: int, max_new: int) -> Optional[str]:
         # paged admission unconditionally grows to resume_len + 1, and a
@@ -227,6 +300,62 @@ class PagedKVCacheManager:
     def can_admit(self, slot: int, total: int) -> bool:
         return self.pool.grow(slot, total)
 
+    def admit_begin(self, slot: int, toks, total: int) -> Optional[int]:
+        """Match the prompt against the prefix cache, share the hit, and
+        reserve pages through `total` positions.  Returns the number of
+        resident prefix tokens (0 = cold admission, full prefill), or
+        None when the pool cannot supply the pages (head-of-line wait).
+        The match is capped page-aligned BELOW len(toks) so at least one
+        position is always prefilled — logits for the first sampled
+        token must come from a real forward."""
+        matched = []
+        if self.prefix_cache and len(toks) > 1:
+            ps = self.cc.page_size
+            self.prefix_queries += 1
+            cap = ((len(toks) - 1) // ps) * ps
+            if cap > 0:
+                matched = self.pool.match_prefix(np.asarray(toks)[:cap])
+        if matched:
+            self.pool.share_prefix(slot, matched)
+        if not self.pool.grow(slot, total):
+            self.pool.release(slot)
+            return None
+        if matched:
+            self.prefix_hits += 1
+            self.prefix_tokens_reused += len(matched) * self.cc.page_size
+        return len(matched) * self.cc.page_size
+
+    def register_prefix(self, slot: int, toks):
+        """Index the slot's full prompt pages for future sharing."""
+        if self.prefix_cache:
+            self.pool.register_prefix(slot, np.asarray(toks))
+
+    def prefill_suffix(self, params, toks, m: int, slot: int):
+        """Prefill tokens[m:] into `slot`'s own pages (positions m..s-1)
+        through the paged verify step, with every OTHER row's table
+        masked to -1 (their reads hit the fully-masked trash page, their
+        writes land in it — live slots untouched).  The suffix is
+        right-padded to a power-of-two bucket; pad positions' K/V land
+        above s in the slot's reserved pages (or the trash page) and are
+        overwritten by decode before ever becoming causally visible.
+        Returns full-vocab logits (1, V) for position s-1."""
+        toks = np.asarray(toks, np.int32)
+        s = toks.shape[0]
+        ln = s - m
+        assert ln >= 1, (s, m)
+        sb = max(8, 1 << (ln - 1).bit_length())
+        n = self.cc.max_batch
+        tok_arr = np.zeros((n, sb), np.int32)
+        tok_arr[slot, :ln] = toks[m:]
+        pos = np.zeros(n, np.int32)
+        pos[slot] = m
+        rows = np.full_like(self.pool.table, -1)
+        rows[slot] = self.pool.table[slot]
+        lg, self.pcaches = self.engine.verify_paged(
+            params, jnp.asarray(tok_arr), jnp.asarray(pos),
+            self._table(rows), self.pcaches)
+        return jnp.asarray(lg)[slot:slot + 1, ln - 1]
+
     def ensure(self, slot: int, upto: int) -> bool:
         return self.pool.grow(slot, upto)
 
@@ -238,24 +367,27 @@ class PagedKVCacheManager:
         self.pool.release(slot)
 
     def decode(self, params, cur, pos):
+        self._cow(np.asarray(pos), 1)
         nxt, self.pcaches = self.engine.decode_paged(
-            params, cur, pos, jnp.asarray(self.pool.table), self.pcaches)
+            params, cur, pos, self._table(), self.pcaches)
         return nxt
 
     def decode_sampled(self, params, cur, pos, t, k, p, keys):
+        self._cow(np.asarray(pos), 1)
         nxt, self.pcaches = self.engine.decode_paged_sampled(
-            params, cur, pos, jnp.asarray(self.pool.table), self.pcaches,
+            params, cur, pos, self._table(), self.pcaches,
             t, k, p, keys)
         return nxt
 
     def verify(self, params, toks, pos):
+        self._cow(np.asarray(pos), int(toks.shape[1]))
         lg, self.pcaches = self.engine.verify_paged(
-            params, toks, pos, jnp.asarray(self.pool.table), self.pcaches)
+            params, toks, pos, self._table(), self.pcaches)
         return lg
 
     def truncate(self, slot: int, n_tokens: int):
-        # paged rollback: pages past the committed length go back to the
-        # free list (table keeps its valid-prefix/-1-suffix invariant)
+        # paged rollback: pages past the committed length drop their
+        # reference (table keeps its valid-prefix/-1-suffix invariant)
         self.pool.shrink(slot, n_tokens)
 
 
@@ -377,17 +509,25 @@ class Scheduler:
             req = self.queue[0]
             toks = self._resume_tokens(req)
             s = len(toks)
-            # capacity for the prompt + the first decode write at pos s
-            if not self.kv.can_admit(b, s + 1):
+            # prefix-cache match + capacity for the prompt + the first
+            # decode write at pos s; m = resident prefix tokens (0=cold)
+            m = self.kv.admit_begin(b, toks, s + 1)
+            if m is None:
                 break          # head-of-line: wait for pages, stay FIFO
             self.queue.popleft()
             try:
-                logits, caches1 = self._prefill(toks, s)
+                if m:
+                    # warm admission: shared prefix pages are already
+                    # resident — prefill only the uncached suffix in
+                    # place (no dense caches1 / insert round-trip)
+                    logits = self.kv.prefill_suffix(self.params, toks, m, b)
+                else:
+                    logits, caches1 = self._prefill(toks, s)
                 first = self._first_token(req, logits)
             except BaseException:
-                # can_admit already reserved pages for slot b — free them
-                # and put the request back so nothing leaks on a prefill
-                # failure (engine error, interrupt, ...)
+                # admit_begin already reserved pages for slot b — free
+                # them and put the request back so nothing leaks on a
+                # prefill failure (engine error, interrupt, ...)
                 self.kv.release(b)
                 self.queue.appendleft(req)
                 raise
@@ -397,7 +537,9 @@ class Scheduler:
             self.cur[b, 0] = first
             self.admit_seq[b] = self._seq
             self._seq += 1
-            self.kv.insert(caches1, b)
+            if not m:
+                self.kv.insert(caches1, b)
+            self.kv.register_prefix(b, toks)
             if self.spec is not None:
                 # the draft shares weights, not caches: it prefills the
                 # same tokens into its own per-slot dense cache

@@ -985,3 +985,53 @@ def block_ext(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
                            drop=drop, tp=tp, shard_idx=shard_idx, axis=axis,
                            comm=comm)
     return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache mode: the per-layer K/V caches are physical page POOLS
+# (P+1, ps, HkvL, dh) shared across slots, indexed through a page table —
+# no contiguous per-slot view is ever materialized.  New tokens scatter
+# straight into their pages; attention reads K/V through the table (fused
+# Pallas kernel on attn_backend="pallas", else the gather-only-the-table
+# XLA path whose numerics are bit-identical to dense decode).  GQA
+# full-causal fp-cache layers only (model.supports_paged_attention gates
+# callers); other archs use the legacy gather/scatter fallback in
+# runtime/forward.py.
+# ---------------------------------------------------------------------------
+
+
+def gqa_mixer_page(cfg, kind, a, h, pos, cache, page_table, lay, axis):
+    """Paged attention over a chunk: h (B,C,d); pos (B,) absolute start
+    position of each slot's chunk; cache {"k","v"} page pools."""
+    from repro.kernels import ops as KOPS
+    q, k, v = _qkv(cfg, a, h, lay, axis)
+    pos2 = pos[:, None] + jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+    q = apply_rope(q, pos2, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, pos2, cfg.rope_theta, cfg.rope_fraction)
+    cache = {"k": KOPS.scatter_tokens_pages(cache["k"], k, page_table, pos),
+             "v": KOPS.scatter_tokens_pages(cache["v"], v, page_table, pos)}
+    if cfg.attn_backend == "pallas":
+        import jax as _jax
+        interp = _jax.default_backend() != "tpu"
+        o = KOPS.paged_attention(q, cache["k"], cache["v"], page_table, pos,
+                                 interpret=interp)
+    else:
+        o = A.paged_attend(q, cache["k"], cache["v"], page_table, pos)
+    b, c = h.shape[:2]
+    part = _mm(o.reshape(b, c, -1), a["wo"])
+    return part, cache
+
+
+def block_page(cfg, kind, lay, p, x, pos, cache, page_table, *, drop: bool,
+               tp: int, shard_idx, axis=MODEL_AXIS, comm=None):
+    """Paged-cache block (decode C=1 or chunked-prefill extension C>1):
+    x (B,C,d), pos (B,) chunk starts.  Returns (out, cache)."""
+    assert kind.mixer == "gqa" and kind.window == 0, kind
+    h = _norm(x, p["ln1"], cfg, shared=False, axis=axis)
+    h = column_entry(h, axis)
+    part, cache = gqa_mixer_page(cfg, kind, p["attn"], h, pos, cache,
+                                 page_table, lay, axis)
+    out = _wire_post_mixer(cfg, kind, p, x, part, p["attn"].get("bo"),
+                           drop=drop, tp=tp, shard_idx=shard_idx, axis=axis,
+                           comm=comm)
+    return out, cache

@@ -640,6 +640,65 @@ def verify_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
     return logits, new_caches
 
 
+def supports_paged_attention(cfg) -> bool:
+    """The fused paged forward (paged_step / blocks.block_page) covers
+    full-causal GQA stacks with fp KV caches: every cache leaf is a pure
+    {"k","v"} page pool.  int8 KV (extra scale leaves), windowed, MLA,
+    SSM, hybrid, and modality-prefix archs use the legacy
+    gather->dense-step->scatter fallback in runtime/forward.py."""
+    return supports_chunked_prefill(cfg) and cfg.kv_dtype != "int8"
+
+
+def paged_step(cfg, stacked, plan, tokens, pos, caches, page_table, *, tp,
+               axis=MODEL_AXIS):
+    """Fused paged forward: decode (C=1), chunked-prefill extension, and
+    speculative verify all in one shape family.
+
+    tokens (B, C) at per-row absolute positions pos (B,); caches per
+    segment hold paged K/V pools (length, P+1, ps, HkvL, dh) shared
+    across slots; page_table (B, n) int32 (-1 = unallocated) maps logical
+    page j of slot b to a physical page.  New K/V scatter straight into
+    the slot's pages and attention reads through the table
+    (blocks.gqa_mixer_page) — no contiguous per-slot cache view is ever
+    materialized.  Returns (logits (B, C, Vl) fp32 shard-local — entry j
+    scores the token after tokens[:, j] — and the updated caches).
+
+    Rollback contract matches verify_step: rejected-suffix K/V stays in
+    the slot's pages but is never causally visible, and is overwritten
+    when the position counter passes it again (pages are slot-private at
+    write positions — COW guarantees shared prefix pages are read-only,
+    runtime/paging.py)."""
+    shard_idx = jax.lax.axis_index(axis)
+    lay = _gqa_layout_or_none(cfg, tp)
+    b, c = tokens.shape
+    pos2 = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None]     # (B, C)
+    x = embed_tokens(stacked["emb"], tokens, axis, shard_idx)
+    if cfg.pos_emb == "learned":
+        x = x + jnp.take(stacked["pos"], pos2, axis=0)
+    segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)
+    new_caches = []
+    for seg_i, (s0, length, kind, dropped) in enumerate(segs):
+        sp = stacked["segs"][seg_i]
+        cache_seg = caches[seg_i]
+
+        def body(xc, xs_i, kind=kind, dropped=dropped,
+                 comm=plan.block_mode(s0)):
+            layer_p, cache = xs_i
+            out, nc = B.block_page(cfg, kind, lay, layer_p, xc, pos, cache,
+                                   page_table, drop=dropped, tp=tp,
+                                   shard_idx=shard_idx, axis=axis, comm=comm)
+            return out, nc
+
+        with ledger_scale(length):
+            x, nc = jax.lax.scan(body, x, (sp, cache_seg))
+        new_caches.append(nc)
+    x = (layernorm(x, stacked["lnf"]["w"], stacked["lnf"]["b"], cfg.norm_eps)
+         if cfg.norm == "layernorm"
+         else rmsnorm(x, stacked["lnf"]["w"], cfg.norm_eps))
+    logits = serve_logits(stacked, cfg, x, axis, plan)
+    return logits, new_caches
+
+
 def cache_specs_tree(cfg, plan: SPDPlanConfig, tp: int = 0):
     """Split-axis ints for each cache leaf (REPLICATED for MLA latent)."""
     segs = plan_segments(cfg, plan.drop_mask, plan.qmodes)

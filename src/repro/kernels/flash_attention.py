@@ -69,6 +69,121 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def _paged_flash_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref, *, sm_scale: float,
+                        n_pages: int, trash: int):
+    """One grid step per (slot, logical page).
+
+    The page table and chunk-start positions arrive as scalar-prefetch
+    refs: BlockSpec index maps read `pt_ref` to pick WHICH physical K/V
+    page the next block fetch targets, so unallocated entries never move
+    bytes beyond the one trash page.  The online-softmax accumulators
+    (acc, m, l) live in VMEM scratch carried across the minor (pages)
+    grid dimension; heads ride as the leading batch of a 3-d dot_general
+    so GQA needs no materialized head broadcast in HBM."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (C, Hq, D)
+    k = k_ref[0].astype(jnp.float32)               # (ps, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    c, hq, d = q.shape
+    ps, hkv, _ = k.shape
+    g = hq // hkv
+    # heads-as-batch: q (Hq, C, D) x k (Hq, ps, D) -> s (Hq, C, ps)
+    qt = q.transpose(1, 0, 2)
+    kt = jnp.repeat(k.transpose(1, 0, 2), g, axis=0)
+    vt = jnp.repeat(v.transpose(1, 0, 2), g, axis=0)
+    s = jax.lax.dot_general(qt, kt, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * sm_scale
+    # causal mask over absolute positions + trash mask for -1 entries
+    # (the caller maps -1 -> trash before prefetch; `== trash` recovers
+    # the sign since no real table entry can equal the trash index)
+    qpos = pos_ref[b] + jax.lax.broadcasted_iota(jnp.int32, (hq, c, ps), 1)
+    kvpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (hq, c, ps), 2)
+    valid = (kvpos <= qpos) & (pt_ref[b * n_pages + j] != trash)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...].reshape(hq, c)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_ref[...].reshape(hq, c) * corr + jnp.sum(p, axis=2)
+    acc = acc_ref[...].reshape(hq, c, d)
+    acc = acc * corr[..., None] + jax.lax.dot_general(
+        p, vt, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur.reshape(hq * c, 1)
+    l_ref[...] = l_new.reshape(hq * c, 1)
+    acc_ref[...] = acc.reshape(hq * c, d)
+
+    @pl.when(j == n_pages - 1)
+    def _final():
+        # fully-masked rows (e.g. inactive slots) divide by the guard and
+        # produce zeros instead of NaN, matching the XLA attend path
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o = (acc_ref[...] / denom).reshape(hq, c, d).transpose(1, 0, 2)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+def paged_flash_attention(q, k_pool, v_pool, page_table, pos, *,
+                          sm_scale=None, interpret=False):
+    """Paged-KV causal flash attention reading K/V through a page table.
+
+    q (B, C, Hq, D): per-slot query chunk at absolute positions
+    pos[b]..pos[b]+C-1; k_pool / v_pool (P+1, ps, Hkv, D) are the SHARED
+    physical page pools (page P is the trash page — runtime/paging.py);
+    page_table (B, n) int32 maps logical page j of slot b to a physical
+    page, -1 = unallocated (reads the trash page, fully masked).
+
+    The grid is (B, n) with pages minor-most (sequential on TPU); the
+    page table is scalar-prefetched so each K/V BlockSpec fetch DMAs the
+    one physical page it needs — no contiguous (B, n*ps) materialization
+    ever exists.  Oracle: kernels/ref.paged_attention_ref."""
+    b, c, hq, d = q.shape
+    pn1, ps, hkv, _ = k_pool.shape
+    n = page_table.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    sm_scale = float(sm_scale if sm_scale is not None else d ** -0.5)
+    trash = pn1 - 1
+    pt = jnp.where(page_table < 0, trash, page_table).astype(jnp.int32)
+
+    kernel = functools.partial(_paged_flash_kernel, sm_scale=sm_scale,
+                               n_pages=n, trash=trash)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n),
+        in_specs=[
+            pl.BlockSpec((1, c, hq, d),
+                         lambda b, j, pt_ref, pos_ref: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, hkv, d),
+                         lambda b, j, pt_ref, pos_ref:
+                         (pt_ref[b * n + j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, hkv, d),
+                         lambda b, j, pt_ref, pos_ref:
+                         (pt_ref[b * n + j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, hq, d),
+                               lambda b, j, pt_ref, pos_ref: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hq * c, d), jnp.float32),    # acc
+            pltpu.VMEM((hq * c, 1), jnp.float32),    # running max
+            pltpu.VMEM((hq * c, 1), jnp.float32),    # running denom
+        ])
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, hq, d), q.dtype),
+        interpret=interpret, name="paged_flash_attention",
+    )(pt.reshape(-1), jnp.asarray(pos, jnp.int32), q, k_pool, v_pool)
+
+
 def flash_attention_bhsd(q, k, v, *, sm_scale=None, causal=True,
                          block_q=128, block_k=128, interpret=False):
     """q (BH, Sq, D); k/v (BHkv, Sk, D), BH % BHkv == 0, heads-major

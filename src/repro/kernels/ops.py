@@ -70,17 +70,63 @@ def fused_residual_rmsnorm(x, r, w, *, eps=1e-5, block_rows=256,
 
 
 # ---------------------------------------------------------------------------
-# Paged KV-cache gather/scatter (runtime/paging.py holds the allocator,
-# runtime/engines.py the wiring).  Layout contract for every paged leaf:
+# Paged KV-cache attention + gather/scatter (runtime/paging.py holds the
+# allocator, runtime/engines.py the wiring).  Layout contract for every
+# paged leaf:
 #     pool  (layer, num_pages + 1, page_size, *tail)
 #     dense (layer, batch,         n * page_size, *tail)
 # where page index num_pages is the TRASH page absorbing reads/writes for
 # unallocated (-1) page-table entries.  Pure jnp on the non-head axes, so
 # the same code runs under SimEngine's vmap and inside shard_map with the
-# head tail axes sharded.  (A fused Pallas paged-attention kernel that
-# skips the contiguous materialization is the natural next step; this
-# gather-based form is the XLA-level reference it would have to match.)
+# head tail axes sharded.
+#
+# Two paged attention paths (core/blocks.gqa_mixer_page dispatches):
+#   * paged_attention — the fused Pallas kernel: K/V blocks are read
+#     directly through the scalar-prefetched page table, no contiguous
+#     materialization ever exists (attn_backend="pallas");
+#   * models/attention.paged_attend — the XLA path: gathers only the
+#     table's (bucketed) pages and reuses the dense attend math, so its
+#     numerics are bit-identical to dense decode.
+# The gather/scatter helpers below remain the fallback for archs whose
+# cache trees mix paged and dense leaves (MLA latents, int8 scales,
+# hybrid) — see runtime/forward.paged_decode_step.
 # ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, page_table, pos, *, sm_scale=None,
+                    interpret=False):
+    """Fused paged flash attention (see kernels/flash_attention.py for
+    the layout contract; kernels/ref.paged_attention_ref is the oracle).
+
+    q (B, C, Hq, D); k_pool/v_pool (P+1, ps, Hkv, D); page_table (B, n)
+    int32 with -1 = unallocated; pos (B,) absolute chunk-start
+    positions.  Returns (B, C, Hq, D)."""
+    return FA.paged_flash_attention(q, k_pool, v_pool, page_table, pos,
+                                    sm_scale=sm_scale, interpret=interpret)
+
+
+def scatter_tokens_pages(pool, vals, page_table, pos):
+    """Write a chunk of C tokens per slot straight into its pages.
+
+    pool (P+1, ps, *t) is ONE layer's physical page pool (no batch
+    axis); vals (B, C, *t) are the new entries for logical positions
+    pos[b]..pos[b]+C-1 of slot b.  Positions whose table entry is -1 (or
+    that fall beyond the table width — inactive slots carry garbage pos)
+    land in the trash page.  One vectorized scatter: distinct positions
+    of a slot never collide on (page, offset), distinct slots never
+    share a live page, so only trash-page writes overlap (don't care)."""
+    pn = pool.shape[0] - 1
+    ps = pool.shape[1]
+    b, c = vals.shape[:2]
+    n = page_table.shape[1]
+    pos2 = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]   # (B, C)
+    pidx = pos2 // ps
+    phys = jnp.take_along_axis(page_table, jnp.clip(pidx, 0, n - 1), 1)
+    phys = jnp.where((phys < 0) | (pidx >= n) | (pidx < 0), pn, phys)
+    off = pos2 % ps
+    return pool.at[phys.reshape(-1), off.reshape(-1)].set(
+        vals.reshape((b * c,) + vals.shape[2:]))
 
 
 def gather_pages(pool, page_table):
@@ -120,14 +166,21 @@ def scatter_chunk_pages(pool, dense, page_table, pos, n: int):
 
     dense (L, B, n_pages*ps, *t) holds the post-update contiguous view;
     the entries at sequence indices pos[b]..pos[b]+n-1 are the tokens
-    written this step (speculative verify scores n = k+1 tokens at once).
-    `n` is static and small, so this unrolls n single-token scatters —
-    each lands in its own physical page via the page table, with
-    unmapped (-1) entries absorbed by the trash page.
-    """
-    for j in range(n):
-        pool = scatter_token_page(pool, dense, page_table, pos + j)
-    return pool
+    written this step (speculative verify scores n = k+1 tokens at
+    once).  One vectorized scatter over all B*n tokens: distinct
+    positions of a slot never collide on (page, offset) and distinct
+    slots never share a live page, so only trash-page writes (unmapped
+    -1 entries, inactive slots) overlap — harmlessly."""
+    pn = pool.shape[1] - 1
+    ps = pool.shape[2]
+    b, npg = page_table.shape
+    pos2 = pos[:, None] + jnp.arange(n, dtype=jnp.int32)[None]   # (B, n)
+    pidx = pos2 // ps
+    phys = jnp.take_along_axis(page_table, jnp.clip(pidx, 0, npg - 1), 1)
+    phys = jnp.where((phys < 0) | (pidx >= npg) | (pidx < 0), pn, phys)
+    toks = dense[:, jnp.arange(b)[:, None], pos2]          # (L, B, n, *t)
+    toks = toks.reshape((dense.shape[0], b * n) + dense.shape[3:])
+    return pool.at[:, phys.reshape(-1), (pos2 % ps).reshape(-1)].set(toks)
 
 
 def scatter_prefill_pages(pool, dense1, page_row):

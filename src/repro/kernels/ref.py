@@ -23,6 +23,39 @@ def flash_attention_ref(q, k, v, *, sm_scale=None, causal=True):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, page_table, pos, *,
+                        sm_scale=None):
+    """Oracle for kernels/flash_attention.paged_flash_attention.
+
+    q (B, C, Hq, D); k_pool/v_pool (P+1, ps, Hkv, D) with page P the
+    trash page; page_table (B, n) int32, -1 = unallocated; pos (B,)
+    absolute position of q[:, 0].  Gathers the table's pages into a
+    contiguous (B, n*ps) view and runs masked softmax attention in fp32:
+    causally invisible AND unallocated positions contribute exactly 0."""
+    b, c, hq, d = q.shape
+    pn1, ps, hkv, _ = k_pool.shape
+    n = page_table.shape[1]
+    g = hq // hkv
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    pt = jnp.where(page_table < 0, pn1 - 1, page_table)
+    kg = jnp.take(k_pool, pt.reshape(-1), axis=0).reshape(b, n * ps, hkv, d)
+    vg = jnp.take(v_pool, pt.reshape(-1), axis=0).reshape(b, n * ps, hkv, d)
+    kg = jnp.repeat(kg, g, axis=2)
+    vg = jnp.repeat(vg, g, axis=2)
+    s = jnp.einsum("bchd,bkhd->bhck", q.astype(jnp.float32),
+                   kg.astype(jnp.float32)) * sm_scale
+    qpos = pos[:, None] + jnp.arange(c)[None]                  # (B, C)
+    kvpos = jnp.arange(n * ps)[None]                           # (1, n*ps)
+    valid = (kvpos[:, None, :] <= qpos[:, :, None]) \
+        & (jnp.repeat(page_table, ps, axis=1) >= 0)[:, None, :]
+    s = jnp.where(valid[:, None], s, -1e30)
+    p = jnp.exp(s - jnp.maximum(jnp.max(s, -1, keepdims=True), -5e29))
+    p = jnp.where(valid[:, None], p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-20)
+    o = jnp.einsum("bhck,bkhd->bchd", p, vg.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def fused_residual_rmsnorm_ref(x, r, w, eps: float = 1e-5):
     """(x + r) -> rmsnorm -> * w ; returns (normed, x + r)."""
     s = (x.astype(jnp.float32) + r.astype(jnp.float32))

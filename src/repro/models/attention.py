@@ -118,6 +118,32 @@ def attention_any(q, k, v, q_pos, kv_pos, *, window: int = 0,
 # Decode-from-cache helpers
 # ---------------------------------------------------------------------------
 
+def paged_attend(q, k_pool, v_pool, page_table, pos, *,
+                 scale: float | None = None):
+    """Paged-KV attention, XLA path: gather ONLY the table's pages.
+
+    q (B,C,Hq,Dh) at absolute positions pos[b]..pos[b]+C-1; k_pool/v_pool
+    (P+1, ps, Hkv, Dh) are the shared physical page pools (page P is the
+    trash page); page_table (B,n) int32, -1 = unallocated (reads trash,
+    fully masked).  Reuses `attend`, so numerics are bit-identical to the
+    dense decode path: masked lanes contribute exactly 0.0, and
+    power-of-two table widths (runtime bucketing) keep XLA's balanced
+    reduction trees associating the valid prefix identically.  The fused
+    Pallas kernel (kernels/ops.paged_attention) is the TPU path that
+    skips even this bucketed gather."""
+    b, c = q.shape[:2]
+    pn1, ps, hkv, dh = k_pool.shape
+    n = page_table.shape[1]
+    pt = jnp.where(page_table < 0, pn1 - 1, page_table)
+    kg = jnp.take(k_pool, pt.reshape(-1), axis=0).reshape(b, n * ps, hkv, dh)
+    vg = jnp.take(v_pool, pt.reshape(-1), axis=0).reshape(b, n * ps, hkv, dh)
+    q_pos = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+    kv_pos = jnp.broadcast_to(jnp.arange(n * ps)[None], (b, n * ps))
+    mask = causal_mask(q_pos, kv_pos) \
+        & (jnp.repeat(page_table, ps, axis=1) >= 0)[:, None, :]
+    return attend(q, kg, vg, mask, scale)
+
+
 def decode_attend(q, k_cache, v_cache, pos, *, window: int = 0,
                   scale: float | None = None):
     """Single-token decode: q (B,1,Hq,Dh); caches (B,S,Hkv,Dh);

@@ -81,6 +81,15 @@ class Engine:
         return step(pcaches, caches1, jnp.int32(b),
                     jnp.asarray(page_row, jnp.int32))[0]
 
+    def copy_paged_pages(self, pcaches, src, dst):
+        """COW page duplication: copy physical page src[i] -> dst[i] on
+        every pageable leaf (runtime/paging.py ensure_writable decides
+        the pairs; the pool rewires the slot's table host-side)."""
+        step = self._step(("copy_pages", len(src)),
+                          lambda: F.copy_pages_step(self.cfg, self.plan))
+        return step(pcaches, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))[0]
+
     # ---- compiled forward steps ----
 
     def prefill(self, params, tokens, *, cache_len: int, lengths=None,

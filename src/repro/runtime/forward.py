@@ -145,21 +145,30 @@ def decode_step(cfg, plan, *, tp, with_logits=False, sampled=False,
 
 
 def paged_decode_step(cfg, plan, *, tp, with_logits=False, sampled=False):
-    """Paged decode: gather each slot's pages into a contiguous view,
-    run the dense decode math, scatter the newly written token back into
-    its page (kernels/ops.py).  The page pool is replicated over the DP
-    axes (any slot may map to any page), so the batch runs replicated;
-    the model-axis sharding is untouched."""
-    flags = M.cache_pageable_tree(cfg, plan)
+    """Paged decode.  On archs M.supports_paged_attention covers, the
+    FUSED path runs: K/V scatter straight into their pages and attention
+    reads through the page table (M.paged_step — Pallas kernel or the
+    bucketed-gather XLA path), so no full cache tree is ever gathered or
+    scattered.  Other archs (int8 KV, MLA, SSM, hybrid, windowed) keep
+    the legacy gather -> dense math -> scatter fallback.  The page pool
+    is replicated over the DP axes (any slot may map to any page), so
+    the batch runs replicated; the model-axis sharding is untouched."""
+    if M.supports_paged_attention(cfg):
+        def math(p, toks, pos, pt, pc):
+            lg, pc2 = M.paged_step(cfg, p, plan, toks, pos, pc, pt, tp=tp)
+            return lg[:, 0], pc2
+    else:
+        flags = M.cache_pageable_tree(cfg, plan)
 
-    def math(p, toks, pos, pt, pc):
-        dense = _map_paged(flags, lambda c: KOPS.gather_pages(c, pt),
-                           lambda c: c, pc)
-        lg, new_dense = M.decode_step(cfg, p, plan, toks, pos, dense, tp=tp)
-        pc2 = _map_paged(
-            flags, lambda c, nd: KOPS.scatter_token_page(c, nd, pt, pos),
-            lambda c, nd: nd, pc, new_dense)
-        return lg, pc2
+        def math(p, toks, pos, pt, pc):
+            dense = _map_paged(flags, lambda c: KOPS.gather_pages(c, pt),
+                               lambda c: c, pc)
+            lg, new_dense = M.decode_step(cfg, p, plan, toks, pos, dense,
+                                          tp=tp)
+            pc2 = _map_paged(
+                flags, lambda c, nd: KOPS.scatter_token_page(c, nd, pt, pos),
+                lambda c, nd: nd, pc, new_dense)
+            return lg, pc2
 
     if sampled:
         def local(p, toks, pos, pt, pc, t, k, pp, keys):
@@ -200,9 +209,20 @@ def verify_step(cfg, plan, *, tp, q_chunk):
 
 
 def paged_verify_step(cfg, plan, *, tp, q_chunk, n_tokens):
-    """Paged speculative verify: gather pages -> dense verify math ->
-    scatter the n_tokens newly written positions back into their pages
-    (batch replicated, like paged_decode_step)."""
+    """Paged speculative verify (and paged SUFFIX PREFILL: admission
+    through the prefix cache feeds the uncached prompt tail through this
+    step with other rows' tables masked to -1).  Fused on covered archs,
+    legacy gather -> dense verify -> scatter elsewhere (batch
+    replicated, like paged_decode_step)."""
+    if M.supports_paged_attention(cfg):
+        def local(p, toks, pos, pt, pc):
+            lg, pc2 = M.paged_step(cfg, p, plan, toks, pos, pc, pt, tp=tp)
+            return full_logits_seq(cfg, lg), pc2
+
+        return local, StepSpec(("params", "rep", "rep", "rep", "cache"),
+                               ("rep", "cache"), donate=(4,),
+                               shard_batch=False)
+
     flags = M.cache_pageable_tree(cfg, plan)
 
     def local(p, toks, pos, pt, pc):
@@ -218,6 +238,22 @@ def paged_verify_step(cfg, plan, *, tp, q_chunk, n_tokens):
 
     return local, StepSpec(("params", "rep", "rep", "rep", "cache"),
                            ("rep", "cache"), donate=(4,), shard_batch=False)
+
+
+def copy_pages_step(cfg, plan):
+    """Device-side copy-on-write page duplication: copy physical page
+    src[i] -> dst[i] on every pageable cache leaf (the PagePool rewires
+    the slot's table host-side — runtime/paging.py ensure_writable).
+    src/dst (n,) int32; callers pad unused pairs with trash -> trash
+    copies, which are harmless."""
+    flags = M.cache_pageable_tree(cfg, plan)
+
+    def local(pc, src, dst):
+        return (_map_paged(flags, lambda c: c.at[:, dst].set(c[:, src]),
+                           lambda c: c, pc),)
+
+    return local, StepSpec(("cache", "rep", "rep"), ("cache",),
+                           donate=(0,), shard_batch=False)
 
 
 def insert_paged_step(cfg, plan):

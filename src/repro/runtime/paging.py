@@ -1,4 +1,5 @@
-"""Paged KV-cache: a block-pool allocator with per-slot page tables.
+"""Paged KV-cache: a block-pool allocator with per-slot page tables,
+copy-on-write page sharing, and a hash-keyed prefix cache.
 
 Dense serving pre-allocates one `(max_batch, cache_len)` KV buffer per
 cache leaf, so HBM scales with the WORST-CASE batch geometry.  Paging
@@ -21,17 +22,44 @@ with a full-length sequence axis are paged (GQA/hybrid K/V and their int8
 scales, MLA latents); rolling-window KV, SSM state, and conv tails stay
 dense per-slot — see `core.model.cache_pageable_tree`.
 
-`PagePool` here is pure host-side numpy bookkeeping (free list + page
-table + per-slot token counts); the device-side gather/scatter companions
-live in `kernels.ops` and the engine wiring in `runtime.engines`.  The
-scheduler that drives it (admission by free pages, preemption-by-eviction)
-is the unified `repro.api.scheduler.Scheduler` in paged mode — see
-docs/serving.md for the full design.
+Sharing model (millions-of-users story: identical system prompts share
+physical pages):
+
+  * every physical page carries a REFCOUNT (`refs`); a page may appear in
+    several slots' table rows, read-only while shared;
+  * FULL pages whose token content is known are REGISTERED in a prefix
+    index: `page_hash[phys] = chain digest`, `prefix_index[digest] =
+    phys` (kept bijective).  The chain digest of logical page j covers
+    the entire token prefix 0..(j+1)*page_size, so matching digests imply
+    matching full prefixes;
+  * released registered pages move to a CACHED LRU instead of the free
+    list — content retained for future prefix hits, reclaimed (evicted +
+    deregistered) only when the free list runs dry;
+  * admission (`api.scheduler`) matches a new prompt's full pages through
+    `match_prefix`, shares the hit via `share_prefix` (refs += 1), and
+    prefills only the uncached suffix;
+  * a write to a page with refs > 1 must COPY first: `ensure_writable`
+    allocates a private page, rewires the slot's table, and returns the
+    (src, dst) pair for the device-side content copy
+    (`runtime.forward.copy_pages_step`).  A write to a privately-owned
+    but registered page just deregisters it (content is changing).
+    In the scheduler's normal flow writes never land below a slot's
+    shared prefix (matching is capped page-aligned below the prompt
+    length and positions only move forward), so COW copies are a safety
+    net, not a steady-state cost.
+
+`PagePool` here is pure host-side numpy bookkeeping; the device-side
+paged attention / scatter companions live in `kernels.ops` and the engine
+wiring in `runtime.engines`.  The scheduler that drives it (admission by
+free pages, preemption-by-eviction) is the unified
+`repro.api.scheduler.Scheduler` in paged mode — see docs/serving.md.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -41,15 +69,38 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-max(n_tokens, 0) // page_size)
 
 
+def page_hashes(tokens, page_size: int) -> List[bytes]:
+    """Chain digests of every FULL page of `tokens`.
+
+    Digest j covers the whole prefix tokens[: (j+1)*page_size] (each link
+    hashes the previous digest plus the page's token bytes), so equal
+    digests imply equal full prefixes — partial trailing pages are never
+    hashed."""
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
+    n = toks.shape[0] // page_size
+    out: List[bytes] = []
+    h = b""
+    for j in range(n):
+        h = hashlib.blake2b(
+            h + toks[j * page_size:(j + 1) * page_size].tobytes(),
+            digest_size=16).digest()
+        out.append(h)
+    return out
+
+
 @dataclass
 class PagePool:
-    """Fixed-size page allocator with a per-slot page table.
+    """Fixed-size page allocator: per-slot page tables, per-page
+    refcounts, and a prefix cache over released pages.
 
     Invariants (asserted by `check`):
-      * every physical page is either on the free list or owned by exactly
-        one slot;
+      * every physical page is in exactly ONE of: the free list, the
+        cached LRU, or referenced by table rows (refs >= 1);
+      * `refs[p]` equals the number of table entries mapping to p;
       * a slot's table row is a prefix of valid pages followed by -1s;
-      * `len(free) + sum(owned) == num_pages`.
+      * `page_hash` and `prefix_index` are inverse bijections; every
+        cached page is registered;
+      * `num_free (= len(free) + len(cached)) + #referenced == num_pages`.
     """
     num_pages: int
     page_size: int
@@ -58,17 +109,14 @@ class PagePool:
 
     def __post_init__(self):
         assert self.num_pages > 0 and self.page_size > 0
-        self.table = np.full((self.max_slots, self.pages_per_slot), -1,
-                             np.int32)
-        self.owned = np.zeros(self.max_slots, np.int64)   # pages per slot
-        # LIFO free list: recently released pages are re-used first.
-        self.free: List[int] = list(range(self.num_pages - 1, -1, -1))
+        self.reset()
 
     # ---------------- queries ----------------
 
     @property
     def num_free(self) -> int:
-        return len(self.free)
+        """Pages allocatable right now: truly free + evictable cached."""
+        return len(self.free) + len(self.cached)
 
     @property
     def trash_page(self) -> int:
@@ -80,7 +128,7 @@ class PagePool:
 
     def can_grow(self, slot: int, n_tokens: int) -> bool:
         need = self.pages_for(n_tokens) - int(self.owned[slot])
-        return need <= len(self.free)
+        return need <= self.num_free
 
     def fits_alone(self, n_tokens: int) -> bool:
         """Whether a request of n_tokens could ever run (even with the
@@ -88,13 +136,39 @@ class PagePool:
         need = self.pages_for(n_tokens)
         return need <= min(self.num_pages, self.pages_per_slot)
 
+    # ---------------- internal page lifecycle ----------------
+
+    def _alloc_page(self) -> int:
+        """Take one page: prefer the free list, evict the least-recently
+        released cached page (deregistering its digest) when empty."""
+        if self.free:
+            return self.free.pop()
+        p, _ = self.cached.popitem(last=False)
+        self._deregister(p)
+        return p
+
+    def _unref(self, p: int):
+        self.refs[p] -= 1
+        assert self.refs[p] >= 0, (p, self.refs[p])
+        if self.refs[p] == 0:
+            if p in self.page_hash:
+                self.cached[p] = None          # retained for prefix hits
+                self.cached.move_to_end(p)
+            else:
+                self.free.append(p)
+
+    def _deregister(self, p: int):
+        h = self.page_hash.pop(p, None)
+        if h is not None:
+            del self.prefix_index[h]
+
     # ---------------- mutation ----------------
 
     def grow(self, slot: int, n_tokens: int) -> bool:
         """Grow `slot`'s allocation to cover n_tokens cache positions.
 
-        All-or-nothing: returns False (allocating nothing) when the free
-        list cannot supply every page needed."""
+        All-or-nothing: returns False (allocating nothing) when free +
+        evictable-cached pages cannot supply every page needed."""
         target = self.pages_for(n_tokens)
         if target > self.pages_per_slot:
             return False
@@ -102,50 +176,133 @@ class PagePool:
         need = target - have
         if need <= 0:
             return True
-        if need > len(self.free):
+        if need > self.num_free:
             return False
         for i in range(have, target):
-            self.table[slot, i] = self.free.pop()
+            p = self._alloc_page()
+            self.table[slot, i] = p
+            self.refs[p] += 1
         self.owned[slot] = target
         return True
 
     def shrink(self, slot: int, n_tokens: int) -> int:
         """Truncate `slot`'s allocation to cover only n_tokens cache
-        positions, returning suffix pages to the free list.
+        positions, dropping one reference per suffix page.
 
         This is the paged rollback of a rejected speculative suffix: the
         verify forward grew the slot to hold k+1 positions, acceptance
-        committed fewer, and the pages past `pages_for(committed)` go
-        straight back to the pool (table row keeps its valid-prefix /
-        -1-suffix invariant).  Returns the number of pages released."""
+        committed fewer, and the pages past `pages_for(committed)` drop
+        out of the row (back to free, or to the cached LRU when
+        registered).  Returns the number of table entries cleared."""
         target = self.pages_for(n_tokens)
         have = int(self.owned[slot])
         if target >= have:
             return 0
         for i in range(have - 1, target - 1, -1):
-            self.free.append(int(self.table[slot, i]))
+            self._unref(int(self.table[slot, i]))
             self.table[slot, i] = -1
         self.owned[slot] = target
         return have - target
 
     def release(self, slot: int) -> int:
-        """Free every page owned by `slot`; returns the count released."""
+        """Drop every reference `slot` holds; returns the count dropped."""
         n = int(self.owned[slot])
         for i in range(n):
-            self.free.append(int(self.table[slot, i]))
+            self._unref(int(self.table[slot, i]))
         self.table[slot, :] = -1
         self.owned[slot] = 0
         return n
 
     def reset(self):
-        for s in range(self.max_slots):
-            self.release(s)
+        """Restore the CANONICAL fresh-pool state — identical to a newly
+        constructed pool, so physical page assignment (and any trace
+        keyed on it) is reproducible across runs regardless of the
+        release order that preceded the reset (tests/test_paging.py
+        locks this)."""
+        self.table = np.full((self.max_slots, self.pages_per_slot), -1,
+                             np.int32)
+        self.owned = np.zeros(self.max_slots, np.int64)   # row lengths
+        self.refs = np.zeros(self.num_pages, np.int64)
+        # LIFO free list: page 0 is popped first, matching __post_init__.
+        self.free: List[int] = list(range(self.num_pages - 1, -1, -1))
+        self.cached: "OrderedDict[int, None]" = OrderedDict()
+        self.page_hash: Dict[int, bytes] = {}
+        self.prefix_index: Dict[bytes, int] = {}
+
+    # ---------------- prefix cache ----------------
+
+    def match_prefix(self, tokens) -> List[int]:
+        """Longest run of resident physical pages whose chain digests
+        match `tokens`' full pages (cap the token count BEFORE calling —
+        the scheduler passes at most len(prompt)-1 tokens so at least one
+        position is left to prefill for logits)."""
+        out: List[int] = []
+        for h in page_hashes(tokens, self.page_size):
+            p = self.prefix_index.get(h)
+            if p is None:
+                break
+            out.append(p)
+        return out
+
+    def share_prefix(self, slot: int, pages: List[int]):
+        """Map `pages` (a match_prefix result) read-only into the empty
+        `slot`'s table prefix, taking one reference each."""
+        assert int(self.owned[slot]) == 0, (slot, self.owned[slot])
+        assert len(pages) <= self.pages_per_slot
+        for i, p in enumerate(pages):
+            assert p in self.page_hash, p   # only registered pages shared
+            self.cached.pop(p, None)        # resident again, not evictable
+            self.table[slot, i] = p
+            self.refs[p] += 1
+        self.owned[slot] = len(pages)
+
+    def register_prefix(self, slot: int, tokens):
+        """Register `slot`'s full pages (content = `tokens`) in the
+        prefix index so later prompts can share them.  Pages whose digest
+        is already indexed (including this slot's own shared pages) are
+        skipped, keeping page_hash/prefix_index bijective."""
+        hashes = page_hashes(tokens, self.page_size)
+        n = min(len(hashes), int(self.owned[slot]))
+        for j in range(n):
+            p = int(self.table[slot, j])
+            h = hashes[j]
+            if self.page_hash.get(p) == h or h in self.prefix_index:
+                continue
+            self._deregister(p)             # stale digest, if any
+            self.page_hash[p] = h
+            self.prefix_index[h] = p
+
+    def ensure_writable(self, slot: int,
+                        page_idx: int) -> Optional[Tuple[int, int]]:
+        """Prepare logical page `page_idx` of `slot` for a write.
+
+        Shared page (refs > 1): allocate a private copy, rewire the
+        slot's table, and return (src, dst) — the CALLER must copy the
+        page content device-side (engine.copy_paged_pages) before
+        writing.  Privately-owned but registered page: deregister (its
+        indexed content is about to change) and return None.  Already
+        private: None."""
+        p = int(self.table[slot, page_idx])
+        assert p >= 0, (slot, page_idx)
+        if self.refs[p] > 1:
+            if self.num_free == 0:
+                raise RuntimeError("COW copy needs a page but pool is full")
+            dst = self._alloc_page()
+            self.refs[p] -= 1
+            self.table[slot, page_idx] = dst
+            self.refs[dst] += 1
+            return p, dst
+        self._deregister(p)
+        return None
 
     # ---------------- invariants ----------------
 
     def check(self):
-        seen = set(self.free)
-        assert len(seen) == len(self.free), "free list has duplicates"
+        free_set = set(self.free)
+        assert len(free_set) == len(self.free), "free list has duplicates"
+        cached_set = set(self.cached)
+        assert not (free_set & cached_set), "page both free and cached"
+        ref_count = np.zeros(self.num_pages, np.int64)
         for s in range(self.max_slots):
             n = int(self.owned[s])
             row = self.table[s]
@@ -154,6 +311,16 @@ class PagePool:
             for p in row[:n]:
                 p = int(p)
                 assert 0 <= p < self.num_pages, (s, p)
-                assert p not in seen, f"page {p} double-owned"
-                seen.add(p)
-        assert len(seen) == self.num_pages, (len(seen), self.num_pages)
+                ref_count[p] += 1
+        assert (ref_count == self.refs).all(), "refcount drift"
+        for p in range(self.num_pages):
+            states = (p in free_set) + (p in cached_set) + (ref_count[p] > 0)
+            assert states == 1, f"page {p} in {states} states"
+        assert len(free_set) + len(cached_set) + int((ref_count > 0).sum()) \
+            == self.num_pages
+        assert set(self.cached) <= set(self.page_hash), \
+            "cached page not registered"
+        assert len(self.page_hash) == len(self.prefix_index)
+        for p, h in self.page_hash.items():
+            assert self.prefix_index.get(h) == p, (p, h)
+            assert 0 <= p < self.num_pages

@@ -38,6 +38,32 @@ def test_shard_engine_matches_golden(golden):
     assert _generate(golden, "shard", dp=2) == golden["tokens"]
 
 
+@pytest.mark.parametrize("engine,dp", [("sim", 1), ("shard", 2)])
+def test_prefix_cache_matches_golden(golden, engine, dp):
+    """The paged serve path with prefix caching is locked to the SAME
+    dense golden trace: a cold pass registers every prompt's full pages,
+    a warm pass re-serves the batch through shared pages + suffix-only
+    prefill — both must be bit-identical to the dense trace (masked
+    paged-attention lanes contribute exactly zero, so sharing never
+    shifts numerics)."""
+    from repro.api import LLM, SamplingParams
+    llm = LLM.load(golden["arch"], tp=golden["tp"], dp=dp,
+                   engine=engine, dtype=golden["dtype"],
+                   spd=golden["spd"], cache_len=golden["cache_len"],
+                   seed=golden["seed"], page_size=8,
+                   num_pages=4 * golden["cache_len"] // 8)
+    sched = llm.serve()
+    assert sched.kv.prefix_cache      # auto-on for this arch
+    prompts = [np.asarray(p, np.int32) for p in golden["prompts"]]
+    sp = SamplingParams(max_new=golden["max_new"])
+    cold = [o.token_ids for o in llm.generate(prompts, sp)]
+    assert cold == golden["tokens"]
+    warm = [o.token_ids for o in llm.generate(prompts, sp)]
+    assert warm == golden["tokens"]
+    assert sched.kv.prefix_hits > 0   # the warm pass really shared pages
+    sched.pool.check()
+
+
 # NOTE deliberately NOT locked across TP degrees: a different tp changes
 # fp32 psum summation order, and near-tied logits of the untrained
 # reduced model can legitimately flip a greedy argmax.  Cross-tp parity

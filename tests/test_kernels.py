@@ -56,6 +56,77 @@ def test_flash_matches_model_attention():
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_fuzz(dtype):
+    """Fused paged kernel vs the jnp oracle over random geometries:
+    ragged per-slot lengths, -1 (unallocated) table entries, pages
+    shared between rows, GQA/MQA/MHA head layouts, decode (C=1) and
+    chunked (C>1) queries.  Tolerances mirror the flash sweep: the
+    kernel accumulates in fp32, so bf16 error is input-rounding bound
+    (2e-2) and fp32 is reduction-order bound (2e-5)."""
+    from repro.kernels.ref import paged_attention_ref
+
+    rng = np.random.default_rng(42)
+    for trial in range(10):
+        b = int(rng.integers(1, 4))
+        c = int(rng.choice([1, 1, 4, 8]))
+        hq, hkv = [(4, 4), (4, 2), (8, 1)][trial % 3]
+        d = int(rng.choice([32, 64]))
+        ps = int(rng.choice([8, 16]))
+        width = int(rng.integers(2, 6))           # table width (pages)
+        phys = int(rng.integers(width, 2 * width * b + 1))
+        table = np.full((b, width), -1, np.int32)
+        pos = np.zeros(b, np.int32)
+        for r in range(b):
+            # enough owned pages that the query chunk fits at `pos`
+            own = int(rng.integers(max(1, (c + ps - 1) // ps), width + 1))
+            # rows may alias the same physical page (read-only sharing)
+            table[r, :own] = rng.integers(0, phys, own)
+            pos[r] = int(rng.integers(0, own * ps - c + 1))
+        q = jnp.asarray(rng.standard_normal((b, c, hq, d)), dtype)
+        kp = jnp.asarray(rng.standard_normal((phys + 1, ps, hkv, d)), dtype)
+        vp = jnp.asarray(rng.standard_normal((phys + 1, ps, hkv, d)), dtype)
+        out = ops.paged_attention(q, kp, vp, jnp.asarray(table),
+                                  jnp.asarray(pos), interpret=True)
+        ref = paged_attention_ref(q, kp, vp, jnp.asarray(table),
+                                  jnp.asarray(pos))
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   err_msg=str((trial, b, c, hq, hkv, d,
+                                                ps, width)),
+                                   **_tol(dtype))
+
+
+def test_paged_scatter_gather_roundtrip():
+    """scatter_tokens_pages places every token where gather_pages (the
+    legacy dense view) finds it, -1 / out-of-range entries land in the
+    trash page, and live pages of other slots are untouched."""
+    rng = np.random.default_rng(7)
+    ps, phys, width, b, c, tail = 4, 6, 3, 2, 3, (2, 5)
+    pool = jnp.zeros((phys + 1, ps) + tail, jnp.float32)
+    table = np.asarray([[0, 3, -1], [5, -1, -1]], np.int32)
+    pos = np.asarray([2, 1], np.int32)
+    vals = jnp.asarray(rng.standard_normal((b, c) + tail), jnp.float32)
+    out = ops.scatter_tokens_pages(pool, vals, jnp.asarray(table),
+                                   jnp.asarray(pos))
+    dense = np.asarray(out)[np.where(table < 0, phys, table)]  # (B, W, ps)
+    dense = dense.reshape(b, width * ps, *tail)
+    for r in range(b):
+        for j in range(c):
+            p = int(pos[r]) + j
+            if table[r, p // ps] >= 0:
+                np.testing.assert_array_equal(dense[r, p],
+                                              np.asarray(vals)[r, j])
+    # slot 0 wrote positions 2..4: page 0 offsets 2,3 + page 3 offset 0;
+    # nothing past its own chunk is touched
+    assert np.asarray(out)[3, 1:].sum() == 0
+    # a write through a -1 entry must hit ONLY the trash page
+    table2 = np.asarray([[-1, -1, -1], [5, -1, -1]], np.int32)
+    out2 = ops.scatter_tokens_pages(pool, vals, jnp.asarray(table2),
+                                    jnp.asarray(pos))
+    assert np.asarray(out2)[:5].sum() == 0        # pages 0..4 untouched
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("t,d,br", [(512, 96, 256), (100, 64, 256),
                                     (256, 960, 128)])
 def test_fused_norm_sweep(t, d, br, dtype):

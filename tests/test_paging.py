@@ -1,10 +1,32 @@
 """Paged KV-cache runtime: allocator invariants (grow/release/shrink),
-paged-vs-dense decode equivalence on every registry backend, chunked
-prefill, and a preemption soak."""
+copy-on-write sharing + prefix cache, a hypothesis property soak over
+the allocator, paged-vs-dense decode equivalence on every registry
+backend, chunked prefill, and a preemption soak."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # property soak skips, the
+    hypothesis = None                     # deterministic tests still run
+
+    def _skip_deco(*a, **k):
+        def deco(f):
+            return pytest.mark.skip(reason="hypothesis not installed")(f)
+        return deco
+
+    given = settings = _skip_deco
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
 
 from conftest import engine_for_backend, make_cfg
 from repro.api.scheduler import CacheConfig, Request, Scheduler
@@ -12,7 +34,9 @@ from repro.config.base import SPDPlanConfig
 from repro.core import model as M, simtp
 from repro.parallel.backend import backend_names
 from repro.runtime.engines import SimEngine
-from repro.runtime.paging import PagePool
+from repro.runtime.paging import PagePool, page_hashes
+
+EXAMPLES = int(os.environ.get("SOAK_EXAMPLES", "25"))
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +101,212 @@ def test_pool_fits_alone():
     pool2 = PagePool(num_pages=16, page_size=8, max_slots=2,
                      pages_per_slot=2)
     assert not pool2.fits_alone(17)   # 3 pages > per-slot table width
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache + copy-on-write (allocator level)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_reset_canonical():
+    """reset() restores the EXACT fresh-pool state — free-list order
+    included — regardless of the alloc/release history that preceded it,
+    so physical page assignment is reproducible across runs (this test
+    locks the free-list nondeterminism fix)."""
+    fresh = PagePool(num_pages=8, page_size=4, max_slots=3,
+                     pages_per_slot=4)
+    pool = PagePool(num_pages=8, page_size=4, max_slots=3,
+                    pages_per_slot=4)
+    # scramble: interleaved grows/shrinks/releases + prefix registration
+    assert pool.grow(1, 13) and pool.grow(0, 9) and pool.grow(2, 4)
+    pool.register_prefix(1, np.arange(12))
+    pool.shrink(0, 2)
+    pool.release(1)                       # registered pages -> cached LRU
+    assert pool.grow(1, 5)
+    pool.release(0), pool.release(2), pool.release(1)
+    assert pool.free != fresh.free        # history really did reorder it
+    pool.reset()
+    assert pool.free == fresh.free
+    assert (pool.table == fresh.table).all()
+    assert (pool.refs == fresh.refs).all() and (pool.owned == 0).all()
+    assert not pool.cached and not pool.page_hash and not pool.prefix_index
+    pool.check()
+
+
+def test_prefix_register_match_share():
+    pool = PagePool(num_pages=8, page_size=4, max_slots=3, pages_per_slot=4)
+    toks = np.arange(10, dtype=np.int64)          # 2 full pages + partial
+    assert pool.grow(0, 10)
+    pool.register_prefix(0, toks)
+    assert len(pool.page_hash) == 2               # partial page not hashed
+    assert len(page_hashes(toks, 4)) == 2
+    m = pool.match_prefix(toks)
+    assert m == [int(pool.table[0, 0]), int(pool.table[0, 1])]
+    # a prompt diverging in page 2 matches only page 1
+    other = toks.copy()
+    other[5] += 1
+    assert pool.match_prefix(other) == m[:1]
+    assert pool.match_prefix(toks[:4]) == m[:1]   # only 1 full page given
+    assert pool.match_prefix(toks[:3]) == []
+    # share into an empty slot: refcounts, not copies
+    pool.share_prefix(1, m)
+    assert int(pool.refs[m[0]]) == 2 and int(pool.owned[1]) == 2
+    pool.check()
+    # registration is idempotent and keeps the index bijective even when
+    # a second slot re-registers the same (shared) content
+    pool.register_prefix(1, toks)
+    assert len(pool.page_hash) == 2
+    pool.check()
+    # releasing both references parks the pages in the cached LRU: still
+    # matchable, still counted as allocatable
+    pool.release(0), pool.release(1)
+    assert (pool.refs == 0).all()
+    assert pool.num_free == 8 and len(pool.cached) == 2
+    assert pool.match_prefix(toks) == m
+    pool.check()
+
+
+def test_cow_semantics():
+    pool = PagePool(num_pages=6, page_size=4, max_slots=2, pages_per_slot=3)
+    toks = np.arange(8, dtype=np.int64)
+    assert pool.grow(0, 8)
+    pool.register_prefix(0, toks)
+    m = pool.match_prefix(toks)
+    pool.share_prefix(1, m)
+    # write to a shared page -> private copy + rewire + (src, dst) pair
+    pair = pool.ensure_writable(1, 0)
+    assert pair is not None and pair[0] == m[0]
+    src, dst = pair
+    assert int(pool.table[1, 0]) == dst != src
+    assert int(pool.refs[src]) == 1 and int(pool.refs[dst]) == 1
+    assert int(pool.table[0, 0]) == src           # slot 0 untouched
+    pool.check()
+    # write to a privately-owned but REGISTERED page -> deregister only
+    pool.release(1)
+    assert pool.ensure_writable(0, 1) is None
+    assert len(pool.page_hash) == 1               # m[1]'s digest dropped
+    pool.check()
+    # already-private unregistered page -> plain no-op
+    assert pool.ensure_writable(0, 1) is None
+    pool.check()
+
+
+def test_cow_pool_exhausted_raises():
+    pool = PagePool(num_pages=2, page_size=4, max_slots=2, pages_per_slot=2)
+    assert pool.grow(0, 8)
+    pool.register_prefix(0, np.arange(8))
+    pool.release(0)
+    pool.share_prefix(0, pool.match_prefix(np.arange(8)))
+    pool.share_prefix(1, pool.match_prefix(np.arange(8)))
+    with pytest.raises(RuntimeError):
+        pool.ensure_writable(1, 0)        # refs == 2, zero spare pages
+    pool.check()
+
+
+def test_prefix_cache_lru_eviction():
+    """Cached (released-but-registered) pages are reclaimed least-
+    recently-released first when the free list runs dry, and eviction
+    deregisters them."""
+    pool = PagePool(num_pages=4, page_size=2, max_slots=2, pages_per_slot=4)
+    a, b = np.asarray([1, 2, 3, 4]), np.asarray([9, 8, 7, 6])
+    assert pool.grow(0, 4) and pool.grow(1, 4)
+    pool.register_prefix(0, a)
+    pool.register_prefix(1, b)
+    pool.release(0)                       # a's pages: oldest cached
+    pool.release(1)
+    assert len(pool.cached) == 4 and not pool.free
+    # two pages re-allocated -> a's pages (LRU) evicted + deregistered
+    assert pool.grow(0, 4)
+    assert pool.match_prefix(a) == []
+    assert len(pool.match_prefix(b)) == 2
+    pool.check()
+
+
+def _run_pool_soak(ints, choose):
+    """One episode of random interleaved grow / shrink / release /
+    register / share / COW: every allocator invariant must hold after
+    every op (check()), no page may leak or be double-owned, and a full
+    release must return every refcount to zero with the whole pool
+    allocatable again.  `ints(lo, hi)` / `choose(options)` supply the
+    randomness (a hypothesis draw or a seeded Generator)."""
+    ps = choose([2, 4])
+    pool = PagePool(num_pages=ints(4, 12), page_size=ps, max_slots=3,
+                    pages_per_slot=ints(2, 6))
+    cap = pool.pages_per_slot * ps
+    seq = {s: [] for s in range(pool.max_slots)}   # committed tokens
+
+    for _ in range(ints(5, 30)):
+        op = choose(["grow", "grow", "shrink", "release", "register",
+                     "share", "cow"])
+        s = ints(0, pool.max_slots - 1)
+        if op == "grow":
+            t = ints(0, cap + ps)
+            before = pool.num_free
+            ok = pool.grow(s, t)
+            if not ok:     # all-or-nothing: feasibility exactly predicted
+                assert pool.pages_for(t) > pool.pages_per_slot \
+                    or pool.pages_for(t) - int(pool.owned[s]) > before
+            elif t > len(seq[s]):
+                seq[s] += [ints(0, 9) for _ in range(t - len(seq[s]))]
+        elif op == "shrink":
+            t = ints(0, cap)
+            pool.shrink(s, t)
+            seq[s] = seq[s][:t]           # rollback commits only t tokens
+        elif op == "release":
+            pool.release(s)
+            seq[s] = []
+        elif op == "register":
+            pool.register_prefix(s, np.asarray(seq[s], np.int64))
+        elif op == "share":
+            if int(pool.owned[s]) == 0:
+                donor = ints(0, pool.max_slots - 1)
+                m = pool.match_prefix(np.asarray(seq[donor], np.int64))
+                m = m[:pool.pages_per_slot]
+                pool.share_prefix(s, m)
+                seq[s] = seq[donor][:len(m) * ps]
+        elif op == "cow":
+            own = int(pool.owned[s])
+            if own:
+                idx = ints(0, own - 1)
+                try:
+                    pool.ensure_writable(s, idx)
+                except RuntimeError:
+                    assert pool.num_free == 0
+                else:
+                    # content of page idx changes: divergent suffix
+                    seq[s] = seq[s][:idx * ps]
+        pool.check()
+        for b in range(pool.max_slots):
+            assert int(pool.owned[b]) <= pool.pages_per_slot
+
+    for s in range(pool.max_slots):
+        pool.release(s)
+    pool.check()
+    assert (pool.refs == 0).all()
+    assert (pool.owned == 0).all() and (pool.table == -1).all()
+    assert pool.num_free == pool.num_pages         # nothing leaked
+    # reset from any end state == a fresh pool (determinism lock)
+    pool.reset()
+    fresh = PagePool(num_pages=pool.num_pages, page_size=ps,
+                     max_slots=3, pages_per_slot=pool.pages_per_slot)
+    assert pool.free == fresh.free and not pool.cached
+
+
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(st.data())
+def test_pool_property_soak(data):
+    _run_pool_soak(
+        lambda lo, hi: data.draw(st.integers(lo, hi)),
+        lambda opts: data.draw(st.sampled_from(opts)))
+
+
+def test_pool_random_ops_seeded():
+    """Deterministic rendition of the property soak, so the allocator
+    invariants are exercised even where hypothesis is absent."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        _run_pool_soak(lambda lo, hi: int(rng.integers(lo, hi + 1)),
+                       lambda opts: opts[int(rng.integers(len(opts)))])
 
 
 # ---------------------------------------------------------------------------
@@ -297,3 +527,63 @@ def test_paged_server_rejects_oversized(served):
     with pytest.raises(ValueError):
         srv.submit(Request(uid=0,
                            prompt=np.zeros(30, np.int32), max_new=8))
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache through the scheduler: warm admission == cold == dense
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_prefix_cache_warm_equals_cold(served):
+    """A second prompt sharing a page-aligned prefix with an earlier one
+    admits through the prefix cache (shared pages + suffix-only prefill)
+    and must produce token streams identical to a cold-cache run and to
+    the dense scheduler."""
+    cfg, split, eng = served
+    cc = CacheConfig(cache_len=64, max_batch=2, page_size=8, num_pages=12)
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab_size, 19).astype(np.int32)
+    pa = shared                                        # 2 full pages + 3
+    pb = np.concatenate(
+        [shared, rng.integers(0, cfg.vocab_size, 4).astype(np.int32)])
+
+    def run_one(srv, uid, p):
+        srv.submit(Request(uid=uid, prompt=p, max_new=5))
+        return srv.run()[uid].out
+
+    # cold reference: a fresh pool per request, nothing resident
+    cold = [run_one(Scheduler(eng, split, cc), 0, p) for p in (pa, pb)]
+    # dense reference
+    dsrv = Scheduler(eng, split, CacheConfig(cache_len=64, max_batch=2))
+    dense = [run_one(dsrv, i, p) for i, p in enumerate((pa, pb))]
+    # warm: one scheduler, sequential — pb's admission must share pa's
+    # two full prompt pages (cached after pa's slot released) and
+    # prefill only the suffix
+    srv = Scheduler(eng, split, cc)
+    assert srv.kv.prefix_cache
+    o1 = run_one(srv, 0, pa)
+    assert srv.kv.prefix_hits == 0
+    o2 = run_one(srv, 1, pb)
+    assert srv.kv.prefix_hits == 1
+    assert srv.kv.prefix_tokens_reused == 16           # 2 pages x 8 tokens
+    assert [o1, o2] == cold == dense
+    srv.pool.check()
+    # and an identical-prompt resubmission hits the same pages again
+    o3 = run_one(srv, 2, pb)
+    assert o3 == o2 and srv.kv.prefix_hits == 2
+    srv.pool.check()
+
+
+def test_prefix_cache_off_by_config(served):
+    """prefix_cache=False forces cold admission for every request."""
+    cfg, split, eng = served
+    srv = Scheduler(eng, split, CacheConfig(
+        cache_len=64, max_batch=2, page_size=8, num_pages=12,
+        prefix_cache=False))
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+    for uid in range(2):
+        srv.submit(Request(uid=uid, prompt=p, max_new=3))
+    done = srv.run()
+    assert done[0].out == done[1].out
+    assert srv.kv.prefix_queries == 0 and srv.kv.prefix_hits == 0
