@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-cov test-soak lint bench-smoke example-smoke spec-smoke \
-	backend-parity paged-parity
+	backend-parity paged-parity cluster-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +41,12 @@ example-smoke:
 # token-equivalence, dense + paged (docs/speculative.md)
 spec-smoke:
 	$(PY) scripts/spec_smoke.py
+
+# cluster-serving smoke: 2 replicas x TP2 on CPU host devices, bursty
+# mini-trace, streams identical to 1 replica, rounds-based scaling
+# efficiency > 1.5x (docs/cluster.md)
+cluster-smoke:
+	$(PY) scripts/cluster_smoke.py
 
 # registry-driven backend parity sweep: every registered parallel
 # backend, TP in {2,4}, dense + paged, token-identical greedy streams

@@ -49,6 +49,10 @@ def emit_json(bench: str, config: dict, metrics, root: str = None) -> str:
     engine = config.get("engine", "sim")
     config.setdefault(
         "backend", resolved_backend_name(engine) if engine else None)
+    # every config block records its replica count: 1 for single-engine
+    # benches, the swept list for the cluster bench — so the perf
+    # trajectory can tell DP-over-TP runs from plain ones at a glance
+    config.setdefault("replicas", 1)
     path = os.path.join(root or REPO_ROOT, f"BENCH_{bench}.json")
     with open(path, "w") as f:
         json.dump({"bench": bench, "config": config, "metrics": metrics,

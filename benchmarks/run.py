@@ -11,6 +11,8 @@ prints ``name,us_per_call,derived`` CSV lines.
   bench_serving      --      dense vs paged-KV serving throughput
   bench_spec         --      self-speculative decoding: acceptance,
                              tokens/step, draft wire savings
+  bench_cluster      --      DP-over-TP cluster serving: tokens/sec
+                             scaling at 1/2/4 replicas, router policies
 
 Every bench_* module also writes a machine-readable ``BENCH_<name>.json``
 at the repo root ({bench, config, metrics, commit} — see
@@ -36,7 +38,7 @@ def main():
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
 
-    from benchmarks import (bench_ablation, bench_accuracy,
+    from benchmarks import (bench_ablation, bench_accuracy, bench_cluster,
                             bench_sensitivity, bench_serving, bench_spec,
                             bench_speedup, bench_transfer, roofline)
     suites = {
@@ -48,6 +50,7 @@ def main():
         "roofline": roofline.run,
         "serving": bench_serving.run,
         "spec": bench_spec.run,
+        "cluster": bench_cluster.run,
     }
     failures = 0
     for name, fn in suites.items():

@@ -1,0 +1,71 @@
+"""Cluster-serving smoke for `make cluster-smoke` / CI: 2 replicas x TP2
+on CPU host devices, a bursty mini-trace through the cluster router —
+every request must be served with greedy streams identical to the
+single-replica run, and the deterministic rounds-based scaling
+efficiency must beat 1.5x (docs/cluster.md#benchmark for why rounds,
+not wall time, is the CI-stable scaling signal)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import numpy as np  # noqa: E402
+
+from repro.api import LLM  # noqa: E402
+from repro.api.scheduler import Request  # noqa: E402
+
+N_REQ = 16
+MAX_NEW = 6
+
+
+def trace(cfg, seed=0):
+    """Bursty mini-trace: 2-page shared prefix on half the requests
+    (exercises per-replica prefix caches), bursts of 6 every 3 ticks."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    out, tick = [], 0
+    while len(out) < N_REQ:
+        for _ in range(min(6 if tick % 3 == 0 else 1, N_REQ - len(out))):
+            tail = rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(3, 8))).astype(np.int32)
+            p = np.concatenate([base, tail]) if rng.random() < 0.5 else tail
+            out.append((tick, p))
+        tick += 1
+    return out
+
+
+def drive(router, cfg):
+    """Feed arrivals by tick (1 router round == 1 tick); return
+    (streams-by-uid, rounds)."""
+    pending = [(t, Request(uid=i, prompt=p, max_new=MAX_NEW))
+               for i, (t, p) in enumerate(trace(cfg))]
+    n = len(pending)
+    while len(router.completed) < n:
+        while pending and pending[0][0] <= router.rounds:
+            router.submit(pending.pop(0)[1])
+        if not router.step() and not pending:
+            raise AssertionError(
+                f"stalled at {len(router.completed)}/{n}")
+    return ({u: list(r.out) for u, r in router.completed.items()},
+            router.rounds)
+
+
+def main():
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="shard",
+                   dtype="float32", cache_len=64, max_batch=2,
+                   page_size=8, num_pages=48, q_chunk=64)
+    ref, rounds1 = drive(llm.make_cluster(1), llm.cfg)
+    assert len(ref) == N_REQ
+    got, rounds2 = drive(llm.make_cluster(2, policy="least-outstanding"),
+                         llm.cfg)
+    assert got == ref, "2-replica streams != single-replica streams"
+    eff = rounds1 / rounds2
+    assert eff > 1.5, f"scaling efficiency {eff:.2f}x <= 1.5x " \
+                      f"({rounds1} -> {rounds2} rounds)"
+    print(f"cluster-smoke ok: {N_REQ} requests on 2xTP2 (shard), "
+          f"streams identical to 1 replica, "
+          f"rounds {rounds1} -> {rounds2} ({eff:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

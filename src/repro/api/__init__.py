@@ -18,11 +18,12 @@ from repro.api.scheduler import (CacheConfig, DenseKVCacheManager,
                                  Request, Scheduler, SchedulerError)
 from repro.api.llm import LLM
 from repro.config.base import CommPolicy, SPDPlanConfig
+from repro.runtime.elastic import ClusterConfigError
 from repro.spec import SpecConfig
 
 __all__ = [
     "LLM", "SamplingParams", "RequestOutput", "StreamEvent",
     "CacheConfig", "Scheduler", "Request", "CommPolicy", "SPDPlanConfig",
     "SpecConfig", "DenseKVCacheManager", "PagedKVCacheManager",
-    "InvalidRequestError", "SchedulerError",
+    "InvalidRequestError", "SchedulerError", "ClusterConfigError",
 ]

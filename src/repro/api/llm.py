@@ -86,7 +86,8 @@ class LLM:
 
     def __init__(self, cfg, plan, engine_kind, engine, params, canonical,
                  cache: CacheConfig, *, mesh=None, tp: int, dp: int,
-                 q_chunk: int):
+                 q_chunk: int, dp_replicas: int = 1,
+                 router: str = "least-outstanding"):
         self.cfg = cfg
         self.plan = plan
         self.engine_kind = engine_kind
@@ -96,6 +97,10 @@ class LLM:
         self.cache = cache
         self.mesh = mesh
         self.tp, self.dp, self.q_chunk = tp, dp, q_chunk
+        # DP-over-TP cluster serving (docs/cluster.md): >1 makes serve()
+        # return a ClusterRouter over dp_replicas weight-shared replicas
+        self.dp_replicas = dp_replicas
+        self.router_policy = router
         # self-speculative decoding (docs/speculative.md): the draft is
         # these same canonical weights placed under a cheaper comm plan
         self.spec = None              # SpecConfig or None
@@ -118,7 +123,9 @@ class LLM:
              prefill_chunk: Optional[int] = None,
              cache_len: int = 128, max_batch: int = 4,
              dtype: Optional[str] = None, seed: int = 0, params=None,
-             q_chunk: int = 64, mesh=None, spec=None) -> "LLM":
+             q_chunk: int = 64, mesh=None, spec=None,
+             dp_replicas: int = 1,
+             router: str = "least-outstanding") -> "LLM":
         """Load `arch` (config name or ModelConfig) onto an engine.
 
         engine     a parallel-backend registry name
@@ -149,6 +156,14 @@ class LLM:
                    stays token-identical; sampling stays distribution-
                    preserving).  The "tiered" preset needs calibration
                    data — use `enable_spec` instead of `load(spec=)`.
+        dp_replicas  data parallelism OVER the TP groups (docs/
+                   cluster.md): `serve()`/`generate()` then run through
+                   a ClusterRouter over this many replicas — each its
+                   own Scheduler (own KV pool / prefix cache / draft
+                   state) sharing the loaded engine and weights.
+        router     cluster routing policy name when dp_replicas > 1
+                   (`repro.cluster.route_policy_names()`): "round-robin"
+                   | "least-outstanding" | "prefix-affinity".
         """
         import jax
         from repro.configs import get_config
@@ -172,13 +187,20 @@ class LLM:
                 _resolve_comm(comm, cfg.n_layers, comm_logits))
         from repro.parallel.backend import resolve_backend
         resolve_backend(engine)       # fail fast on unknown engine names
+        if dp_replicas < 1:
+            from repro.runtime.elastic import ClusterConfigError
+            raise ClusterConfigError(
+                f"dp_replicas must be >= 1, got {dp_replicas}")
+        from repro.cluster.router import make_policy
+        make_policy(router)           # fail fast on unknown policy names
         canonical = (params if params is not None
                      else M.init_model(jax.random.PRNGKey(seed), cfg))
         cache = CacheConfig(cache_len=cache_len, max_batch=max_batch,
                             page_size=page_size, num_pages=num_pages,
                             prefill_chunk=prefill_chunk)
         llm = cls(cfg, plan, engine, None, None, canonical, cache,
-                  mesh=mesh, tp=tp, dp=dp, q_chunk=q_chunk)
+                  mesh=mesh, tp=tp, dp=dp, q_chunk=q_chunk,
+                  dp_replicas=dp_replicas, router=router)
         llm._build_engine()
         if spec is not None:
             llm.enable_spec(spec)
@@ -282,19 +304,65 @@ class LLM:
 
     # ---------------- serving ----------------
 
-    def serve(self, **overrides) -> Scheduler:
-        """A `Scheduler` on this model.  Without overrides, returns the
-        (cached) scheduler `generate` uses; with overrides (any
-        CacheConfig field) builds a fresh one."""
+    def serve(self, **overrides):
+        """A scheduler on this model: a plain `Scheduler`, or — when
+        `dp_replicas > 1` — a `repro.cluster.ClusterRouter` over that
+        many replicas (same surface: submit/step/run/cancel/completed;
+        docs/cluster.md).  Without overrides, returns the (cached)
+        scheduler `generate` uses; with overrides (any CacheConfig
+        field, plus `dp_replicas` / `router`) builds a fresh one."""
         if overrides:
             import dataclasses
+            n = overrides.pop("dp_replicas", self.dp_replicas)
+            policy = overrides.pop("router", self.router_policy)
             cc = dataclasses.replace(self.cache, **overrides)
+            if n > 1:
+                return self.make_cluster(n, policy=policy, cache=cc)
             return Scheduler(self.engine, self.params, cc,
                              spec=self._spec_state(cc))
         if self._sched is None:
-            self._sched = Scheduler(self.engine, self.params, self.cache,
-                                    spec=self._spec_state(self.cache))
+            self._sched = (
+                self.make_cluster() if self.dp_replicas > 1
+                else Scheduler(self.engine, self.params, self.cache,
+                               spec=self._spec_state(self.cache)))
         return self._sched
+
+    # ---------------- cluster serving (docs/cluster.md) ----------------
+
+    def replica_factory(self, cache: Optional[CacheConfig] = None):
+        """`rid -> Replica` over this model's engine + placed params —
+        what `make_cluster` builds from and what the cluster
+        `ElasticScaler` scales up with.  Each replica gets its OWN
+        `Scheduler` (own KV pool, prefix cache, and draft state); the
+        compiled engine steps and the weights are shared, which is the
+        honest single-host simulation of weight-replicated DP (a real
+        fleet would `device_put` the same canonical tree per replica
+        mesh — runtime/elastic.py's re-shard path)."""
+        from repro.cluster import Replica
+
+        cc = cache or self.cache
+
+        def factory(rid: int) -> "Replica":
+            return Replica(
+                rid, Scheduler(self.engine, self.params, cc,
+                               spec=self._spec_state(cc)),
+                comm=getattr(self.plan, "comm", None))
+        return factory
+
+    def make_cluster(self, n: Optional[int] = None, *, policy=None,
+                     cache: Optional[CacheConfig] = None,
+                     warmup: bool = True):
+        """A `ClusterRouter` over `n` replicas of this model (default:
+        the `dp_replicas`/`router` this LLM was loaded with)."""
+        from repro.cluster import ClusterConfigError, ClusterRouter
+
+        n = n if n is not None else self.dp_replicas
+        if n < 1:
+            raise ClusterConfigError(f"need >= 1 replica, got {n}")
+        factory = self.replica_factory(cache)
+        return ClusterRouter([factory(rid) for rid in range(n)],
+                             policy=policy or self.router_policy,
+                             warmup=warmup)
 
     def _submit(self, prompts, sampling) -> List[Request]:
         prompts = _as_prompts(prompts)

@@ -247,6 +247,10 @@ class PagedKVCacheManager:
         self.prefix_queries = 0
         self.prefix_hits = 0
         self.prefix_tokens_reused = 0
+        # per-slot chain digests computed at admission (one pass over the
+        # prompt, runtime/paging.page_hashes) and reused by
+        # register_prefix — each admitted prompt is hashed exactly once
+        self._admit_hashes: Dict[int, list] = {}
 
     def _table(self, rows=None):
         """Device page table, width-bucketed to the next power of two of
@@ -309,12 +313,20 @@ class PagedKVCacheManager:
         position is always prefilled — logits for the first sampled
         token must come from a real forward."""
         matched = []
+        self._admit_hashes.pop(slot, None)   # drop any stale admission
         if self.prefix_cache and len(toks) > 1:
+            from repro.runtime.paging import page_hashes
             ps = self.cc.page_size
             self.prefix_queries += 1
-            cap = ((len(toks) - 1) // ps) * ps
-            if cap > 0:
-                matched = self.pool.match_prefix(np.asarray(toks)[:cap])
+            # hash the whole prompt's full pages in one pass; the chain
+            # property makes the first cap/ps digests exactly the capped
+            # prefix's digests, and register_prefix reuses the rest
+            hashes = page_hashes(np.asarray(toks), ps)
+            self._admit_hashes[slot] = hashes
+            cap_pages = (len(toks) - 1) // ps
+            if cap_pages > 0:
+                matched = self.pool.match_prefix(
+                    None, hashes=hashes[:cap_pages])
         if matched:
             self.pool.share_prefix(slot, matched)
         if not self.pool.grow(slot, total):
@@ -326,9 +338,12 @@ class PagedKVCacheManager:
         return len(matched) * self.cc.page_size
 
     def register_prefix(self, slot: int, toks):
-        """Index the slot's full prompt pages for future sharing."""
+        """Index the slot's full prompt pages for future sharing (digests
+        reused from admission — the prompt was hashed once there)."""
         if self.prefix_cache:
-            self.pool.register_prefix(slot, np.asarray(toks))
+            self.pool.register_prefix(slot, np.asarray(toks),
+                                      hashes=self._admit_hashes.pop(
+                                          slot, None))
 
     def prefill_suffix(self, params, toks, m: int, slot: int):
         """Prefill tokens[m:] into `slot`'s own pages (positions m..s-1)
@@ -819,6 +834,21 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def outstanding_tokens(self) -> int:
+        """Token-work backlog of this scheduler: queued requests count
+        their full prefill (prompt + kept output) plus remaining decode
+        budget, active slots their remaining decode budget.  This is the
+        load signal the cluster router's least-outstanding-tokens policy
+        balances on (docs/cluster.md)."""
+        n = 0
+        for r in self.queue:
+            n += len(r.prompt) + len(r.out) + (self._max_new(r)
+                                               - len(r.out))
+        for b in self._active():
+            r = self.slots[b]
+            n += self._max_new(r) - len(r.out)
+        return n
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
         steps = 0

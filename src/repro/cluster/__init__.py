@@ -1,0 +1,31 @@
+"""`repro.cluster` — multi-replica (DP-over-TP) cluster serving.
+
+N replicas, each one TP group running an SPD-optimized `Scheduler`,
+fronted by a `ClusterRouter` with pluggable load-balancing policies and
+an `ElasticScaler` that grows/shrinks the fleet under traffic.  The
+facade entrypoint is `LLM.load(..., dp_replicas=N, router=...)`; the
+design doc is docs/cluster.md.
+
+    from repro.api import LLM, SamplingParams
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim",
+                   dp_replicas=2, router="prefix-affinity",
+                   page_size=8, num_pages=64, cache_len=64)
+    outs = llm.generate(prompts, SamplingParams(max_new=8))
+"""
+from repro.cluster.elastic import ElasticConfig, ElasticScaler, ScaleEvent
+from repro.cluster.replica import (CREATED, DRAINING, READY, Replica,
+                                   ReplicaStateError, STOPPED, WARMING)
+from repro.cluster.router import (ClusterRouter, LeastOutstandingPolicy,
+                                  PrefixAffinityPolicy, RoundRobinPolicy,
+                                  RoutePolicy, make_policy,
+                                  register_policy, route_policy_names)
+from repro.runtime.elastic import ClusterConfigError, choose_mesh_shape
+
+__all__ = [
+    "Replica", "ReplicaStateError", "ClusterRouter", "RoutePolicy",
+    "RoundRobinPolicy", "LeastOutstandingPolicy", "PrefixAffinityPolicy",
+    "register_policy", "make_policy", "route_policy_names",
+    "ElasticScaler", "ElasticConfig", "ScaleEvent", "ClusterConfigError",
+    "choose_mesh_shape",
+    "CREATED", "WARMING", "READY", "DRAINING", "STOPPED",
+]

@@ -23,6 +23,14 @@ int8 quantized psum; ``--comm quant4`` uses int4; ``--comm-logits``
 sets the final logits all-gather level independently.  Composes with
 ``--spd``: a dropped block's surviving MLP sync is still quantized.
 
+Cluster serving (docs/cluster.md): ``--replicas 2 --router
+prefix-affinity`` fronts N weight-shared replicas (each its own
+scheduler, KV pool, and prefix cache) with the cluster router —
+admission is load-balanced by the chosen policy and the report gains a
+per-replica utilization/routing block.  Greedy outputs are identical to
+``--replicas 1``: routing picks WHERE a request runs, never perturbs
+per-replica numerics.
+
 Self-speculative decoding (docs/speculative.md): ``--spec-k 4
 --spec-draft all-drop`` drafts k tokens per step with the SAME weights
 under an all-dropped comm plan and verifies them with the exact model
@@ -72,6 +80,13 @@ def main():
                     default="all-drop",
                     help="draft comm preset (same weights, cheaper "
                          "syncs; see docs/speculative.md)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="DP-over-TP cluster serving: number of "
+                         "weight-shared replicas behind the cluster "
+                         "router (1 = plain single scheduler)")
+    ap.add_argument("--router", default="least-outstanding",
+                    help="cluster routing policy (round-robin | "
+                         "least-outstanding | prefix-affinity)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0)
@@ -95,6 +110,7 @@ def main():
         page_size=args.page_size if paged else None,
         num_pages=args.num_pages if paged else None,
         prefill_chunk=args.prefill_chunk or None, q_chunk=64,
+        dp_replicas=args.replicas, router=args.router,
         spec=(SpecConfig(k=args.spec_k, draft=args.spec_draft)
               if args.spec_k > 0 else None))
 
@@ -111,18 +127,32 @@ def main():
         "completed": sum(o.finished for o in outs),
         "outputs": {o.index: o.token_ids[:8] for o in outs},
     }
+    # replicas > 1: sched is a repro.cluster.ClusterRouter — per-replica
+    # stats come from its stats() block, aggregates from its replicas
+    cluster = args.replicas > 1
+    scheds = ([rep.sched for rep in sched.replicas.values()]
+              if cluster else [sched])
     if args.comm != "exact" or args.comm_logits != "exact":
         out["comm"] = {"blocks": args.comm, "logits": args.comm_logits}
     if args.spec_k > 0:
+        drafted = sum(s.spec_drafted for s in scheds)
         out["spec"] = {"k": args.spec_k, "draft": args.spec_draft,
-                       "acceptance": round(sched.spec_acceptance, 4),
-                       "tokens_per_step":
-                           round(sched.spec_tokens_per_step, 4)}
+                       "acceptance": round(
+                           sum(s.spec_accepted for s in scheds)
+                           / max(drafted, 1), 4),
+                       "tokens_per_step": round(
+                           sum(s.spec_committed for s in scheds)
+                           / max(sum(s.spec_row_rounds
+                                     for s in scheds), 1), 4)}
     if paged:
         out["paged"] = {"page_size": args.page_size,
                         "num_pages": args.num_pages,
-                        "preemptions": sched.n_preemptions,
-                        "free_pages": sched.pool.num_free}
+                        "preemptions": sum(s.n_preemptions
+                                           for s in scheds),
+                        "free_pages": sum(s.pool.num_free
+                                          for s in scheds)}
+    if cluster:
+        out["cluster"] = sched.stats()
     print(json.dumps(out))
 
 

@@ -19,13 +19,29 @@ from repro.config.base import ModelConfig, SPDPlanConfig
 from repro.parallel import tp as TP
 
 
+class ClusterConfigError(ValueError):
+    """A device/replica topology that can never be built (e.g. fewer
+    live devices than the pinned TP degree).  Typed so cluster-level
+    callers (repro.cluster, the elastic scaler) can catch a topology
+    problem specifically instead of trapping a bare AssertionError."""
+
+
 def snap_pow2(n: int) -> int:
     return 1 << (n.bit_length() - 1) if n > 0 else 0
 
 
 def choose_mesh_shape(n_devices: int, tp: int):
-    """Largest power-of-two dp such that dp*tp <= n_devices."""
-    assert n_devices >= tp, (n_devices, tp)
+    """Largest power-of-two dp such that dp*tp <= n_devices.
+
+    The TP degree is pinned (see module doc), so a fleet smaller than
+    one TP group cannot host the model at all — that is a
+    `ClusterConfigError`, not an assertion."""
+    if tp <= 0:
+        raise ClusterConfigError(f"tp must be positive, got tp={tp}")
+    if n_devices < tp:
+        raise ClusterConfigError(
+            f"{n_devices} device(s) cannot host one pinned TP group of "
+            f"tp={tp}: a replica needs at least tp devices")
     dp = snap_pow2(n_devices // tp)
     return (dp, tp)
 

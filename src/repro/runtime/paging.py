@@ -75,15 +75,24 @@ def page_hashes(tokens, page_size: int) -> List[bytes]:
     Digest j covers the whole prefix tokens[: (j+1)*page_size] (each link
     hashes the previous digest plus the page's token bytes), so equal
     digests imply equal full prefixes — partial trailing pages are never
-    hashed."""
+    hashed.
+
+    The prompt is converted to bytes ONCE and the chain walks a
+    memoryview over it — one pass over the prompt, no per-page ndarray
+    slicing/copying, which is what admission-time hashing of very long
+    prompts spends its time on."""
     toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
     n = toks.shape[0] // page_size
+    if n <= 0:
+        return []
+    stride = page_size * toks.itemsize
+    buf = memoryview(toks.tobytes())
     out: List[bytes] = []
     h = b""
     for j in range(n):
-        h = hashlib.blake2b(
-            h + toks[j * page_size:(j + 1) * page_size].tobytes(),
-            digest_size=16).digest()
+        d = hashlib.blake2b(h, digest_size=16)
+        d.update(buf[j * stride:(j + 1) * stride])
+        h = d.digest()
         out.append(h)
     return out
 
@@ -231,13 +240,19 @@ class PagePool:
 
     # ---------------- prefix cache ----------------
 
-    def match_prefix(self, tokens) -> List[int]:
+    def match_prefix(self, tokens, hashes: Optional[List[bytes]] = None
+                     ) -> List[int]:
         """Longest run of resident physical pages whose chain digests
         match `tokens`' full pages (cap the token count BEFORE calling —
         the scheduler passes at most len(prompt)-1 tokens so at least one
-        position is left to prefill for logits)."""
+        position is left to prefill for logits).  `hashes` short-circuits
+        the digest computation with a precomputed `page_hashes` result
+        (admission computes the prompt's digests once and reuses them
+        here and in `register_prefix`)."""
+        if hashes is None:
+            hashes = page_hashes(tokens, self.page_size)
         out: List[int] = []
-        for h in page_hashes(tokens, self.page_size):
+        for h in hashes:
             p = self.prefix_index.get(h)
             if p is None:
                 break
@@ -256,12 +271,16 @@ class PagePool:
             self.refs[p] += 1
         self.owned[slot] = len(pages)
 
-    def register_prefix(self, slot: int, tokens):
+    def register_prefix(self, slot: int, tokens,
+                        hashes: Optional[List[bytes]] = None):
         """Register `slot`'s full pages (content = `tokens`) in the
         prefix index so later prompts can share them.  Pages whose digest
         is already indexed (including this slot's own shared pages) are
-        skipped, keeping page_hash/prefix_index bijective."""
-        hashes = page_hashes(tokens, self.page_size)
+        skipped, keeping page_hash/prefix_index bijective.  `hashes`
+        takes a precomputed `page_hashes(tokens)` (the scheduler hashes
+        each admitted prompt exactly once)."""
+        if hashes is None:
+            hashes = page_hashes(tokens, self.page_size)
         n = min(len(hashes), int(self.owned[slot]))
         for j in range(n):
             p = int(self.table[slot, j])

@@ -1,0 +1,274 @@
+"""Unit tests for `repro.cluster`: replica lifecycle, routing policies,
+the policy registry, elastic scaling, and the router's
+Scheduler-compatible surface — all on the deterministic FakeEngine from
+test_scheduler_soak, so every greedy stream is checkable in closed form
+(reference_stream) no matter which replica served it."""
+import numpy as np
+import pytest
+
+from test_scheduler_soak import FakeEngine, V, reference_stream
+
+from repro.api.scheduler import (CacheConfig, InvalidRequestError, Request,
+                                 Scheduler)
+from repro.cluster import (CREATED, ClusterConfigError, ClusterRouter,
+                           DRAINING, ElasticConfig, ElasticScaler,
+                           LeastOutstandingPolicy, READY, Replica,
+                           ReplicaStateError, RoutePolicy, STOPPED,
+                           make_policy, register_policy,
+                           route_policy_names)
+from repro.cluster.router import ROUTE_POLICIES
+
+
+def mk_replica(rid, **cc_kw):
+    kw = dict(cache_len=32, max_batch=3, page_size=4, num_pages=12)
+    kw.update(cc_kw)
+    return Replica(rid, Scheduler(FakeEngine(), None, CacheConfig(**kw)))
+
+
+def mk_requests(n, seed=0, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, V, int(rng.integers(2, 10))
+                                        ).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Replica lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_replica_state_machine():
+    rep = mk_replica(0)
+    assert rep.state == CREATED and not rep.routable
+    with pytest.raises(ReplicaStateError):
+        rep.enqueue(mk_requests(1)[0])     # not routable before start
+    with pytest.raises(ReplicaStateError):
+        rep.drain()                        # can't drain an unstarted replica
+    rep.start(warmup=False)
+    assert rep.state == READY and rep.routable
+    with pytest.raises(ReplicaStateError):
+        rep.start()                        # double start
+    req = mk_requests(1)[0]
+    rep.enqueue(req)
+    assert rep.drain() == [req]            # unadmitted queue handed back
+    assert rep.state == STOPPED            # nothing in flight -> stopped
+
+
+def test_replica_drain_hands_back_queue_and_finishes_inflight():
+    rep = mk_replica(0)
+    rep.start(warmup=False)
+    reqs = mk_requests(5, seed=1)
+    for r in reqs:
+        rep.enqueue(r)
+    rep.step()                             # admits up to max_batch
+    inflight = {r.uid for r in rep.sched.slots if r is not None}
+    assert inflight
+    handed_back = rep.drain()
+    assert {r.uid for r in handed_back} == \
+        {r.uid for r in reqs} - inflight - set(rep.sched.completed)
+    assert rep.state == DRAINING and not rep.routable
+    with pytest.raises(ReplicaStateError):
+        rep.enqueue(mk_requests(1)[0])
+    while rep.state != STOPPED:
+        assert rep.step() or rep.sched.has_work() is False
+    assert set(rep.sched.completed) == inflight
+    for uid in inflight:
+        r = rep.sched.completed[uid]
+        assert r.out == reference_stream(r.prompt, r.max_new)
+    assert rep.drain() == []               # idempotent once stopped
+
+
+def test_replica_warmup_is_invisible():
+    """A warmed replica's scheduler is bit-identical to a cold one:
+    counters zeroed, pool free-list canonical, no residue anywhere."""
+    warm, cold = mk_replica(0), mk_replica(1)
+    warm.start(warmup=True)
+    cold.start(warmup=False)
+    sw, sc = warm.sched, cold.sched
+    assert not sw.completed and not sw.queue
+    assert sw._seq == sc._seq == 0
+    assert (sw.pos == sc.pos).all() and (sw.cur == sc.cur).all()
+    assert sw.pool.free == sc.pool.free    # exact free-list order
+    assert not sw.pool.page_hash and not sw.pool.prefix_index
+    assert sw.kv.prefix_queries == 0 and sw.kv.prefix_hits == 0
+    # and they serve identical streams
+    for rep in (warm, cold):
+        for r in mk_requests(4, seed=2):
+            rep.enqueue(r)
+    a = {u: r.out for u, r in warm.sched.run().items()}
+    b = {u: r.out for u, r in cold.sched.run().items()}
+    assert a == b
+
+
+def test_replica_unhealthy_not_routable():
+    rep = mk_replica(0).start(warmup=False)
+    rep.mark_unhealthy("probe timeout")
+    assert rep.state == READY and not rep.routable
+    router = ClusterRouter([rep, mk_replica(1)], warmup=False)
+    for r in mk_requests(4, seed=3):
+        router.submit(r)
+    done = router.run()
+    assert len(done) == 4
+    assert rep.n_routed == 0               # router skipped the sick one
+    assert router.replicas[1].n_routed == 4
+
+
+# ---------------------------------------------------------------------------
+# Policy registry + routing policies
+# ---------------------------------------------------------------------------
+
+
+def test_policy_registry():
+    assert {"round-robin", "least-outstanding",
+            "prefix-affinity"} <= set(route_policy_names())
+    with pytest.raises(ClusterConfigError):
+        make_policy("no-such-policy")
+    with pytest.raises(TypeError):
+        make_policy(42)
+    inst = LeastOutstandingPolicy()
+    assert make_policy(inst) is inst       # instances pass through
+
+
+def test_custom_policy_registration():
+    @register_policy("always-zero")
+    class AlwaysZero(RoutePolicy):
+        def choose(self, replicas, req):
+            return min(replicas, key=lambda r: r.rid)
+
+    try:
+        router = ClusterRouter([mk_replica(0), mk_replica(1)],
+                               policy="always-zero", warmup=False)
+        for r in mk_requests(4, seed=4):
+            router.submit(r)
+        router.run()
+        assert router.replicas[0].n_routed == 4
+        assert router.replicas[1].n_routed == 0
+    finally:
+        del ROUTE_POLICIES["always-zero"]
+
+
+def test_round_robin_cycles():
+    router = ClusterRouter([mk_replica(r) for r in range(3)],
+                           policy="round-robin", warmup=False)
+    reqs = mk_requests(6, seed=5, max_new=2)
+    for r in reqs:
+        router.submit(r)
+    router.route_pending()
+    assert [rep.n_routed for rep in router.replicas.values()] == [2, 2, 2]
+
+
+def test_least_outstanding_balances_tokens():
+    a, b = mk_replica(0), mk_replica(1)
+    router = ClusterRouter([a, b], policy="least-outstanding",
+                           warmup=False)
+    heavy = Request(uid=50, prompt=np.arange(8, dtype=np.int32) % V,
+                    max_new=8)
+    a.enqueue(heavy)                       # preload replica 0
+    router.submit(Request(uid=51, prompt=np.arange(4, dtype=np.int32) % V,
+                          max_new=2))
+    router.route_pending()
+    assert b.n_routed == 1                 # lighter replica won
+    done = router.run()
+    for r in done.values():
+        assert r.out == reference_stream(r.prompt, r.max_new)
+
+
+# ---------------------------------------------------------------------------
+# Router surface
+# ---------------------------------------------------------------------------
+
+
+def test_router_validate_and_cancel():
+    router = ClusterRouter([mk_replica(0), mk_replica(1)], warmup=False)
+    with pytest.raises(InvalidRequestError):
+        router.submit(Request(uid=0,
+                              prompt=np.zeros(60, np.int32), max_new=40))
+    reqs = mk_requests(6, seed=6)
+    for r in reqs:
+        router.submit(r)
+    router.step()
+    router.cancel(reqs[:3])
+    done = router.run()
+    assert set(done) == {r.uid for r in reqs[3:]}
+    for r in reqs[3:]:
+        assert r.out == reference_stream(r.prompt, r.max_new)
+
+
+def test_router_duplicate_rid_rejected():
+    router = ClusterRouter([mk_replica(0)], warmup=False)
+    with pytest.raises(ClusterConfigError):
+        router.add_replica(mk_replica(0))
+    router.drain_replica(0)                # idle -> retires immediately
+    assert 0 in router.retired
+    with pytest.raises(ClusterConfigError):
+        router.add_replica(mk_replica(0))  # retired rids stay reserved
+
+
+def test_router_streams_match_reference_across_policies():
+    for policy in route_policy_names():
+        router = ClusterRouter([mk_replica(r) for r in range(2)],
+                               policy=policy, warmup=False)
+        reqs = mk_requests(10, seed=8)
+        for r in reqs:
+            router.submit(r)
+        done = router.run()
+        assert len(done) == 10, policy
+        for r in reqs:
+            assert r.out == reference_stream(r.prompt, r.max_new), \
+                (policy, r.uid)
+
+
+# ---------------------------------------------------------------------------
+# Elastic scaling
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_config_validation():
+    with pytest.raises(ClusterConfigError):
+        ElasticConfig(min_replicas=0)
+    with pytest.raises(ClusterConfigError):
+        ElasticConfig(min_replicas=3, max_replicas=2)
+
+
+def test_elastic_scale_up_and_down():
+    router = ClusterRouter([mk_replica(0)], warmup=False)
+    sc = ElasticScaler(router, mk_replica,
+                       ElasticConfig(max_replicas=3, scale_up_backlog=20,
+                                     scale_down_idle=3, cooldown=1),
+                       warmup=False)
+    for r in mk_requests(20, seed=9, max_new=6):
+        router.submit(r)
+    while router.has_work():
+        router.step()
+        sc.observe()
+    ups = [e for e in sc.events if e.action == "up"]
+    assert ups and router.n_replicas > 1   # backlog grew the fleet
+    for _ in range(12):                    # idle rounds shrink it back
+        router.step()
+        sc.observe()
+    assert router.n_replicas == 1
+    downs = [e for e in sc.events if e.action == "down"]
+    # newest-first: drained rids descend
+    assert [e.rid for e in downs] == sorted(
+        (e.rid for e in downs), reverse=True)
+    assert len(router.completed) == 20
+
+
+def test_elastic_device_budget_caps_replicas():
+    router = ClusterRouter([mk_replica(0)], warmup=False)
+    sc = ElasticScaler(router, mk_replica,
+                       ElasticConfig(max_replicas=8, scale_up_backlog=1,
+                                     cooldown=0),
+                       n_devices=4, tp=2, warmup=False)
+    assert sc.cfg.max_replicas == 2        # choose_mesh_shape(4, 2) -> dp 2
+    for r in mk_requests(30, seed=10, max_new=8):
+        router.submit(r)
+    while router.has_work():
+        router.step()
+        sc.observe()
+    assert router.n_replicas <= 2
+    with pytest.raises(ClusterConfigError):
+        ElasticScaler(router, mk_replica,
+                      ElasticConfig(min_replicas=4), n_devices=4, tp=2)

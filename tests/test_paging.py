@@ -166,6 +166,58 @@ def test_prefix_register_match_share():
     pool.check()
 
 
+def test_page_hashes_one_pass_chain():
+    """The one-pass hasher (single tobytes + memoryview walk) must equal
+    the definitional chain digest, its prefix property must hold (the
+    capped admission match reuses a slice of the full-prompt digests),
+    and the precomputed-hashes fast paths of match/register must be
+    indistinguishable from hashing in place."""
+    import hashlib
+    toks = np.arange(23, dtype=np.int64)
+    got = page_hashes(toks, 4)
+    assert len(got) == 5                          # 23 // 4 full pages
+    h = b""
+    for j in range(5):
+        h = hashlib.blake2b(
+            h + toks[4 * j:4 * (j + 1)].tobytes(), digest_size=16).digest()
+        assert got[j] == h
+    # chain-prefix property: digests of a capped prompt are a prefix of
+    # the full prompt's digests (hash once per admission relies on this)
+    assert page_hashes(toks[:12], 4) == got[:3]
+    assert page_hashes(toks[:3], 4) == []
+
+    pool = PagePool(num_pages=8, page_size=4, max_slots=2, pages_per_slot=4)
+    assert pool.grow(0, 16)
+    pool.register_prefix(0, toks[:16], hashes=page_hashes(toks[:16], 4))
+    m = pool.match_prefix(toks)                   # hashed in place
+    assert m == pool.match_prefix(None, hashes=got)   # precomputed
+    assert len(m) == 4
+    pool.check()
+
+
+def test_admission_hashes_prompt_once():
+    """PagedKVCacheManager computes a prompt's chain digests once per
+    admission (match + register reuse them) and never leaves stale
+    digests behind for the slot."""
+    from test_scheduler_soak import FakeEngine
+    from repro.api.scheduler import CacheConfig, Request, Scheduler
+
+    sched = Scheduler(FakeEngine(), None,
+                      CacheConfig(cache_len=32, max_batch=2, page_size=4,
+                                  num_pages=12, prefix_cache=True))
+    p = np.arange(10, dtype=np.int32)
+    sched.submit(Request(uid=0, prompt=p, max_new=2))
+    sched.run()
+    assert sched.kv._admit_hashes == {}           # consumed, not leaked
+    # registered digests equal the batch hasher's output
+    assert set(page_hashes(p, 4)) == set(sched.pool.prefix_index)
+    # a second identical prompt admits through the prefix cache
+    sched.submit(Request(uid=1, prompt=p.copy(), max_new=2))
+    sched.run()
+    assert sched.kv.prefix_hits == 1
+    assert sched.kv._admit_hashes == {}
+
+
 def test_cow_semantics():
     pool = PagePool(num_pages=6, page_size=4, max_slots=2, pages_per_slot=3)
     toks = np.arange(8, dtype=np.int64)

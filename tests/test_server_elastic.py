@@ -103,6 +103,148 @@ def test_elastic_shrink_remesh(tmp_path):
     assert state["step"] >= 8
 
 
+def test_choose_mesh_shape_errors():
+    from repro.runtime.elastic import ClusterConfigError, choose_mesh_shape
+    # impossible topologies raise the typed error (not a bare assert)
+    with pytest.raises(ClusterConfigError):
+        choose_mesh_shape(1, 2)            # fewer devices than one TP group
+    with pytest.raises(ClusterConfigError):
+        choose_mesh_shape(0, 2)            # no devices at all
+    with pytest.raises(ClusterConfigError):
+        choose_mesh_shape(8, 0)            # degenerate TP degree
+    with pytest.raises(ClusterConfigError):
+        choose_mesh_shape(8, -2)
+    # ClusterConfigError is a ValueError so legacy callers still catch it
+    assert issubclass(ClusterConfigError, ValueError)
+    # non-pow2 fleets still snap the data axis down
+    assert choose_mesh_shape(7, 2) == (2, 2)
+    assert choose_mesh_shape(5, 4) == (1, 4)
+    assert choose_mesh_shape(2, 2) == (1, 2)
+
+
+def _cluster_trace(cfg, n=6, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(4, 11))).astype(np.int32)
+            for _ in range(n)]
+
+
+def test_cluster_outputs_match_single_replica(served):
+    """Routing must not perturb numerics: a 2-replica round-robin
+    cluster (warm-up on, so the canonical post-warmup restore is
+    exercised) produces bit-identical greedy streams to one scheduler."""
+    from repro.cluster import ClusterRouter, Replica
+
+    cfg, plan, tp, split, eng = served
+    cc = CacheConfig(cache_len=64, max_batch=2, page_size=8, num_pages=24)
+    prompts = _cluster_trace(cfg)
+
+    solo = Scheduler(eng, split, cc)
+    for uid, p in enumerate(prompts):
+        solo.submit(Request(uid=uid, prompt=p, max_new=5))
+    ref = {uid: r.out for uid, r in solo.run().items()}
+    assert len(ref) == len(prompts)
+
+    router = ClusterRouter(
+        [Replica(rid, Scheduler(eng, split, cc)) for rid in range(2)],
+        policy="round-robin", warmup=True)
+    for uid, p in enumerate(prompts):
+        router.submit(Request(uid=uid, prompt=p, max_new=5))
+    done = router.run()
+    assert {uid: r.out for uid, r in done.items()} == ref
+    # both replicas actually served traffic
+    assert all(rep.n_routed > 0 for rep in router.replicas.values())
+
+
+def test_prefix_affinity_routes_warm(served):
+    """>= 90% of shared-prefix requests land on the replica whose page
+    pool holds the cached prefix (here: all of them, via the sticky
+    digest map + the prefix-index ground truth)."""
+    from repro.cluster import ClusterRouter, PrefixAffinityPolicy, Replica
+
+    cfg, plan, tp, split, eng = served
+    cc = CacheConfig(cache_len=64, max_batch=2, page_size=8, num_pages=32)
+    router = ClusterRouter(
+        [Replica(rid, Scheduler(eng, split, cc)) for rid in range(2)],
+        policy="prefix-affinity")
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)  # 2 pages
+    shared = []
+    for uid in range(10):
+        tail = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+        shared.append(Request(uid=uid,
+                              prompt=np.concatenate([base, tail]),
+                              max_new=3))
+    # a decoy stream of unshared prompts keeps the fallback busy
+    decoys = [Request(uid=100 + i,
+                      prompt=rng.integers(0, cfg.vocab_size,
+                                          12).astype(np.int32), max_new=3)
+              for i in range(4)]
+    for r in shared[:3] + decoys[:2]:
+        router.submit(r)
+    router.run()
+    for r in shared[3:] + decoys[2:]:
+        router.submit(r)
+    done = router.run()
+    assert len(done) == len(shared) + len(decoys)
+
+    # every shared-prefix request was served by ONE replica
+    by_rep = {rid: set(rep.sched.completed)
+              for rid, rep in router.replicas.items()}
+    homes = [rid for r in shared for rid, uids in by_rep.items()
+             if r.uid in uids]
+    warm = max(set(homes), key=homes.count)
+    frac = homes.count(warm) / len(shared)
+    assert frac >= 0.9, (frac, homes)
+    pol = router.policy
+    assert isinstance(pol, PrefixAffinityPolicy)
+    # every shared request after the first resolved warm/sticky; only
+    # first touches of a digest (1 shared + each decoy) may miss
+    assert pol.hits >= len(shared) - 1, (pol.hits, pol.queries)
+    # and the warm replica's pool really holds the prefix page
+    assert router.replicas[warm].holds_prefix(
+        list(pol.affinity)[0])
+
+
+def test_drain_completes_inflight(served):
+    """drain_replica finishes the drained replica's in-flight requests
+    in place (never drops or re-runs them), re-routes its unadmitted
+    queue, and retires the replica once empty."""
+    from repro.cluster import ClusterRouter, Replica, STOPPED
+
+    cfg, plan, tp, split, eng = served
+    cc = CacheConfig(cache_len=64, max_batch=2, page_size=8, num_pages=24)
+    prompts = _cluster_trace(cfg, n=8, seed=11)
+
+    solo = Scheduler(eng, split, cc)
+    for uid, p in enumerate(prompts):
+        solo.submit(Request(uid=uid, prompt=p, max_new=6))
+    ref = {uid: r.out for uid, r in solo.run().items()}
+
+    router = ClusterRouter(
+        [Replica(rid, Scheduler(eng, split, cc)) for rid in range(2)],
+        policy="round-robin")
+    for uid, p in enumerate(prompts):
+        router.submit(Request(uid=uid, prompt=p, max_new=6))
+    router.step()                      # admit the first wave
+    victim = router.replicas[1]
+    inflight = {r.uid for r in victim.sched.slots if r is not None}
+    assert inflight                    # the scenario is non-trivial
+    router.drain_replica(1)
+    assert not victim.routable
+    done = router.run()
+    # drained replica finished exactly its in-flight work, then stopped
+    assert victim.state == STOPPED
+    assert 1 in router.retired and 1 not in router.replicas
+    assert set(victim.sched.completed) == inflight
+    for uid in inflight:
+        assert victim.sched.completed[uid].n_preempted == 0
+    # nothing lost, streams exact, remainder served by the survivor
+    assert {uid: r.out for uid, r in done.items()} == ref
+    assert set(router.replicas[0].sched.completed) == \
+        set(ref) - inflight
+
+
 def test_pipeline_matches_sequential():
     from repro.parallel.pipeline import last_stage_value, pipeline_forward
     n_stages, n_micro, mb, d = 4, 8, 2, 16
