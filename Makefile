@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-cov test-soak lint bench-smoke example-smoke spec-smoke \
-	backend-parity paged-parity cluster-smoke
+	backend-parity paged-parity cluster-smoke overlap-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -59,3 +59,9 @@ backend-parity:
 # token-identical streams, warm pass must hit (docs/serving.md)
 paged-parity:
 	$(PY) scripts/paged_parity.py
+
+# overlap-backend smoke: overlap == shard greedy tokens at TP{2,4},
+# pipelined decode == serial, and the modeled overlap schedule hides
+# >= 50% of kept-sync time (docs/comm.md#overlap)
+overlap-smoke:
+	$(PY) scripts/overlap_smoke.py

@@ -81,27 +81,21 @@ def collective_wire_bytes(op: str, payload_bytes: float, n: int) -> float:
     """Bytes a single device puts on the wire for one logical collective,
     under the ring algorithms, given the LEDGER's payload convention
     (parallel/collectives.py): all-reduce and reduce-scatter log the full
-    per-device operand; all-gather logs the per-device SLICE input."""
-    if n <= 1:
-        return 0.0
-    if op == "all-reduce":
-        return 2.0 * (n - 1) / n * payload_bytes
-    if op == "reduce-scatter":
-        return (n - 1) / n * payload_bytes
-    if op == "all-gather":
-        return (n - 1) * payload_bytes
-    if op == "collective-permute":
-        return payload_bytes
-    raise ValueError(f"unknown collective op {op!r}")
+    per-device operand; all-gather logs the per-device SLICE input.
+    Thin alias of `collectives.ring_wire_bytes` — the ledger's own
+    latency model and the benches price bytes identically."""
+    from repro.parallel.collectives import ring_wire_bytes
+    return ring_wire_bytes(op, payload_bytes, n)
 
 
 def ledger_wire_bytes(ledger, n: int) -> float:
     """Total per-device ring-wire bytes for a trace-time ledger capture —
     THE analytic transfer quantity (reads every op the ledger recorded,
-    so quantized syncs, which log as reduce-scatter + all-gather pairs,
+    so quantized syncs, which log as reduce-scatter + all-gather pairs —
+    or chunked collective-permute ring steps under the overlap backend —
     are accounted at their true low-bit payloads instead of being
     re-derived from activation shapes)."""
-    return sum(collective_wire_bytes(op, b, n) for op, _, b in ledger)
+    return sum(collective_wire_bytes(e.op, e.nbytes, n) for e in ledger)
 
 
 def ledger_time(ledger, n: int, bw: float) -> float:

@@ -14,7 +14,12 @@ Claims under test:
   * quant8 cuts kept-sync wire bytes >=3.5x vs exact at every TP degree
     (Flash Communication analog; int8 codes + bf16 scales vs fp32 ring
     all-reduce gives ~3.9x);
-  * drop and quant COMPOSE: SPD50+quant8 beats either alone.
+  * drop and quant COMPOSE: SPD50+quant8 beats either alone;
+  * the OVERLAP backend's schedule hides >= 50% of modeled kept-sync
+    time at every TP degree, for the headline quant8 policy and in
+    aggregate across policies, under the default LatencyModel (per-cell
+    hidden/exposed split reported for every policy — launch-bound cells
+    like quant4's 4 kB/layer hops at tp=2 honestly hide less).
 """
 import jax.numpy as jnp
 import numpy as np
@@ -24,22 +29,30 @@ from benchmarks._common import (HW, Timer, emit_json, ledger_time,
 from repro.config.base import CommPolicy, SPDPlanConfig, replace
 from repro.configs import get_config
 from repro.core import model as M, simtp
-from repro.parallel.collectives import collective_ledger
+from repro.parallel.collectives import (LatencyModel, collective_ledger,
+                                        overlap_region)
 
 TPS = (2, 4, 8)
 
 
-def transfer_ledger(cfg, plan, tp, b=1, s=128):
+def transfer_ledger(cfg, plan, tp, b=1, s=128, latency=None, overlap=False):
     """Ledger capture for one batch-1 seq-128 forward (paper Fig 2
-    input).  Returns the raw [(op, axis, payload_bytes)] list; callers
-    price it with the _common ring models."""
+    input).  Returns the raw CommEntry list; callers price it with the
+    _common ring models or `latency.summarize`.  `latency=` annotates
+    every entry with its modeled est_us; `overlap=True` traces inside an
+    `overlap_region` — the overlap backend's ledger seam — so kept
+    quantized syncs decompose into chunked ring steps."""
     import jax
+    from contextlib import nullcontext
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     split = simtp.prepare_params(params, cfg, plan, tp)
     toks = jnp.zeros((b, s), jnp.int32)
-    with collective_ledger() as led:
-        fn = simtp.make_logits_fn(cfg, plan, tp, q_chunk=128)
-        fn(split, toks, None)
+    region = (overlap_region((latency or LatencyModel()).ring_chunks)
+              if overlap else nullcontext())
+    with collective_ledger(latency=latency, tp=tp) as led:
+        with region:
+            fn = simtp.make_logits_fn(cfg, plan, tp, q_chunk=128)
+            fn(split, toks, None)
     return led
 
 
@@ -105,7 +118,7 @@ def run(csv):
             wire = ledger_wire_bytes(led, tp)
             wires[pol] = wire
             ar_wire[pol] = ledger_wire_bytes(
-                [e for e in led if e[0] == "all-reduce"], tp)
+                [e for e in led if e.op == "all-reduce"], tp)
             t_hbw = ledger_time(led, tp, HW["hbw_eff"]) * 1e6
             t_lbw = ledger_time(led, tp, HW["lbw_eff"]) * 1e6
             speedup = wires["exact"] / max(wire, 1.0)
@@ -131,6 +144,56 @@ def run(csv):
         # drop and quant compose: SPD50+quant8 beats either alone
         assert wires["drop50+quant8"] < min(wires["quant8"], wires["drop"]), \
             (tp, wires)
+
+    # ---- modeled hidden vs exposed comm time (the overlap backend) ----
+    # Every entry is priced by the default LatencyModel; the serial
+    # reading (shard backend) exposes everything, the overlap reading
+    # (overlap backend's chunked-ring trace) hides the double-buffered
+    # fraction.  Gates: quant8 (headline) and the per-TP aggregate hide
+    # >= 50% of kept-sync time; per-cell fractions are reported for all.
+    lat = LatencyModel()
+    for tp in TPS:
+        agg_hidden = agg_kept = 0.0
+        for pol in POLICIES:
+            plan = _policy_plan(cfg, pol)
+            t = Timer()
+            led_s = transfer_ledger(cfg, plan, tp, latency=lat)
+            serial = lat.summarize(led_s, overlap=False)
+            led_o = transfer_ledger(cfg, plan, tp, latency=lat,
+                                    overlap=True)
+            ov = lat.summarize(led_o, overlap=True)
+            us = t.us()
+            frac = (ov["hidden_us"] / ov["kept_sync_us"]
+                    if ov["kept_sync_us"] else 0.0)
+            agg_hidden += ov["hidden_us"]
+            agg_kept += ov["kept_sync_us"]
+            csv(f"transfer/tp{tp}/{pol}/latency", us,
+                f"serial_us={serial['total_us']:.2f} "
+                f"hidden_us={ov['hidden_us']:.2f} "
+                f"exposed_us={ov['exposed_us']:.2f} "
+                f"hidden_frac_of_kept={frac:.2f}")
+            rows.append({"kind": "latency", "policy": pol, "tp": tp,
+                         "serial_us": serial["total_us"],
+                         "total_us": ov["total_us"],
+                         "hidden_us": ov["hidden_us"],
+                         "exposed_us": ov["exposed_us"],
+                         "kept_sync_us": ov["kept_sync_us"],
+                         "hidden_frac_of_kept": frac})
+            # hidden + exposed account for every modeled microsecond
+            assert abs(ov["hidden_us"] + ov["exposed_us"]
+                       - ov["total_us"]) < 1e-6, (tp, pol, ov)
+            if pol == "quant8":
+                assert frac >= 0.5, (tp, pol, ov)
+        agg = agg_hidden / max(agg_kept, 1e-9)
+        csv(f"transfer/tp{tp}/overlap_aggregate", 0.0,
+            f"hidden_frac_of_kept={agg:.2f}")
+        rows.append({"kind": "latency_aggregate", "tp": tp,
+                     "hidden_frac_of_kept": agg})
+        assert agg >= 0.5, (tp, agg_hidden, agg_kept)
     emit_json("transfer", {"arch": cfg.name, "tps": list(TPS),
-                           "policies": list(POLICIES)}, rows)
+                           "policies": list(POLICIES),
+                           "latency": {"link_bytes_per_s": lat.link_bytes_per_s,
+                                       "launch_us": lat.launch_us,
+                                       "ring_chunks": lat.ring_chunks}},
+              rows)
     return rows

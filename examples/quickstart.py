@@ -29,8 +29,8 @@ def main():
         # all-reduce payload of one serving step-set per device
         with collective_ledger() as led:
             outs = llm.generate(prompts, SamplingParams(max_new=max_new))
-        sync_bytes = sum(n for op, ax, n in led if op == "all-reduce")
-        n_syncs = sum(1 for op, ax, n in led if op == "all-reduce")
+        sync_bytes = sum(e.nbytes for e in led if e.op == "all-reduce")
+        n_syncs = sum(1 for e in led if e.op == "all-reduce")
         results[name] = (outs, sync_bytes, n_syncs)
         print(f"{name:8s}: logical all-reduce payload/device = "
               f"{sync_bytes/1e6:.2f} MB  (call sites x trips = {n_syncs})")

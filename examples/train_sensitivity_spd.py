@@ -114,8 +114,8 @@ def main():
         lgf0(split0, toks, None)
     with collective_ledger() as led_spd:
         lgf(dep, toks, None)
-    b_tp = sum(n for op, _, n in led_tp if op == "all-reduce")
-    b_spd = sum(n for op, _, n in led_spd if op == "all-reduce")
+    b_tp = sum(e.nbytes for e in led_tp if e.op == "all-reduce")
+    b_spd = sum(e.nbytes for e in led_spd if e.op == "all-reduce")
 
     print(f"\n{'':16s}{'ppl':>8s}{'cloze':>8s}")
     print(f"{'TP':16s}{ppl_tp:8.3f}{acc_tp:8.2%}")

@@ -56,6 +56,11 @@ def _dequant_kernel(q_ref, s_ref, y_ref):
     y_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
 
 
+def _dequant_accum_kernel(q_ref, s_ref, a_ref, y_ref):
+    y_ref[...] = a_ref[...] \
+        + q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+
+
 def _grid(rows, block_rows):
     br = min(block_rows, rows)
     while rows % br:
@@ -124,4 +129,33 @@ def dequantize_absmax(q, scales, *, n: int, chunk: int = 128,
         interpret=interpret,
         name="dequantize_absmax",
     )(rows2d.astype(jnp.float32), scales)
+    return y.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_rows",
+                                             "interpret"))
+def dequant_accum_absmax(q, scales, acc, *, chunk: int = 128,
+                         block_rows: int = 256, interpret: bool = False):
+    """acc (N,) fp32 + dequant(q, scales) fused in one VMEM pass — the
+    receive-side step of the quantized ring reduce-scatter
+    (compression.ring_quantized_psum): each arriving chunk of int codes
+    is widened, rescaled, and folded into the local partial without a
+    separate dequantized intermediate hitting HBM."""
+    flat = acc.astype(jnp.float32).reshape(-1)
+    n = flat.size
+    rows2d, _ = _pad_rows(q.astype(jnp.float32).reshape(-1), chunk)
+    acc2d, _ = _pad_rows(flat, chunk)
+    rows = rows2d.shape[0]
+    g, br = _grid(rows, block_rows)
+    y = pl.pallas_call(
+        _dequant_accum_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+                  pl.BlockSpec((br,), lambda i: (i,)),
+                  pl.BlockSpec((br, chunk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, chunk), jnp.float32),
+        interpret=interpret,
+        name="dequant_accum_absmax",
+    )(rows2d, scales, acc2d)
     return y.reshape(-1)[:n]

@@ -95,6 +95,19 @@ def qdq_absmax_ref(x, *, chunk: int = 128, levels: int = 127):
     return (q * s).reshape(-1)[:n]
 
 
+def dequant_accum_ref(q, scales, acc, *, chunk: int = 128):
+    """acc (N,) + dequantize(q, scales) — the fused receive-side step of
+    the quantized ring reduce-scatter (compression.ring_quantized_psum);
+    matches kernels/quant_collectives.dequant_accum_absmax to 1 ulp (the
+    jitted kernel contracts the multiply-add into an FMA)."""
+    flat = acc.astype(jnp.float32).reshape(-1)
+    n = flat.size
+    pad = (-n) % chunk
+    rows = jnp.pad(q.astype(jnp.float32).reshape(-1), (0, pad))
+    rows = rows.reshape(-1, chunk)
+    return flat + (rows * scales[:, None]).reshape(-1)[:n]
+
+
 def ssd_scan_ref(x, dt, a, bm, cm, dd, *, chunk: int):
     """Single-(batch*head) SSD oracle.  x (S,P), dt (S,), a scalar,
     bm/cm (S,N), dd scalar.  Returns y (S,P)."""

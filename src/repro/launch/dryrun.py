@@ -205,9 +205,9 @@ def run_cell(arch, shape_name, mesh_kind, spd,
     hlo = compiled.as_text()
 
     led = {}
-    for op, axis, nbytes in ledger:
-        key = f"{op}@{axis}"
-        led[key] = led.get(key, 0) + nbytes
+    for e in ledger:
+        key = f"{e.op}@{e.axis}"
+        led[key] = led.get(key, 0) + e.nbytes
 
     rec.update({
         "flops_total": float(cost.get("flops", 0.0)),

@@ -54,7 +54,11 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--spd", type=float, default=0.0)
-    ap.add_argument("--engine", choices=["sim", "shard"], default="shard")
+    # any parallel-backend registry name ("sim", "shard", "overlap", ...);
+    # not argparse choices= because the registry lives behind the jax
+    # import, which must wait for XLA_FLAGS — LLM.load fails fast with
+    # the registered names on a typo
+    ap.add_argument("--engine", default="shard")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--page-size", type=int, default=0,

@@ -82,6 +82,11 @@ class ParallelBackend:
     #: registry key; subclasses set it (also used in BENCH json configs)
     name: str = "?"
 
+    #: whether this backend schedules kept syncs to overlap with block
+    #: compute; `LatencyModel.summarize(ledger, overlap=...)` reads it
+    #: to price a trace's hidden vs exposed comm time (bench_transfer)
+    overlaps_comm: bool = False
+
     cfg = plan = None
     tp: int = 1
     dp: int = 1
@@ -279,3 +284,46 @@ class ShardMapBackend(ParallelBackend):
         return [jax.tree.map(
             lambda s, h: jax.device_put(jnp.zeros(s.shape, s.dtype), h),
             st, shh) for st, shh in zip(structs, sh)]
+
+
+# ---------------------------------------------------------------------------
+# shard_map with overlapped kept syncs
+# ---------------------------------------------------------------------------
+
+
+@register_backend("overlap")
+class OverlapBackend(ShardMapBackend):
+    """`shard` plus a comm schedule that HIDES the syncs SPD keeps.
+
+    Three seams, same math (greedy outputs bit-identical to `shard`,
+    locked by the registry parity sweeps):
+
+      * every step traces inside `collectives.overlap_region`, so each
+        kept quantized sync logs its two hops as `ring_chunks` ring-step
+        collective-permute entries instead of one RS/AG pair — the
+        chunked decomposition that double-buffers against the same
+        block's MLP on a real interconnect (the runnable ppermute rings
+        live in compression.ring_*; the CPU emulation keeps the single
+        psum so numerics match `shard` exactly);
+      * `overlaps_comm=True` tells `LatencyModel.summarize` to price
+        overlappable entries as hidden-behind-compute, which is how
+        bench_transfer attributes hidden vs exposed time per policy;
+      * the Engine's `decode_pipelined` driver async-dispatches
+        independent decode micro-batches back-to-back, overlapping
+        launch/host work of batch t+1 with device execution of batch t.
+
+    docs/comm.md#overlap walks through the model and its knobs."""
+
+    overlaps_comm = True
+    #: ring-pipeline depth of each kept sync (matches
+    #: LatencyModel.ring_chunks so the ledger and the price agree)
+    ring_chunks: int = 4
+
+    def wrap(self, local_fn, spec: StepSpec):
+        from repro.parallel.collectives import overlap_region
+
+        def overlapped(*args):
+            with overlap_region(self.ring_chunks):
+                return local_fn(*args)
+
+        return super().wrap(overlapped, spec)

@@ -31,8 +31,9 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
+from dataclasses import dataclass
 from functools import partial
-from typing import List, Optional, Tuple
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,31 +47,171 @@ POD_DATA_AXES = ("pod", "data")  # multi-pod DP
 # Trace-time collective ledger (analytic comm accounting)
 # ---------------------------------------------------------------------------
 
+
+class CommEntry(NamedTuple):
+    """One logical collective the ledger recorded.
+
+    op / axis / nbytes   the collective kind, mesh axis name, and payload
+                         bytes under the BYTE CONVENTION below
+    overlappable         structural property: True for the block sync
+                         points SPD could overlap with compute (the kept
+                         attention/MLP output reductions and their
+                         quantized RS/AG or ring-step decompositions);
+                         False for serial-by-construction collectives
+                         (embedding lookups, CE softmax sums, the final
+                         logits gather).  Whether the time is actually
+                         HIDDEN is a backend property — `LatencyModel.
+                         summarize(..., overlap=)` prices both readings.
+    est_us               modeled wall time of this entry (launch cost +
+                         ring wire time) when the capture was opened with
+                         `collective_ledger(latency=, tp=)`; 0.0 in plain
+                         byte-accounting captures.
+    fixed_us             the launch-cost share of est_us (scan-scaled the
+                         same way, so `LatencyModel.split_us` can price a
+                         body traced once but executed k times without
+                         knowing k).  Launches never hide — they are the
+                         floor under the exposed time.
+    """
+
+    op: str
+    axis: str
+    nbytes: int
+    overlappable: bool = False
+    est_us: float = 0.0
+    fixed_us: float = 0.0
+
+
+def ring_wire_bytes(op: str, payload_bytes: float, n: int) -> float:
+    """Bytes ONE device puts on the wire for one logical collective under
+    the ring algorithms, given the ledger byte convention (below)."""
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n * payload_bytes
+    if op == "reduce-scatter":
+        return (n - 1) / n * payload_bytes
+    if op == "all-gather":
+        return (n - 1) * payload_bytes
+    if op == "collective-permute":
+        return payload_bytes
+    raise ValueError(f"unknown collective op {op!r}")
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """Analytic per-collective latency: `launch_us` fixed dispatch cost +
+    ring wire bytes / `link_bytes_per_s`.  `ring_chunks` is how many ring
+    steps an OVERLAPPABLE sync is split into when a backend double-buffers
+    it against block compute (parallel/backend.OverlapBackend):
+
+      * a single overlappable entry (a kept exact all-reduce) keeps its
+        pipeline-fill chunk and its launch on the critical path —
+        exposed = fixed + (T - fixed) / ring_chunks, hidden = the rest
+        (clamped at 0: launch-bound tiny syncs can't hide);
+      * a collective-permute entry IS one ring step of an overlap-region
+        decomposition (compression._log_two_hop) — its transfer rides
+        under the double-buffered block compute entirely, only its
+        launch stays exposed: hidden = T - fixed.
+
+    Launches never hide either way, which is why the decomposition floors
+    its chunk size (MIN_RING_CHUNK_BYTES) instead of always splitting
+    ring_chunks-deep.  Defaults model one TPU-v5e ICI link (50 GB/s,
+    benchmarks/_common.HW) with a 0.1 us amortized async collective
+    launch and 4-deep chunking."""
+
+    link_bytes_per_s: float = 50e9
+    launch_us: float = 0.1
+    ring_chunks: int = 4
+
+    def collective_us(self, op: str, nbytes: float, n: int) -> float:
+        """Serial wall time (us) of one collective of `nbytes` payload."""
+        if n <= 1:
+            return 0.0
+        return (self.launch_us
+                + ring_wire_bytes(op, nbytes, n) / self.link_bytes_per_s
+                * 1e6)
+
+    def split_us(self, e: "CommEntry") -> tuple:
+        """(hidden_us, exposed_us) of one entry when the backend overlaps
+        kept syncs; hidden + exposed == e.est_us exactly."""
+        if not e.overlappable or self.ring_chunks <= 1:
+            return 0.0, e.est_us
+        if e.op == "collective-permute":
+            hidden = max(e.est_us - e.fixed_us, 0.0)
+            return hidden, e.est_us - hidden
+        exposed = e.fixed_us + (e.est_us - e.fixed_us) / self.ring_chunks
+        hidden = max(e.est_us - exposed, 0.0)
+        return hidden, e.est_us - hidden
+
+    def summarize(self, ledger, *, overlap: bool = False) -> dict:
+        """Price a latency-annotated capture: {total_us, hidden_us,
+        exposed_us, kept_sync_us}.  `overlap=False` (serial backends)
+        exposes everything; `overlap=True` hides the chunked fraction of
+        every overlappable entry.  `kept_sync_us` is the serial time of
+        the overlappable entries alone (the quantity the overlap backend
+        is graded on hiding — bench_transfer gates hidden >= 50% of it)."""
+        total = hidden = kept = 0.0
+        for e in ledger:
+            total += e.est_us
+            if e.overlappable:
+                kept += e.est_us
+            if overlap:
+                hidden += self.split_us(e)[0]
+        return {"total_us": total, "hidden_us": hidden,
+                "exposed_us": total - hidden, "kept_sync_us": kept}
+
+
 class _Ledger(threading.local):
     def __init__(self):
-        self.active: Optional[List[Tuple[str, str, int]]] = None
+        self.active: Optional[List[CommEntry]] = None
         self.scale: int = 1
+        self.latency: Optional[LatencyModel] = None
+        self.tp: int = 1
 
 _LEDGER = _Ledger()
 
 
 @contextmanager
-def collective_ledger():
-    """Capture (op, axis, payload_bytes) for every logical collective traced
-    inside the context.  Payload = per-device operand bytes (all-reduce input
-    size), the quantity the ring-time model consumes."""
-    prev, _LEDGER.active = _LEDGER.active, []
+def collective_ledger(latency: Optional[LatencyModel] = None,
+                      tp: Optional[int] = None):
+    """Capture a `CommEntry` for every logical collective traced inside
+    the context.
+
+    BYTE CONVENTION (one convention, everywhere): `nbytes` is the
+    PER-DEVICE OPERAND bytes of the collective at its true wire
+    precision —
+
+      * all-reduce / reduce-scatter: the full array each device
+        contributes (the reduce-scatter's input, NOT its 1/n output);
+      * all-gather: the per-device SLICE being gathered (its input);
+      * collective-permute: the bytes one device sends in one step.
+
+    Quantized syncs log the int-codes + bf16-scales bytes that actually
+    cross the link (compression.wire_bytes), not the fp32 operand the
+    CPU emulation reduces; `ring_wire_bytes` converts any entry to
+    per-device ring wire traffic.
+
+    `latency=` (with `tp=`, the model-axis degree of the trace) prices
+    every entry at capture time — `est_us` = launch + ring-wire /
+    bandwidth; without it entries carry est_us=0.0 and remain pure byte
+    accounting."""
+    if latency is not None and tp is None:
+        raise ValueError("collective_ledger(latency=...) needs tp=")
+    prev = (_LEDGER.active, _LEDGER.latency, _LEDGER.tp)
+    _LEDGER.active, _LEDGER.latency = [], latency
+    _LEDGER.tp = int(tp) if tp is not None else 1
     try:
         yield _LEDGER.active
     finally:
-        _LEDGER.active = prev
+        _LEDGER.active, _LEDGER.latency, _LEDGER.tp = prev
 
 
 @contextmanager
 def ledger_scale(k: int):
     """Multiply logged bytes by k while tracing a lax.scan body (the body
     traces once but executes k times — HLO-text op counting has the same
-    blind spot, which is why the ledger is the primary byte accounting)."""
+    blind spot, which is why the ledger is the primary byte accounting).
+    est_us scales the same way: k executions = k launches + k transfers."""
     prev, _LEDGER.scale = _LEDGER.scale, _LEDGER.scale * int(k)
     try:
         yield
@@ -78,24 +219,70 @@ def ledger_scale(k: int):
         _LEDGER.scale = prev
 
 
-def _log(op: str, axis, x) -> None:
+def _append(op: str, axis, nbytes: int, overlappable: bool) -> None:
+    name = axis if isinstance(axis, str) else "+".join(axis)
+    est = fixed = 0.0
+    if _LEDGER.latency is not None and _LEDGER.tp > 1:
+        est = _LEDGER.scale * _LEDGER.latency.collective_us(
+            op, nbytes, _LEDGER.tp)
+        fixed = _LEDGER.scale * _LEDGER.latency.launch_us
+    _LEDGER.active.append(CommEntry(op, name, int(nbytes) * _LEDGER.scale,
+                                    overlappable, est, fixed))
+
+
+def _log(op: str, axis, x, *, overlappable: bool = False) -> None:
     if _LEDGER.active is None:
         return
     leaves = jax.tree_util.tree_leaves(x)
-    nbytes = sum(l.size * l.dtype.itemsize for l in leaves) * _LEDGER.scale
-    name = axis if isinstance(axis, str) else "+".join(axis)
-    _LEDGER.active.append((op, name, int(nbytes)))
+    nbytes = sum(l.size * l.dtype.itemsize for l in leaves)
+    _append(op, axis, nbytes, overlappable)
 
 
-def log_collective(op: str, axis, nbytes: int) -> None:
+def log_collective(op: str, axis, nbytes: int, *,
+                   overlappable: bool = False) -> None:
     """Ledger entry with an EXPLICIT byte count — for collectives whose
     wire format differs from their operand (quantized payloads log the
     int8/int4+scales bytes that actually cross the link, not the fp32
     operand the CPU emulation reduces)."""
     if _LEDGER.active is None:
         return
-    name = axis if isinstance(axis, str) else "+".join(axis)
-    _LEDGER.active.append((op, name, int(nbytes) * _LEDGER.scale))
+    _append(op, axis, int(nbytes), overlappable)
+
+
+# ---------------------------------------------------------------------------
+# Overlap regions (trace-time): chunked-ring sync accounting
+# ---------------------------------------------------------------------------
+
+
+class _Overlap(threading.local):
+    def __init__(self):
+        self.chunks: int = 0          # 0 = not inside an overlap region
+
+_OVERLAP = _Overlap()
+
+
+@contextmanager
+def overlap_region(chunks: int = 4):
+    """Trace-time marker the overlap backend wraps every step in: while
+    active, each kept QUANTIZED sync logs its two hops as `chunks`
+    ring-step collective-permute entries (bytes identical in total to
+    the RS/AG pair — the decomposition XLA would pipeline against the
+    block's MLP on a real interconnect), and kept exact syncs stay
+    single all-reduce entries flagged overlappable.  Execution is
+    UNCHANGED — same psum, bit-identical outputs — this is the ledger
+    seam of the CPU emulation (compression.py module docstring); the
+    runnable ppermute ring lives in compression.ring_* and is
+    unit-tested against the fused collectives."""
+    prev, _OVERLAP.chunks = _OVERLAP.chunks, int(chunks)
+    try:
+        yield
+    finally:
+        _OVERLAP.chunks = prev
+
+
+def overlap_chunks() -> int:
+    """Ring-chunk count of the active overlap region (0 outside one)."""
+    return _OVERLAP.chunks
 
 
 # ---------------------------------------------------------------------------
@@ -202,7 +389,10 @@ def sync_output(x, axis=MODEL_AXIS, compressible: bool = True, mode=None):
     if compressible and m in _MODE_BITS:
         from repro.parallel.compression import quantized_psum
         return quantized_psum(x, axis, bits=_MODE_BITS[m])
-    _log("all-reduce", axis, x)
+    # a compressible kept sync is exactly the class of collective the
+    # overlap backend can double-buffer against block compute; pinned
+    # exact reductions (embedding, CE) are serial by construction
+    _log("all-reduce", axis, x, overlappable=compressible)
     return g_psum(x, axis)
 
 

@@ -45,14 +45,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ref import qdq_absmax_ref
+from repro.kernels.ref import dequant_accum_ref, qdq_absmax_ref
 from repro.parallel.collectives import (all_gather, axis_size,
-                                        log_collective)
+                                        log_collective, overlap_chunks,
+                                        ppermute, ring_wire_bytes)
 
 # bits per element actually moved for each quantized level; one bf16
 # scale per `chunk` elements rides along (wire_bytes)
 QUANT_BITS = {"quant8": 8, "int8": 8, "quant4": 4, "int4": 4}
 DEFAULT_CHUNK = 128
+# floor on the ring-step payload an overlap region splits a hop into:
+# each step pays a launch that can never hide (LatencyModel), so tiny
+# hops stay 1-2 steps instead of drowning in ring_chunks launches
+MIN_RING_CHUNK_BYTES = 16384
 
 
 def _levels(bits: int) -> int:
@@ -64,8 +69,11 @@ def wire_bytes(n_elems: int, bits: int, chunk: int = DEFAULT_CHUNK) -> int:
     """Bytes a quantized payload of n_elems occupies on the wire:
     nibble-packed int4 or int8 codes + bf16 per-chunk absmax scales
     (+1.6% at chunk=128; scales are computed in fp32 and rounded to
-    bf16 for transport)."""
-    codes = n_elems // 2 if bits == 4 else n_elems
+    bf16 for transport).  int4 packs two codes per byte, so an
+    odd-length payload still pays for its trailing half-filled byte —
+    ceiling, not floor (a floor here undercounted every odd payload by
+    one byte and compounded across the per-block ledger entries)."""
+    codes = -(-n_elems // 2) if bits == 4 else n_elems
     scales = -(-n_elems // chunk) * 2
     return codes + scales
 
@@ -91,6 +99,30 @@ def qdq(x, *, bits: int = 8, chunk: int = DEFAULT_CHUNK,
     return y.reshape(x.shape)
 
 
+def _log_two_hop(axis, wire_full: int, wire_slice: int, n: int) -> None:
+    """Ledger the two-hop quantized sync under the ONE byte convention
+    (collectives.collective_ledger): per-device operand bytes — the RS
+    entry carries the full quantized payload each device contributes,
+    the AG entry the reduced per-device slice.  Inside an overlap region
+    (the "overlap" backend) each hop instead logs `chunks` ring-step
+    collective-permute entries whose bytes sum to the hop's ring wire
+    traffic — the decomposition that double-buffers against the block's
+    MLP; total priced bytes are unchanged (tests/test_latency.py)."""
+    region = overlap_chunks()
+    if region <= 0:
+        log_collective("reduce-scatter", axis, wire_full, overlappable=True)
+        log_collective("all-gather", axis, wire_slice, overlappable=True)
+        return
+    for wire in (ring_wire_bytes("reduce-scatter", wire_full, n),
+                 ring_wire_bytes("all-gather", wire_slice, n)):
+        wire = int(round(wire))
+        chunks = max(1, min(region, wire // MIN_RING_CHUNK_BYTES))
+        step, rem = divmod(wire, chunks)
+        for c in range(chunks):
+            log_collective("collective-permute", axis,
+                           step + (1 if c < rem else 0), overlappable=True)
+
+
 def quantized_psum(x, axis, *, bits: int = 8, chunk: int = DEFAULT_CHUNK,
                    kernel="auto"):
     """Approximate psum over the named `axis` with low-bit payloads (see
@@ -99,15 +131,19 @@ def quantized_psum(x, axis, *, bits: int = 8, chunk: int = DEFAULT_CHUNK,
     x's dtype like psum."""
     shape, dtype = x.shape, x.dtype
     flat = x.astype(jnp.float32).reshape(-1)
-    wire = wire_bytes(flat.size, bits, chunk)
+    n = axis_size(axis)
+    # hop 1 operand: each device's full quantized partial; hop 2
+    # operand: the reduced 1/n slice, re-quantized — CEILING element
+    # split with its OWN scale count (a plain wire//n both floored tiny
+    # payloads to 0 bytes and miscounted the slice's scales)
+    wire_full = wire_bytes(flat.size, bits, chunk)
+    wire_slice = wire_bytes(-(-flat.size // n), bits, chunk)
     # hop 1: pre-reduction quantization + reduce-scatter accounting
     xq = qdq(flat, bits=bits, chunk=chunk, kernel=kernel)
-    log_collective("reduce-scatter", axis, wire)
+    _log_two_hop(axis, wire_full, wire_slice, n)
     s = jax.lax.psum(xq, axis)
-    # hop 2: post-reduction quantization + all-gather accounting (the AG
-    # entry is the per-device SLICE input, matching the ledger convention)
+    # hop 2: post-reduction quantization (all-gather accounting above)
     out = qdq(s, bits=bits, chunk=chunk, kernel=kernel)
-    log_collective("all-gather", axis, wire // axis_size(axis))
     return out.reshape(shape).astype(dtype)
 
 
@@ -121,6 +157,123 @@ def quantized_gather_payload(x, axis, *, bits: int = 8,
     flat = x.astype(jnp.float32).reshape(-1)
     out = qdq(flat, bits=bits, chunk=chunk, kernel=kernel)
     log_collective("all-gather", axis, wire_bytes(flat.size, bits, chunk))
+    return out.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Runnable ppermute ring collectives (the overlap backend's deployment
+# lowering).  These EXECUTE the chunked ring schedule the overlap ledger
+# accounts for: on a TPU the per-step permutes pipeline against the
+# dequant-accumulate compute of the previous step (and against the
+# block's MLP when the backend interleaves them).  The serving engines
+# keep the single-psum emulation for bit-identical cross-backend parity;
+# these are unit-tested against the fused collectives and usable
+# directly (tests/test_latency.py, docs/comm.md#overlap).
+# ---------------------------------------------------------------------------
+
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _pad_to(flat, n: int):
+    pad = (-flat.size) % n
+    return (jnp.pad(flat, (0, pad)), flat.size) if pad else (flat, flat.size)
+
+
+def ring_all_gather(x, axis):
+    """ppermute-ring all-gather: returns (n, *x.shape), row j = shard
+    j's `x` — element-identical to `lax.all_gather` (pure data movement,
+    n-1 ring steps, each logged as a collective-permute)."""
+    n = axis_size(axis)
+    if n == 1:
+        return x[None]
+    d = jax.lax.axis_index(axis)
+    perm = _ring_perm(n)
+    parts, cur = [x], x
+    for _ in range(n - 1):
+        cur = ppermute(cur, axis, perm)
+        parts.append(cur)
+    # row t of the stack is shard (d - t) % n; reorder so row j = shard j
+    stacked = jnp.stack(parts)
+    return jnp.take(stacked, (d - jnp.arange(n)) % n, axis=0)
+
+
+def ring_reduce_scatter(x, axis):
+    """ppermute-ring reduce-scatter over flattened `x`: device d returns
+    slice d (length ceil(size/n), zero-padded) of the cross-shard sum.
+    n-1 steps; each step forwards one partial slice and folds in the
+    local contribution — the schedule whose per-step traffic the overlap
+    ledger prices."""
+    n = axis_size(axis)
+    flat = x.astype(jnp.float32).reshape(-1)
+    if n == 1:
+        return flat
+    padded, _ = _pad_to(flat, n)
+    xs = padded.reshape(n, -1)
+    d = jax.lax.axis_index(axis)
+    perm = _ring_perm(n)
+    # chunk c starts at device c+1 holding that device's contribution;
+    # after n-1 forward-and-accumulate steps it is complete at device c
+    buf = jnp.take(xs, (d - 1) % n, axis=0)
+    for t in range(n - 1):
+        buf = ppermute(buf, axis, perm)
+        buf = buf + jnp.take(xs, (d - 2 - t) % n, axis=0)
+    return buf
+
+
+def ring_quantized_psum(x, axis, *, bits: int = 8,
+                        chunk: int = DEFAULT_CHUNK, kernel="auto"):
+    """The RUNNABLE low-bit ring psum: quantized ring reduce-scatter
+    (each step ships int codes + scales; the receiver dequant-ACCUMULATES
+    in one fused pass — kernels/quant_collectives.dequant_accum_absmax),
+    then a re-quantized ring all-gather.  Error grows with the n-1
+    per-step requantizations, unlike the two-shot `quantized_psum` —
+    this is the schedule/kernel reference for a real interconnect, not
+    the serving engines' emulation path (module docstring)."""
+    shape, dtype = x.shape, x.dtype
+    n = axis_size(axis)
+    if kernel == "auto":
+        kernel = jax.default_backend() == "tpu"
+    levels = _levels(bits)
+
+    def _quant(v):
+        if kernel:
+            from repro.kernels.quant_collectives import quantize_absmax
+            return quantize_absmax(v, chunk=chunk, levels=levels,
+                                   interpret=jax.default_backend() != "tpu")
+        pad = (-v.size) % chunk
+        vp = jnp.pad(v, (0, pad)).reshape(-1, chunk)
+        s = jnp.maximum(jnp.max(jnp.abs(vp), -1) / levels, 1e-12)
+        q = jnp.clip(jnp.round(vp / s[:, None]), -levels, levels)
+        return q.astype(jnp.int8).reshape(-1)[:v.size], s
+
+    def _accum(q, s, acc):
+        if kernel:
+            from repro.kernels.quant_collectives import dequant_accum_absmax
+            return dequant_accum_absmax(
+                q, s, acc, chunk=chunk,
+                interpret=jax.default_backend() != "tpu")
+        return dequant_accum_ref(q, s, acc, chunk=chunk)
+
+    flat = x.astype(jnp.float32).reshape(-1)
+    if n == 1:
+        return qdq(flat, bits=bits, chunk=chunk,
+                   kernel=kernel).reshape(shape).astype(dtype)
+    padded, size = _pad_to(flat, n)
+    xs = padded.reshape(n, -1)
+    d = jax.lax.axis_index(axis)
+    perm = _ring_perm(n)
+    # hop 1: quantized ring reduce-scatter (requantize before each send)
+    buf = jnp.take(xs, (d - 1) % n, axis=0)
+    for t in range(n - 1):
+        q, s = _quant(buf)
+        q = ppermute(q, axis, perm)
+        s = ppermute(s, axis, perm)
+        buf = _accum(q, s, jnp.take(xs, (d - 2 - t) % n, axis=0))
+    # hop 2: requantize the reduced slice, ring all-gather, reassemble
+    buf = qdq(buf, bits=bits, chunk=chunk, kernel=kernel)
+    out = ring_all_gather(buf, axis).reshape(-1)[:size]
     return out.reshape(shape).astype(dtype)
 
 

@@ -160,6 +160,17 @@ class Engine:
         return step(params, tokens, pos, caches, temperature, top_k,
                     top_p, keys)
 
+    def decode_pipelined(self, params, groups, *, depth: int = 2):
+        """Greedy decode over independent micro-batches with async
+        dispatch between them (F.drive_pipelined_decode) — the host-level
+        overlap seam the "overlap" backend pairs with its chunked-ring
+        sync accounting.  `groups` is a list of ``(tokens, pos, caches)``;
+        returns ``[(ids, caches), ...]`` token-identical to calling
+        `decode` serially per group (any backend; scheduler batches that
+        split along request groups can use it directly)."""
+        return F.drive_pipelined_decode(self._decode(False), params,
+                                        groups, depth=depth)
+
     def verify(self, params, tokens, pos, caches):
         """Speculative verify on dense caches: tokens (B, C) — the last
         accepted token + C-1 drafts — scored in ONE forward; returns

@@ -307,6 +307,28 @@ def bucketed_prefill(engine, params, toks, s: int, cache_len: int,
                           lengths=jnp.asarray([s], jnp.int32))
 
 
+def drive_pipelined_decode(step, params, groups, *, depth: int = 2):
+    """Async-dispatch one decode step across independent micro-batches.
+
+    `groups` is a list of per-group step arguments (e.g. ``(tokens, pos,
+    caches)``); returns the list of step results in order.  JAX dispatch
+    is asynchronous — ``step(...)`` returns device futures immediately —
+    so issuing group t+1's step BEFORE touching group t's outputs
+    overlaps t+1's trace/launch (and, on a real device, its execution
+    stream) with t's compute instead of serializing launch-wait-launch.
+    `depth` bounds how many donated cache trees are in flight at once;
+    the final drain blocks every group.  Token-identical to the serial
+    loop: the groups are independent, only the dispatch order changes
+    (tests/test_latency.py, scripts/overlap_smoke.py)."""
+    inflight, out = [], []
+    for g in groups:
+        inflight.append(step(params, *g))
+        if len(inflight) >= max(int(depth), 1):
+            out.append(jax.block_until_ready(inflight.pop(0)))
+    out.extend(jax.block_until_ready(r) for r in inflight)
+    return out
+
+
 def drive_chunked_prefill(step, caches, tokens, lengths, chunk):
     """Host loop for chunked prefill: right-pad the batch to a chunk
     multiple, feed chunks through `step(toks, start, lengths, caches)`,

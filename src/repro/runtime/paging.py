@@ -69,18 +69,98 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-max(n_tokens, 0) // page_size)
 
 
+# splitmix64 finalizer constants + stream/lane constants for the
+# vectorized prefix digests (two 64-bit lanes -> 16-byte digests, same
+# width as the blake2b-128 chain they replaced)
+_SM1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM2 = np.uint64(0x94D049BB133111EB)
+_K1 = np.uint64(0x9E3779B97F4A7C15)
+_K2 = np.uint64(0xC2B2AE3D27D4EB4F)
+_SEED = np.uint64(0x243F6A8885A308D3)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer, vectorized over uint64 (wrapping mul);
+    operates on a copy, in place internally (one temp, no chain of
+    full-size intermediates)."""
+    x = np.array(x, dtype=np.uint64, copy=True)
+    tmp = x >> np.uint64(30)
+    x ^= tmp
+    x *= _SM1
+    np.right_shift(x, np.uint64(27), out=tmp)
+    x ^= tmp
+    x *= _SM2
+    np.right_shift(x, np.uint64(31), out=tmp)
+    x ^= tmp
+    return x
+
+
+# cached per-position weight lanes for page_hashes, grown geometrically
+# on demand (serving hashes many prompts; the splitmix64 fill cost is
+# paid once per high-water prompt length, not per call)
+_WLANES: List[np.ndarray] = [np.empty(0, np.uint64), np.empty(0, np.uint64)]
+
+
+def _weights(size: int) -> tuple:
+    if _WLANES[0].size < size:
+        grow = max(size, 2 * _WLANES[0].size, 4096)
+        idx = np.arange(1, grow + 1, dtype=np.uint64)
+        for lane, k in enumerate((_K1, _K2)):
+            w = _mix64(idx * k + _SEED)
+            np.bitwise_or(w, np.uint64(1), out=w)   # odd: see page_hashes
+            _WLANES[lane] = w
+    return _WLANES[0][:size], _WLANES[1][:size]
+
+
 def page_hashes(tokens, page_size: int) -> List[bytes]:
-    """Chain digests of every FULL page of `tokens`.
+    """Prefix digests of every FULL page of `tokens`, ONE vectorized
+    pass.
 
-    Digest j covers the whole prefix tokens[: (j+1)*page_size] (each link
-    hashes the previous digest plus the page's token bytes), so equal
-    digests imply equal full prefixes — partial trailing pages are never
-    hashed.
+    Digest j covers the whole prefix tokens[: (j+1)*page_size]; equal
+    prefixes give equal digests and divergent prefixes keep divergent
+    digests from the first differing page on — the equality relation the
+    prefix index and prefix-affinity routing key on (locked against the
+    `page_hashes_chain` reference by tests/test_paging.py).  Partial
+    trailing pages are never hashed.
 
-    The prompt is converted to bytes ONCE and the chain walks a
-    memoryview over it — one pass over the prompt, no per-page ndarray
-    slicing/copying, which is what admission-time hashing of very long
-    prompts spends its time on."""
+    Scheme: a position-keyed inner product.  Each absolute position i
+    carries two cached pseudorandom ODD uint64 weights (splitmix64 of
+    the position, amortized across calls by `_weights`); lane sums
+    cumulate token*weight per page, and each page boundary's pair is
+    re-finalized with the prefix length (so a prefix and its
+    zero-extension never collide).  Odd weights make any SINGLE-token
+    divergence change the covering digest deterministically (d*w = 0
+    mod 2^64 needs 2^64 | d, impossible for token-id deltas); a
+    multi-token accidental cancellation must zero two independent
+    lanes, ~2^-128 — same scale as the blake2b-128 chain this replaces.
+    Unlike blake2b the scheme is not adversarially collision-resistant,
+    which prefix caching does not need (a collision wastes a shared
+    page, it never changes tokens already verified by admission).  The
+    chain hashed page-by-page in a Python loop; for very long prompts
+    (ROADMAP PR-6 upside) this is two multiply+reduce passes of numpy."""
+    toks = np.asarray(tokens).astype(np.uint64, copy=False)
+    n = toks.shape[0] // page_size
+    if n <= 0:
+        return []
+    t = toks[: n * page_size]
+    w1, w2 = _weights(t.size)
+    ends = np.arange(1, n + 1, dtype=np.uint64) * np.uint64(page_size)
+    s1 = np.cumsum((t * w1).reshape(n, page_size).sum(1, dtype=np.uint64),
+                   dtype=np.uint64)
+    s2 = np.cumsum((t * w2).reshape(n, page_size).sum(1, dtype=np.uint64),
+                   dtype=np.uint64)
+    d1 = _mix64(s1 ^ (ends * _K1))
+    d2 = _mix64(s2 ^ (ends * _K2))
+    raw = np.ascontiguousarray(
+        np.stack([d1, d2], axis=1).astype("<u8")).tobytes()
+    return [raw[16 * j: 16 * (j + 1)] for j in range(n)]
+
+
+def page_hashes_chain(tokens, page_size: int) -> List[bytes]:
+    """Reference blake2b-128 chain digests (the pre-vectorization
+    implementation): link j hashes link j-1's digest plus page j's token
+    bytes.  Kept as the equality-semantics oracle for `page_hashes` and
+    for anyone wanting cryptographic digests (drop-in same signature)."""
     toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
     n = toks.shape[0] // page_size
     if n <= 0:

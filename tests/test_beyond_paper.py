@@ -34,9 +34,9 @@ def test_int8_sync_quality_and_bytes():
             f8._clear_cache() if hasattr(f8, "_clear_cache") else None
             lg_q8 = f8(split, toks, None)
 
-    ar_exact = sum(n for op, _, n in led_exact if op == "all-reduce")
-    ar_q8 = sum(n for op, _, n in led_q8 if op == "all-reduce")
-    ag_q8 = sum(n for op, _, n in led_q8 if op == "all-gather")
+    ar_exact = sum(e.nbytes for e in led_exact if e.op == "all-reduce")
+    ar_q8 = sum(e.nbytes for e in led_q8 if e.op == "all-reduce")
+    ag_q8 = sum(e.nbytes for e in led_q8 if e.op == "all-gather")
     assert ar_q8 < ar_exact          # block syncs moved off all-reduce
     assert ag_q8 > 0
     # wire-time model: bf16 AR = 2(n-1)/n * 2B/elem;

@@ -181,10 +181,10 @@ def test_ledger_quant8_wire_bytes_ratio():
     plan_q = SPDPlanConfig.none(cfg.n_layers).with_comm(
         CommPolicy.uniform(cfg.n_layers, "quant8"))
     led_q = _ledger_for(cfg, plan_q, tp, toks)
-    ar_e = sum(n for op, _, n in led_e if op == "all-reduce")
-    ar_q = sum(n for op, _, n in led_q if op == "all-reduce")
-    qd_q = sum(n for op, _, n in led_q if op in ("reduce-scatter",
-                                                 "all-gather"))
+    ar_e = sum(e.nbytes for e in led_e if e.op == "all-reduce")
+    ar_q = sum(e.nbytes for e in led_q if e.op == "all-reduce")
+    qd_q = sum(e.nbytes for e in led_q if e.op in ("reduce-scatter",
+                                                   "all-gather"))
     # the ARs still present under quant8 are the pinned-exact syncs
     # (embedding); the block syncs shrink from fp32 AR payloads to the
     # int8 RS + AG pair — >= 3.5x fewer payload bytes at tp=8
@@ -193,8 +193,8 @@ def test_ledger_quant8_wire_bytes_ratio():
     # quant4 halves the code bytes again
     plan_q4 = plan_q.with_comm(CommPolicy.uniform(cfg.n_layers, "quant4"))
     led_q4 = _ledger_for(cfg, plan_q4, tp, toks)
-    qd_q4 = sum(n for op, _, n in led_q4 if op in ("reduce-scatter",
-                                                   "all-gather"))
+    qd_q4 = sum(e.nbytes for e in led_q4 if e.op in ("reduce-scatter",
+                                                     "all-gather"))
     assert qd_q4 < 0.6 * qd_q
 
 

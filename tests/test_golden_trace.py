@@ -38,6 +38,14 @@ def test_shard_engine_matches_golden(golden):
     assert _generate(golden, "shard", dp=2) == golden["tokens"]
 
 
+def test_overlap_engine_matches_golden(golden):
+    """The overlap backend is a trace-time ledger seam over shard (the
+    chunked-ring decomposition changes comm ACCOUNTING, never the psum
+    math — docs/comm.md#overlap), so its greedy tokens must be
+    bit-identical to the same golden trace."""
+    assert _generate(golden, "overlap") == golden["tokens"]
+
+
 @pytest.mark.parametrize("engine,dp", [("sim", 1), ("shard", 2)])
 def test_prefix_cache_matches_golden(golden, engine, dp):
     """The paged serve path with prefix caching is locked to the SAME

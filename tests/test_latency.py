@@ -1,0 +1,287 @@
+"""Latency-model + overlap-accounting unit suite (docs/comm.md#overlap).
+
+Covers the trace-time ledger's latency annotations (`collective_ledger
+(latency=, tp=)`), the hidden/exposed split the overlap backend is graded
+on (`LatencyModel.split_us` / `summarize`), the overlap-region ring
+decomposition's byte preservation, the quantized wire-byte model's
+ceiling fix, and the RUNNABLE ppermute ring collectives against their
+fused one-shot counterparts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_cfg
+from repro.config.base import CommPolicy, SPDPlanConfig, replace
+from repro.core import model as M, simtp
+from repro.parallel import compression as C
+from repro.parallel.collectives import (MODEL_AXIS, CommEntry, LatencyModel,
+                                        collective_ledger, ledger_scale,
+                                        log_collective, overlap_region,
+                                        ring_wire_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Wire-byte models
+# ---------------------------------------------------------------------------
+
+
+def test_ring_wire_bytes_conventions():
+    p = 1000.0
+    assert ring_wire_bytes("all-reduce", p, 4) == 2 * 3 / 4 * p
+    assert ring_wire_bytes("reduce-scatter", p, 4) == 3 / 4 * p
+    assert ring_wire_bytes("all-gather", p, 4) == 3 * p
+    assert ring_wire_bytes("collective-permute", p, 4) == p
+    for op in ("all-reduce", "reduce-scatter", "all-gather",
+               "collective-permute"):
+        assert ring_wire_bytes(op, p, 1) == 0.0
+    with pytest.raises(ValueError):
+        ring_wire_bytes("gossip", p, 4)
+
+
+def test_wire_bytes_int4_ceiling_regression():
+    """int4 packs two codes per byte; an odd payload still pays its
+    trailing half-filled byte (the old floor undercounted every odd
+    payload by one byte, compounding across per-block ledger entries)."""
+    for n in (1, 2, 7, 8, 127, 128, 129):
+        codes8, codes4 = n, (n + 1) // 2
+        scales = -(-n // 128) * 2
+        assert C.wire_bytes(n, 8) == codes8 + scales, n
+        assert C.wire_bytes(n, 4) == codes4 + scales, n
+    # the regression pair: 7 elements needs 4 code bytes, not 3
+    assert C.wire_bytes(7, 4) - C.wire_bytes(6, 4) == 1
+    assert C.wire_bytes(8, 4) == C.wire_bytes(7, 4)
+
+
+# ---------------------------------------------------------------------------
+# LatencyModel: split invariants on synthetic entries
+# ---------------------------------------------------------------------------
+
+
+def _entry(op, nbytes, overlappable, lat, tp, scale=1):
+    est = scale * lat.collective_us(op, nbytes, tp)
+    return CommEntry(op, MODEL_AXIS, nbytes * scale, overlappable, est,
+                     scale * lat.launch_us)
+
+
+def test_split_us_invariants():
+    lat = LatencyModel()
+    entries = [
+        _entry("all-reduce", 1 << 20, True, lat, 8),
+        _entry("all-reduce", 1 << 20, False, lat, 8),
+        _entry("reduce-scatter", 4096, True, lat, 4),
+        _entry("collective-permute", 65536, True, lat, 4),
+        _entry("collective-permute", 8, True, lat, 2),   # launch-bound
+        _entry("all-gather", 0, True, lat, 8),           # zero payload
+        _entry("all-reduce", 1 << 16, True, lat, 4, scale=6),  # scanned
+    ]
+    for e in entries:
+        hidden, exposed = lat.split_us(e)
+        assert hidden >= 0 and exposed >= 0
+        assert abs(hidden + exposed - e.est_us) < 1e-12, e
+        if not e.overlappable:
+            assert hidden == 0.0
+        if e.op == "collective-permute" and e.overlappable:
+            # a ring step hides its whole transfer; only launch exposed
+            assert abs(exposed - e.fixed_us) < 1e-12
+    # launches never hide: exposed >= the entry's launch share
+    for e in entries:
+        assert lat.split_us(e)[1] >= e.fixed_us - 1e-12
+    # ring_chunks=1 (or non-overlap backends) exposes everything
+    flat = LatencyModel(ring_chunks=1)
+    assert flat.split_us(entries[0]) == (0.0, entries[0].est_us)
+
+
+def test_scan_scale_prices_k_launches():
+    """A body traced once but executed k times pays k launches AND k
+    transfers — est_us and fixed_us both carry the scale (this is what
+    lets split_us price scanned entries without knowing k)."""
+    lat = LatencyModel()
+    with collective_ledger(latency=lat, tp=4) as led:
+        log_collective("all-reduce", MODEL_AXIS, 1 << 16, overlappable=True)
+        with ledger_scale(5):
+            log_collective("all-reduce", MODEL_AXIS, 1 << 16,
+                           overlappable=True)
+    one, five = led
+    assert five.nbytes == 5 * one.nbytes
+    assert abs(five.est_us - 5 * one.est_us) < 1e-12
+    assert abs(five.fixed_us - 5 * one.fixed_us) < 1e-12
+
+
+def test_latency_monotonic_in_bandwidth():
+    fast, slow = LatencyModel(link_bytes_per_s=50e9), \
+        LatencyModel(link_bytes_per_s=10e9)
+    for op in ("all-reduce", "reduce-scatter", "all-gather"):
+        assert slow.collective_us(op, 1 << 20, 8) \
+            > fast.collective_us(op, 1 << 20, 8)
+    # and through a full summarize of the same logical trace
+    sums = {}
+    for lat in (fast, slow):
+        with collective_ledger(latency=lat, tp=8) as led:
+            for _ in range(3):
+                log_collective("all-reduce", MODEL_AXIS, 1 << 18,
+                               overlappable=True)
+            log_collective("all-reduce", MODEL_AXIS, 1 << 10)
+        sums[lat.link_bytes_per_s] = (lat.summarize(led),
+                                      lat.summarize(led, overlap=True))
+    (f_ser, f_ov), (s_ser, s_ov) = sums[50e9], sums[10e9]
+    assert s_ser["total_us"] > f_ser["total_us"]
+    assert s_ov["exposed_us"] > f_ov["exposed_us"]
+    # serial reading hides nothing; overlap reading accounts exactly
+    for ser, ov in ((f_ser, f_ov), (s_ser, s_ov)):
+        assert ser["hidden_us"] == 0.0
+        assert abs(ser["exposed_us"] - ser["total_us"]) < 1e-9
+        assert abs(ov["hidden_us"] + ov["exposed_us"] - ov["total_us"]) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Full-model traces: per-policy accounting
+# ---------------------------------------------------------------------------
+
+
+def _trace(cfg, plan, tp, lat, overlap=False):
+    from contextlib import nullcontext
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    split = simtp.prepare_params(params, cfg, plan, tp)
+    toks = jnp.zeros((1, 32), jnp.int32)
+    region = overlap_region(lat.ring_chunks) if overlap else nullcontext()
+    with collective_ledger(latency=lat, tp=tp) as led:
+        with region:
+            simtp.make_logits_fn(cfg, plan, tp, q_chunk=64)(split, toks, None)
+    return led
+
+
+def _plan(cfg, pol):
+    n = cfg.n_layers
+    if pol == "drop":
+        return SPDPlanConfig.full(n)
+    if pol == "exact":
+        return SPDPlanConfig.none(n)
+    return SPDPlanConfig.none(n).with_comm(CommPolicy.uniform(n, pol))
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+@pytest.mark.parametrize("pol", ["exact", "quant8", "quant4", "drop"])
+def test_policy_trace_hidden_plus_exposed_is_total(tp, pol):
+    cfg = replace(make_cfg("smollm-360m"), dtype="float32")
+    lat = LatencyModel()
+    led = _trace(cfg, _plan(cfg, pol), tp, lat, overlap=True)
+    ov = lat.summarize(led, overlap=True)
+    ser = lat.summarize(led)
+    assert abs(ov["hidden_us"] + ov["exposed_us"] - ov["total_us"]) < 1e-9
+    assert ser["hidden_us"] == 0.0
+    assert ov["kept_sync_us"] <= ov["total_us"] + 1e-9
+    assert ov["kept_sync_us"] > 0.0
+    assert ov["hidden_us"] > 0.0
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_dropped_blocks_contribute_zero_entries(tp):
+    """SPD drops the ATTENTION output sync; a 100%-drop plan's trace must
+    carry zero entries for those sync points — exactly half the kept-sync
+    bytes of the exact plan (both block syncs move B*S*d each), with the
+    MLP syncs (which SPD never touches) still present and hideable."""
+    cfg = replace(make_cfg("smollm-360m"), dtype="float32")
+    lat = LatencyModel()
+    led_x = _trace(cfg, _plan(cfg, "exact"), tp, lat, overlap=True)
+    led_d = _trace(cfg, _plan(cfg, "drop"), tp, lat, overlap=True)
+    kept = lambda led: [e for e in led if e.overlappable]
+    bytes_x = sum(e.nbytes for e in kept(led_x))
+    bytes_d = sum(e.nbytes for e in kept(led_d))
+    assert bytes_d * 2 == bytes_x
+    ov = lat.summarize(led_d, overlap=True)
+    assert 0.0 < ov["kept_sync_us"] \
+        < lat.summarize(led_x, overlap=True)["kept_sync_us"]
+    assert ov["hidden_us"] > 0.0
+
+
+def test_overlap_decomposition_preserves_ring_bytes():
+    """Inside an overlap region a quantized sync logs chunked ring steps
+    whose bytes sum EXACTLY to the ring wire traffic of the RS/AG pair it
+    replaces — accounting changes shape, never magnitude."""
+    tp = 4
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((tp, 4096)),
+                    jnp.float32)
+    fn = jax.vmap(lambda v: C.quantized_psum(v, MODEL_AXIS, bits=8),
+                  axis_name=MODEL_AXIS)
+    with collective_ledger() as plain:
+        out_plain = np.asarray(fn(x))
+    with collective_ledger() as ringed:
+        with overlap_region(4):
+            out_ring = np.asarray(fn(x))
+    # execution is the ledger seam: bit-identical outputs
+    np.testing.assert_array_equal(out_plain, out_ring)
+    rs, ag = [e for e in plain if e.op in ("reduce-scatter", "all-gather")]
+    perms = [e for e in ringed if e.op == "collective-permute"]
+    assert perms and all(e.overlappable for e in perms)
+    want = int(round(ring_wire_bytes("reduce-scatter", rs.nbytes, tp))) + \
+        int(round(ring_wire_bytes("all-gather", ag.nbytes, tp)))
+    assert sum(e.nbytes for e in perms) == want
+    # tiny payloads refuse to split below MIN_RING_CHUNK_BYTES
+    with collective_ledger() as tiny:
+        with overlap_region(4):
+            jax.vmap(lambda v: C.quantized_psum(v, MODEL_AXIS, bits=8),
+                     axis_name=MODEL_AXIS)(x[:, :64])
+    tiny_perms = [e for e in tiny if e.op == "collective-permute"]
+    assert len(tiny_perms) == 2      # one un-split step per hop
+    assert all(e.nbytes < C.MIN_RING_CHUNK_BYTES for e in tiny_perms)
+
+
+# ---------------------------------------------------------------------------
+# Runnable ppermute ring collectives vs fused one-shots
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tp,size", [(2, 96), (4, 130), (8, 1024)])
+def test_ring_all_gather_matches_lax(tp, size):
+    x = jnp.asarray(np.random.default_rng(size).standard_normal((tp, size)),
+                    jnp.float32)
+    ring = jax.vmap(lambda v: C.ring_all_gather(v, MODEL_AXIS),
+                    axis_name=MODEL_AXIS)(x)
+    fused = jax.vmap(lambda v: jax.lax.all_gather(v, MODEL_AXIS),
+                     axis_name=MODEL_AXIS)(x)
+    np.testing.assert_array_equal(np.asarray(ring), np.asarray(fused))
+
+
+@pytest.mark.parametrize("tp,size", [(2, 64), (4, 130), (8, 1000)])
+def test_ring_reduce_scatter_matches_psum_slice(tp, size):
+    rng = np.random.default_rng(tp * size)
+    x = jnp.asarray(rng.standard_normal((tp, size)), jnp.float32)
+    out = np.asarray(jax.vmap(lambda v: C.ring_reduce_scatter(v, MODEL_AXIS),
+                              axis_name=MODEL_AXIS)(x))
+    total = np.zeros((-(-size // tp)) * tp, np.float32)
+    total[:size] = np.asarray(jnp.sum(x, 0))
+    per = total.reshape(tp, -1)
+    np.testing.assert_allclose(out, per, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits,tp", [(8, 4), (4, 2)])
+def test_ring_quantized_psum_error_bound(bits, tp):
+    """The runnable quantized ring requantizes at every forward step, so
+    its error bound is (n-1) per-step quantizations + the final one —
+    looser than the two-shot quantized_psum but still linear in absmax."""
+    rng = np.random.default_rng(bits + tp)
+    x = jnp.asarray(rng.standard_normal((tp, 777)) * 2.0, jnp.float32)
+    exact = np.asarray(jnp.sum(x, 0))
+    out = np.asarray(jax.vmap(
+        lambda v: C.ring_quantized_psum(v, MODEL_AXIS, bits=bits),
+        axis_name=MODEL_AXIS)(x))
+    np.testing.assert_allclose(out[0], out[1], atol=0, rtol=0)
+    levels = 127 if bits == 8 else 7
+    bound = np.abs(np.asarray(x)).max() * (2 * tp + 1) / levels
+    assert np.abs(out[0] - exact).max() <= bound + 1e-6
+
+
+def test_dequant_accum_kernel_matches_ref():
+    from repro.kernels.quant_collectives import (dequant_accum_absmax,
+                                                 quantize_absmax)
+    from repro.kernels.ref import dequant_accum_ref
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(1111), jnp.float32)
+    acc = jnp.asarray(rng.standard_normal(1111), jnp.float32)
+    q, s = quantize_absmax(x, interpret=True)
+    y_k = dequant_accum_absmax(q, s, acc, interpret=True)
+    y_r = dequant_accum_ref(q, s, acc)
+    # 1-ulp headroom: the jitted kernel contracts the mul-add to an FMA
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               atol=1e-6, rtol=1e-6)

@@ -167,20 +167,22 @@ def test_prefix_register_match_share():
 
 
 def test_page_hashes_one_pass_chain():
-    """The one-pass hasher (single tobytes + memoryview walk) must equal
-    the definitional chain digest, its prefix property must hold (the
-    capped admission match reuses a slice of the full-prompt digests),
-    and the precomputed-hashes fast paths of match/register must be
-    indistinguishable from hashing in place."""
+    """The vectorized hasher's prefix property must hold (the capped
+    admission match reuses a slice of the full-prompt digests), and the
+    precomputed-hashes fast paths of match/register must be
+    indistinguishable from hashing in place.  The reference
+    `page_hashes_chain` must equal the definitional blake2b chain."""
     import hashlib
+    from repro.runtime.paging import page_hashes_chain
     toks = np.arange(23, dtype=np.int64)
     got = page_hashes(toks, 4)
     assert len(got) == 5                          # 23 // 4 full pages
+    assert len(set(got)) == 5 and all(len(h) == 16 for h in got)
     h = b""
-    for j in range(5):
+    for j, ref in enumerate(page_hashes_chain(toks, 4)):
         h = hashlib.blake2b(
             h + toks[4 * j:4 * (j + 1)].tobytes(), digest_size=16).digest()
-        assert got[j] == h
+        assert ref == h
     # chain-prefix property: digests of a capped prompt are a prefix of
     # the full prompt's digests (hash once per admission relies on this)
     assert page_hashes(toks[:12], 4) == got[:3]
@@ -193,6 +195,47 @@ def test_page_hashes_one_pass_chain():
     assert m == pool.match_prefix(None, hashes=got)   # precomputed
     assert len(m) == 4
     pool.check()
+
+
+def test_page_hashes_equality_semantics_locked_to_chain():
+    """The vectorized hasher must induce the SAME equality relation as
+    the blake2b chain oracle: equal prefixes -> equal digests, and a
+    divergence at page j breaks digests j onward.  Randomized trials
+    compare the per-page equality pattern of (original, mutated) prompt
+    pairs under both hashers — the only property the prefix index and
+    prefix-affinity routing consume."""
+    from repro.runtime.paging import page_hashes_chain
+    rng = np.random.default_rng(7)
+    for trial in range(120):
+        ps = int(rng.integers(1, 9))
+        n = int(rng.integers(0, 6))
+        extra = int(rng.integers(0, ps))
+        a = rng.integers(0, 50_000, n * ps + extra).astype(np.int32)
+        b = a.copy()
+        if n and rng.random() < 0.7:
+            j = int(rng.integers(0, n * ps))
+            b[j] = (b[j] + 1 + int(rng.integers(0, 100))) % 50_000
+        ha, hb = page_hashes(a, ps), page_hashes(b, ps)
+        ca, cb = page_hashes_chain(a, ps), page_hashes_chain(b, ps)
+        assert len(ha) == len(ca) == n
+        assert ([x == y for x, y in zip(ha, hb)]
+                == [x == y for x, y in zip(ca, cb)]), (trial, ps)
+    # order sensitivity: swapping two whole pages changes the digest of
+    # every prefix that covers both (position-keyed weights, not a bag)
+    t = rng.integers(0, 32_000, 8 * 16).astype(np.int32)
+    u = t.copy()
+    u[0:16], u[16:32] = t[16:32].copy(), t[0:16].copy()
+    assert page_hashes(t, 16)[1:] != page_hashes(u, 16)[1:]
+    # a prefix and its zero-extension never collide (boundary re-mix
+    # folds the prefix length in)
+    z = np.zeros(3 * 4, np.int32)
+    assert len(set(page_hashes(z, 4))) == 3
+    # odd weights: any single-token delta flips the covering digest
+    # deterministically, exercised across the weight-cache growth path
+    big = rng.integers(0, 32_000, 10_000).astype(np.int32)
+    mut = big.copy()
+    mut[9_990] += 2
+    assert page_hashes(big, 16)[-1] != page_hashes(mut, 16)[-1]
 
 
 def test_admission_hashes_prompt_once():

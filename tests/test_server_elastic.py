@@ -347,7 +347,7 @@ def test_ledger_spd_byte_accounting():
         with collective_ledger() as led:
             fn = simtp.make_logits_fn(cfg, plan, tp, q_chunk=64)
             fn(split, batch_tokens, None)
-        return sum(n for op, ax, n in led if op == "all-reduce")
+        return sum(e.nbytes for e in led if e.op == "all-reduce")
 
     full = led_for(SPDPlanConfig.none(cfg.n_layers))
     spd = led_for(SPDPlanConfig.full(cfg.n_layers))
