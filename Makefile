@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-cov test-soak lint bench-smoke example-smoke spec-smoke \
-	backend-parity paged-parity cluster-smoke overlap-smoke
+	backend-parity paged-parity cluster-smoke overlap-smoke obs-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -47,6 +47,12 @@ spec-smoke:
 # efficiency > 1.5x (docs/cluster.md)
 cluster-smoke:
 	$(PY) scripts/cluster_smoke.py
+
+# observability smoke: serve CLI with --metrics-json/--trace must emit
+# the required TTFT/TPOT/SPD/comm metrics (present, non-negative) and a
+# Perfetto trace with >= 1 span per expected track (docs/observability.md)
+obs-smoke:
+	$(PY) scripts/obs_smoke.py
 
 # registry-driven backend parity sweep: every registered parallel
 # backend, TP in {2,4}, dense + paged, token-identical greedy streams

@@ -1,0 +1,104 @@
+"""Observability smoke for `make obs-smoke` / CI: one serve-CLI run
+with `--metrics-json` + `--trace` must produce
+
+  * a metrics snapshot carrying the request-lifecycle histograms
+    (TTFT / TPOT / queue wait), the SPD drop/quant gauges, and the
+    comm-time split — every required series present and non-negative —
+    plus a parseable Prometheus text exposition of the same registry;
+  * a Chrome/Perfetto-loadable trace with at least one slice on every
+    expected track (request slots, scheduler steps, the comm ledger).
+
+The CLI is exercised through a subprocess on purpose: that is the
+documented operator entry point (docs/observability.md), and it keeps
+the XLA_FLAGS host-device setup identical to a real invocation.
+"""
+import json
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ARGS = ["--arch", "smollm-360m-reduced", "--tp", "2", "--requests", "4",
+        "--max-new", "6", "--engine", "sim", "--cache-len", "64",
+        "--max-batch", "4", "--page-size", "8", "--num-pages", "32",
+        "--spd", "0.5", "--comm", "quant8"]
+
+# series that must exist with a non-negative value after any serve run
+REQUIRED_METRICS = [
+    "ttft_seconds_count", "ttft_seconds_sum",
+    "tpot_seconds_count", "tpot_seconds_sum",
+    "queue_wait_seconds_count",
+    "tokens_generated_total", "requests_submitted_total",
+    "comm_hidden_us_total", "comm_exposed_us_total",
+    "comm_kept_sync_us_total", "spd_quant_bytes_total",
+    "spd_dropped_syncs", "spd_quant_syncs", "spd_drop_ratio",
+    "pool_pages_used",
+]
+
+EXPECTED_TRACKS = ["slot0", "scheduler", "comm"]
+
+
+def main():
+    with tempfile.TemporaryDirectory() as td:
+        mpath = str(Path(td) / "metrics.json")
+        tpath = str(Path(td) / "trace.json")
+        cmd = [sys.executable, "-m", "repro.launch.serve", *ARGS,
+               "--metrics-json", mpath, "--trace", tpath]
+        proc = subprocess.run(cmd, capture_output=True, text=True)
+        if proc.returncode != 0:
+            sys.exit(f"serve CLI failed:\n{proc.stdout}\n{proc.stderr}")
+        report = json.loads(proc.stdout.strip().splitlines()[-1])
+        assert report["completed"] == 4, report
+        assert report["obs"]["metrics_json"] == mpath
+        assert report["obs"]["trace"] == tpath
+
+        # ---- metrics snapshot + Prometheus text ----
+        payload = json.loads(Path(mpath).read_text())
+        snap = payload["metrics"]
+        missing = [k for k in REQUIRED_METRICS if k not in snap]
+        assert not missing, f"metrics missing from snapshot: {missing}"
+        negative = [k for k in REQUIRED_METRICS if snap[k] < 0]
+        assert not negative, f"negative metrics: {negative}"
+        assert snap["ttft_seconds_count"] == 4      # one TTFT per request
+        assert snap["tpot_seconds_count"] == 4
+        assert snap["tokens_generated_total"] == 4 * 6
+        assert snap["comm_exposed_us_total"] > 0
+        assert snap["spd_quant_bytes_total"] > 0    # quant8 kept syncs
+        assert snap["spd_drop_ratio"] > 0           # --spd 0.5 active
+        finished = sum(v for k, v in snap.items()
+                       if k.startswith("requests_finished_total"))
+        assert finished == 4, snap
+        prom = payload["prometheus"]
+        assert "# TYPE ttft_seconds histogram" in prom
+        assert 'ttft_seconds_bucket{le="+Inf"} 4' in prom
+        assert "# TYPE spd_drop_ratio gauge" in prom
+
+        # ---- Perfetto trace ----
+        trace = json.loads(Path(tpath).read_text())
+        events = trace["traceEvents"]
+        names_by_tid = {e["tid"]: e["args"]["name"] for e in events
+                        if e["ph"] == "M" and e["name"] == "thread_name"}
+        spans_per_track = {}
+        for e in events:
+            if e["ph"] == "X":
+                track = names_by_tid[e["tid"]]
+                spans_per_track[track] = spans_per_track.get(track, 0) + 1
+        empty = [t for t in EXPECTED_TRACKS
+                 if spans_per_track.get(t, 0) < 1]
+        assert not empty, (f"tracks without spans: {empty} "
+                           f"(got {spans_per_track})")
+        assert all(e["dur"] >= 0 for e in events if e["ph"] == "X")
+        comm = report["obs"]["comm"]
+        assert spans_per_track["comm"] == comm["entries"]
+
+    print(f"obs-smoke ok: ttft x{int(snap['ttft_seconds_count'])}, "
+          f"tpot x{int(snap['tpot_seconds_count'])}, "
+          f"dropped_syncs={int(snap['spd_dropped_syncs'])}, "
+          f"comm hidden/exposed us="
+          f"{snap['comm_hidden_us_total']:.1f}/"
+          f"{snap['comm_exposed_us_total']:.1f}, "
+          f"tracks={sorted(spans_per_track)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -87,7 +87,9 @@ class LLM:
     def __init__(self, cfg, plan, engine_kind, engine, params, canonical,
                  cache: CacheConfig, *, mesh=None, tp: int, dp: int,
                  q_chunk: int, dp_replicas: int = 1,
-                 router: str = "least-outstanding"):
+                 router: str = "least-outstanding", obs=None):
+        from repro.obs.recorder import NULL_RECORDER
+        self.obs = obs if obs is not None else NULL_RECORDER
         self.cfg = cfg
         self.plan = plan
         self.engine_kind = engine_kind
@@ -125,7 +127,7 @@ class LLM:
              dtype: Optional[str] = None, seed: int = 0, params=None,
              q_chunk: int = 64, mesh=None, spec=None,
              dp_replicas: int = 1,
-             router: str = "least-outstanding") -> "LLM":
+             router: str = "least-outstanding", obs=None) -> "LLM":
         """Load `arch` (config name or ModelConfig) onto an engine.
 
         engine     a parallel-backend registry name
@@ -164,6 +166,11 @@ class LLM:
         router     cluster routing policy name when dp_replicas > 1
                    (`repro.cluster.route_policy_names()`): "round-robin"
                    | "least-outstanding" | "prefix-affinity".
+        obs        a `repro.obs.Recorder` to instrument every scheduler,
+                   router, page pool, and drafter this LLM builds
+                   (metrics + request-lifecycle tracing — docs/
+                   observability.md).  Default: the zero-overhead null
+                   recorder; observability never changes tokens.
         """
         import jax
         from repro.configs import get_config
@@ -200,7 +207,7 @@ class LLM:
                             prefill_chunk=prefill_chunk)
         llm = cls(cfg, plan, engine, None, None, canonical, cache,
                   mesh=mesh, tp=tp, dp=dp, q_chunk=q_chunk,
-                  dp_replicas=dp_replicas, router=router)
+                  dp_replicas=dp_replicas, router=router, obs=obs)
         llm._build_engine()
         if spec is not None:
             llm.enable_spec(spec)
@@ -319,12 +326,13 @@ class LLM:
             if n > 1:
                 return self.make_cluster(n, policy=policy, cache=cc)
             return Scheduler(self.engine, self.params, cc,
-                             spec=self._spec_state(cc))
+                             spec=self._spec_state(cc), obs=self.obs)
         if self._sched is None:
             self._sched = (
                 self.make_cluster() if self.dp_replicas > 1
                 else Scheduler(self.engine, self.params, self.cache,
-                               spec=self._spec_state(self.cache)))
+                               spec=self._spec_state(self.cache),
+                               obs=self.obs))
         return self._sched
 
     # ---------------- cluster serving (docs/cluster.md) ----------------
@@ -345,7 +353,7 @@ class LLM:
         def factory(rid: int) -> "Replica":
             return Replica(
                 rid, Scheduler(self.engine, self.params, cc,
-                               spec=self._spec_state(cc)),
+                               spec=self._spec_state(cc), obs=self.obs),
                 comm=getattr(self.plan, "comm", None))
         return factory
 
@@ -362,7 +370,7 @@ class LLM:
         factory = self.replica_factory(cache)
         return ClusterRouter([factory(rid) for rid in range(n)],
                              policy=policy or self.router_policy,
-                             warmup=warmup)
+                             warmup=warmup, obs=self.obs)
 
     def _submit(self, prompts, sampling) -> List[Request]:
         prompts = _as_prompts(prompts)
@@ -376,7 +384,10 @@ class LLM:
             reqs.append(req)
         for req in reqs:              # all-or-nothing: validate the whole
             sched.validate(req)       # batch before enqueueing any of it
-        for req in reqs:
+        stamp = getattr(sched, "note_submit", None)   # ClusterRouter's
+        for req in reqs:              # replicas stamp at routed enqueue
+            if stamp is not None:
+                stamp(req)
             sched.queue.append(req)   # already validated above
         return reqs
 

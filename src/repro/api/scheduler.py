@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.sampling import SamplingParams
+from repro.obs.recorder import NULL_RECORDER
 from repro.runtime import sampling as RS
 from repro.runtime.paging import PagePool
 from repro.spec.verify import (accept_greedy, accept_speculative,
@@ -67,6 +68,9 @@ __all__ = ["CacheConfig", "Request", "Scheduler", "InvalidRequestError",
            "SchedulerError", "DenseKVCacheManager", "PagedKVCacheManager"]
 
 _GREEDY = SamplingParams()
+
+# spec acceptance-rate histogram layout (a 0..1 ratio, not seconds)
+_ACCEPT_BUCKETS = (0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
 
 
 class SchedulerError(RuntimeError):
@@ -414,7 +418,8 @@ class PagedKVCacheManager:
 class Scheduler:
     """Continuous batching over either cache layout (see module doc)."""
 
-    def __init__(self, engine, params, cache: CacheConfig, spec=None):
+    def __init__(self, engine, params, cache: CacheConfig, spec=None,
+                 obs=None):
         self.engine = engine
         self.params = params
         self.cache = cache
@@ -440,6 +445,54 @@ class Scheduler:
         self.spec_drafted = 0
         self.spec_accepted = 0
         self.spec_committed = 0       # tokens committed by spec rounds
+        # observability (repro.obs): the default NULL_RECORDER makes
+        # every hook below a no-op — timestamps are only read and
+        # request metadata only kept when a live Recorder is attached,
+        # so disabled observability is zero-cost and cannot perturb
+        # tokens (hooks never touch device arrays either way)
+        self.obs = NULL_RECORDER
+        self._req_meta: Dict[int, dict] = {}   # id(Request) -> times
+        if obs is not None:
+            self.set_obs(obs)
+
+    def set_obs(self, obs):
+        """Attach/detach a recorder on the scheduler and everything it
+        drives (page pool, drafter).  Returns the previous recorder —
+        replicas swap in NULL_RECORDER around warm-up so synthetic
+        requests never pollute metrics or traces."""
+        prev = self.obs
+        self.obs = obs if obs is not None else NULL_RECORDER
+        if self.kv.paged:
+            self.kv.pool.obs = self.obs
+        if self.spec is not None:
+            self.spec.drafter.obs = self.obs
+        return prev
+
+    def metrics(self) -> dict:
+        """Scheduler-level stats (always available) plus, with a live
+        recorder attached, the flat metrics-registry snapshot under
+        `"registry"` (docs/observability.md)."""
+        out = {
+            "queue_depth": len(self.queue),
+            "active_slots": len(self._active()),
+            "completed": len(self.completed),
+            "n_preemptions": self.n_preemptions,
+            "prefix_queries": self.kv.prefix_queries,
+            "prefix_hits": self.kv.prefix_hits,
+            "prefix_tokens_reused": self.kv.prefix_tokens_reused,
+        }
+        if self.kv.paged:
+            pool = self.kv.pool
+            out["pool_pages_used"] = (pool.num_pages - len(pool.free)
+                                      - len(pool.cached))
+            out["pool_high_water"] = pool.high_water
+        if self.spec is not None:
+            out["spec_rounds"] = self.spec_rounds
+            out["spec_acceptance"] = self.spec_acceptance
+            out["spec_tokens_per_step"] = self.spec_tokens_per_step
+        if self.obs.enabled:
+            out["registry"] = self.obs.snapshot()
+        return out
 
     # legacy attribute names (pre-facade Server/PagedServer)
     @property
@@ -464,7 +517,20 @@ class Scheduler:
         """Validate and enqueue.  Raises InvalidRequestError on requests
         that could never run (instead of shape failures downstream)."""
         self.validate(req)
+        self.note_submit(req)
         self.queue.append(req)
+
+    def note_submit(self, req: Request):
+        """Stamp a request's submission time (queue-wait / TTFT base).
+        `submit()` calls this; callers that enqueue directly (the facade
+        batches validation) should call it themselves — un-stamped
+        requests are back-filled at admission with zero queue wait."""
+        if self.obs.enabled:
+            t = self.obs.now()
+            meta = self._req_meta.setdefault(
+                id(req), {"submit0": t, "first": None})
+            meta["submit"] = t
+            self.obs.inc("requests_submitted_total")
 
     def validate(self, req: Request):
         """Admission checks only — raises InvalidRequestError, enqueues
@@ -530,6 +596,15 @@ class Scheduler:
             if m is None:
                 break          # head-of-line: wait for pages, stay FIFO
             self.queue.popleft()
+            if self.obs.enabled:
+                t_admit = self.obs.now()
+                meta = self._req_meta.setdefault(
+                    id(req),
+                    {"submit0": t_admit, "submit": t_admit, "first": None})
+                wait = t_admit - meta["submit"]
+                self.obs.observe("queue_wait_seconds", wait)
+                self.obs.complete(f"slot{b}", "queue", meta["submit"],
+                                  wait, uid=req.uid)
             try:
                 if m:
                     # warm admission: shared prefix pages are already
@@ -552,6 +627,21 @@ class Scheduler:
             self.cur[b, 0] = first
             self.admit_seq[b] = self._seq
             self._seq += 1
+            if self.obs.enabled:
+                t_first = self.obs.now()
+                meta["serve_start"] = t_admit
+                self.obs.complete(f"slot{b}", "prefill", t_admit,
+                                  t_first - t_admit, uid=req.uid,
+                                  tokens=s - m, cached=m)
+                if meta["first"] is None:
+                    # TTFT is measured once, from the ORIGINAL submit
+                    # (re-admissions after preemption don't re-count)
+                    meta["first"] = t_first
+                    self.obs.observe("ttft_seconds",
+                                     t_first - meta["submit0"])
+                if m:
+                    self.obs.inc("prefix_cache_hits_total")
+                    self.obs.inc("prefix_tokens_reused_total", m)
             if not m:
                 self.kv.insert(caches1, b)
             self.kv.register_prefix(b, toks)
@@ -585,6 +675,23 @@ class Scheduler:
     def _finish(self, b: int):
         req = self.slots[b]
         req.done = True
+        if self.obs.enabled:
+            t = self.obs.now()
+            meta = self._req_meta.pop(id(req), None)
+            reason = req.finish_reason or "stop"
+            self.obs.inc("requests_finished_total", reason=reason)
+            self.obs.inc("tokens_generated_total", len(req.out))
+            if meta is not None:
+                if meta.get("first") is not None and len(req.out) > 1:
+                    # time-per-output-token over the decode tail (the
+                    # first token is TTFT's, not TPOT's)
+                    self.obs.observe(
+                        "tpot_seconds",
+                        (t - meta["first"]) / (len(req.out) - 1))
+                t0 = meta.get("serve_start", t)
+                self.obs.complete(f"slot{b}", "serve", t0, t - t0,
+                                  uid=req.uid, tokens=len(req.out),
+                                  reason=reason)
         self.completed[req.uid] = req
         self.slots[b] = None
         self.pos[b] = 0
@@ -609,6 +716,7 @@ class Scheduler:
         for r in reqs:
             if self.completed.get(r.uid) is r:
                 del self.completed[r.uid]
+            self._req_meta.pop(id(r), None)
 
     def _grow_active(self, active: List[int], upto_fn) -> List[int]:
         """Paged growth with preemption-by-eviction, shared by decode
@@ -642,6 +750,17 @@ class Scheduler:
         self.pos[v] = 0
         self.queue.appendleft(req)
         self.n_preemptions += 1
+        self.obs.inc("preemptions_total")
+        if self.obs.enabled:
+            t = self.obs.now()
+            self.obs.instant(f"slot{v}", "preempt", uid=req.uid,
+                             n_preempted=req.n_preempted)
+            meta = self._req_meta.get(id(req))
+            if meta is not None:
+                t0 = meta.get("serve_start", t)
+                self.obs.complete(f"slot{v}", "serve", t0, t - t0,
+                                  uid=req.uid, preempted=True)
+                meta["submit"] = t       # queue wait restarts at requeue
         return v
 
     # ---------------- main loop ----------------
@@ -752,11 +871,13 @@ class Scheduler:
                     toks[b] = int(rngs[b].choice(q.shape[0], p=q))
             return toks
 
-        draft_toks, _ = dr.draft(ctx, start, k, sample_fn,
-                                 greedy=all_greedy)
+        with self.obs.span("spec", "draft", k=k, rows=len(active)):
+            draft_toks, _ = dr.draft(ctx, start, k, sample_fn,
+                                     greedy=all_greedy)
         ver = np.concatenate([self.cur, draft_toks], axis=1)   # (n, k+1)
-        lg = self.kv.verify(self.params, jnp.asarray(ver),
-                            jnp.asarray(self.pos))
+        with self.obs.span("spec", "verify", rows=len(active)):
+            lg = self.kv.verify(self.params, jnp.asarray(ver),
+                                jnp.asarray(self.pos))
         if all_greedy:
             # mirror the fused-greedy decode path: only the (n, k+1)
             # argmax ids come to host, never the full-vocab logits
@@ -782,6 +903,12 @@ class Scheduler:
             self.spec_drafted += k
             self.spec_accepted += n_acc
             self.spec_row_rounds += 1
+            if self.obs.enabled:
+                self.obs.inc("spec_drafted_total", k)
+                self.obs.inc("spec_accepted_total", n_acc)
+                self.obs.metrics.observe("spec_acceptance_ratio",
+                                         n_acc / k,
+                                         buckets=_ACCEPT_BUCKETS)
             budget = self._max_new(req) - len(req.out)
             done_b = False
             for tok in committed[:budget]:
@@ -808,6 +935,19 @@ class Scheduler:
         """Admit, grow (paged), one decode step for all active slots.
         With speculation enabled the decode step becomes a draft/verify
         round that can commit up to k+1 tokens per request."""
+        if not self.obs.enabled:
+            return self._step()
+        with self.obs.span("scheduler", "step") as s:
+            out = self._step()
+            act = len(self._active())
+            s["active"] = act
+            s["queued"] = len(self.queue)
+            self.obs.gauge("active_slots", act)
+            self.obs.gauge("queue_depth", len(self.queue))
+            self.obs.counter_event("scheduler", "active_slots", act)
+        return out
+
+    def _step(self) -> bool:
         self._admit()
         active = self._active()
         if not active:

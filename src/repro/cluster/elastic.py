@@ -61,6 +61,11 @@ class ScaleEvent:
     action: str                    # "up" | "down"
     rid: int                       # replica added / drained
     n_replicas: int                # live replicas after the operation
+    # appended with defaults so legacy positional construction binds
+    # unchanged: WHY the operation fired and the backlog-per-routable-
+    # replica signal at that instant (tokens; 0.0 for idle shrink)
+    reason: str = ""
+    backlog: float = 0.0
 
 
 class ElasticScaler:
@@ -75,7 +80,10 @@ class ElasticScaler:
                  replica_factory: Callable[[int], Replica],
                  cfg: Optional[ElasticConfig] = None, *,
                  n_devices: Optional[int] = None, tp: int = 1,
-                 warmup: bool = True):
+                 warmup: bool = True, obs=None):
+        from repro.obs.recorder import NULL_RECORDER
+        self.obs = (obs if obs is not None
+                    else getattr(router, "obs", None) or NULL_RECORDER)
         cfg = cfg or ElasticConfig()
         if n_devices is not None:
             dp, _ = choose_mesh_shape(n_devices, tp)   # typed errors
@@ -119,12 +127,13 @@ class ElasticScaler:
             return None
 
         n_live = router.n_replicas
-        if (n_live < cfg.max_replicas
-                and self._backlog_per_replica() >= cfg.scale_up_backlog):
+        bpr = self._backlog_per_replica()
+        if n_live < cfg.max_replicas and bpr >= cfg.scale_up_backlog:
             rep = self.replica_factory(self._next_rid)
             self._next_rid += 1
             router.add_replica(rep, warmup=self.warmup)
-            return self._record("up", rep.rid)
+            return self._record("up", rep.rid, reason="backlog",
+                                backlog=bpr)
 
         if (n_live > cfg.min_replicas
                 and self._idle_rounds >= cfg.scale_down_idle):
@@ -133,12 +142,19 @@ class ElasticScaler:
             rid = max(router.replicas)
             router.drain_replica(rid)
             self._idle_rounds = 0
-            return self._record("down", rid)
+            return self._record("down", rid, reason="idle")
         return None
 
-    def _record(self, action: str, rid: int) -> ScaleEvent:
+    def _record(self, action: str, rid: int, reason: str = "",
+                backlog: float = 0.0) -> ScaleEvent:
         self._last_op_round = self.router.rounds
         ev = ScaleEvent(round=self.router.rounds, action=action, rid=rid,
-                        n_replicas=self.router.n_replicas)
+                        n_replicas=self.router.n_replicas,
+                        reason=reason, backlog=backlog)
         self.events.append(ev)
+        self.obs.inc("cluster_scale_ops_total", action=action)
+        if self.obs.enabled:
+            self.obs.instant("cluster", f"scale_{action}", rid=rid,
+                             reason=reason, backlog=round(backlog, 2),
+                             n_replicas=ev.n_replicas, round=ev.round)
         return ev

@@ -100,6 +100,7 @@ class Replica:
         prefill + the decode step), then restore the scheduler to the
         canonical fresh state so warm-up is invisible to serving."""
         from repro.api.scheduler import Request
+        from repro.obs.recorder import NULL_RECORDER
 
         self.state = WARMING
         sched = self.sched
@@ -110,8 +111,16 @@ class Replica:
                       % max(vocab - 1, 1)).astype(np.int32)
         req = Request(uid=_WARMUP_UID, prompt=np.asarray(prompt, np.int32),
                       max_new=2)
-        sched.submit(req)
-        sched.run(max_steps=64)
+        # warm-up must be observability-invisible too: the throwaway
+        # request would otherwise pollute TTFT/trace with compile time
+        prev_obs = (sched.set_obs(NULL_RECORDER)
+                    if hasattr(sched, "set_obs") else None)
+        try:
+            sched.submit(req)
+            sched.run(max_steps=64)
+        finally:
+            if prev_obs is not None:
+                sched.set_obs(prev_obs)
         # canonical restore: identical to a freshly constructed scheduler
         # (pool reset locks free-list determinism — runtime/paging.py)
         sched.completed.clear()
@@ -214,11 +223,16 @@ class Replica:
         return digest in self.sched.pool.prefix_index
 
     def stats(self) -> dict:
-        return {"state": self.state, "healthy": self.healthy,
-                "routed": self.n_routed, "rounds": self.rounds,
-                "busy_rounds": self.busy_rounds,
-                "utilization": round(self.utilization, 4),
-                "active_slots": self.active_slots,
-                "outstanding_tokens": self.outstanding_tokens,
-                "tokens_out": self.tokens_out(),
-                "preemptions": self.sched.n_preemptions}
+        out = {"state": self.state, "healthy": self.healthy,
+               "routed": self.n_routed, "rounds": self.rounds,
+               "busy_rounds": self.busy_rounds,
+               "utilization": round(self.utilization, 4),
+               "active_slots": self.active_slots,
+               "outstanding_tokens": self.outstanding_tokens,
+               "tokens_out": self.tokens_out(),
+               "preemptions": self.sched.n_preemptions}
+        if self.sched.cache.paged:
+            out["pool_high_water"] = self.sched.pool.high_water
+            out["prefix_queries"] = self.sched.kv.prefix_queries
+            out["prefix_hits"] = self.sched.kv.prefix_hits
+        return out

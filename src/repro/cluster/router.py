@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.cluster.replica import (CREATED, DRAINING, READY, Replica,
                                    STOPPED)
+from repro.obs.recorder import NULL_RECORDER
 from repro.runtime.elastic import ClusterConfigError
 
 __all__ = ["ClusterRouter", "RoutePolicy", "register_policy",
@@ -208,7 +209,8 @@ class ClusterRouter:
     """
 
     def __init__(self, replicas=(), policy="least-outstanding",
-                 warmup: bool = True):
+                 warmup: bool = True, obs=None):
+        self.obs = obs if obs is not None else NULL_RECORDER
         self.policy = make_policy(policy)
         self.replicas: Dict[int, Replica] = {}
         self.retired: Dict[int, Replica] = {}
@@ -280,6 +282,11 @@ class ClusterRouter:
             rep.enqueue(req)
             self.n_routed += 1
             n += 1
+            if self.obs.enabled:
+                self.obs.inc("cluster_routed_total", replica=rep.rid,
+                             policy=self.policy.name)
+                self.obs.instant("cluster", "route", uid=req.uid,
+                                 replica=rep.rid)
         return n
 
     def step(self) -> bool:
@@ -291,6 +298,9 @@ class ClusterRouter:
             return False
         self.route_pending()
         self.rounds += 1
+        if self.obs.enabled:
+            self.obs.gauge("cluster_replicas", len(self.replicas))
+            self.obs.gauge("cluster_queue_depth", len(self.queue))
         self.last_step_times = {}
         progressed = False
         for rep in list(self.replicas.values()):

@@ -25,7 +25,8 @@ from repro.core import blocks as B
 from repro.core.layer_kinds import LayerKind, layer_kinds, plan_segments
 from repro.models.common import layernorm, rmsnorm
 from repro.parallel.collectives import (
-    MODEL_AXIS, column_entry, ledger_scale, pmax, shared_param, sync_output)
+    MODEL_AXIS, column_entry, comm_context, ledger_scale, pmax, shared_param,
+    sync_output)
 from repro.parallel.layout import REPLICATED, make_gqa_layout
 
 
@@ -283,7 +284,7 @@ def forward_seq(cfg, stacked, plan: SPDPlanConfig, tokens, *, tp, axis=MODEL_AXI
 
         xs = (sp, flags) if dual_flags is not None else sp
 
-        with ledger_scale(length):
+        with ledger_scale(length), comm_context(block=start, phase="prefill"):
             x, (auxs, cache) = jax.lax.scan(body, x, xs)
         aux_total = aux_total + jnp.sum(auxs)
         caches.append(cache)
@@ -403,7 +404,7 @@ def decode_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
                 tp=tp, shard_idx=shard_idx, axis=axis, comm=comm)
             return out, new_cache
 
-        with ledger_scale(length):
+        with ledger_scale(length), comm_context(block=start, phase="decode"):
             x, nc = jax.lax.scan(body, x, (sp, cache_seg))
         new_caches.append(nc)
     x = (layernorm(x, stacked["lnf"]["w"], stacked["lnf"]["b"], cfg.norm_eps)
@@ -568,7 +569,7 @@ def prefill_chunk(cfg, stacked, plan, tokens, start, caches, *, tp,
                                   axis=axis, q_chunk=q_chunk, comm=comm)
             return out, nc
 
-        with ledger_scale(length):
+        with ledger_scale(length), comm_context(block=s0, phase="prefill"):
             x, nc = jax.lax.scan(body, x, (sp, cache_seg))
         new_caches.append(nc)
     x = (layernorm(x, stacked["lnf"]["w"], stacked["lnf"]["b"], cfg.norm_eps)
@@ -630,7 +631,7 @@ def verify_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
                                   axis=axis, q_chunk=q_chunk, comm=comm)
             return out, nc
 
-        with ledger_scale(length):
+        with ledger_scale(length), comm_context(block=s0, phase="verify"):
             x, nc = jax.lax.scan(body, x, (sp, cache_seg))
         new_caches.append(nc)
     x = (layernorm(x, stacked["lnf"]["w"], stacked["lnf"]["b"], cfg.norm_eps)
@@ -689,7 +690,7 @@ def paged_step(cfg, stacked, plan, tokens, pos, caches, page_table, *, tp,
                                    shard_idx=shard_idx, axis=axis, comm=comm)
             return out, nc
 
-        with ledger_scale(length):
+        with ledger_scale(length), comm_context(block=s0, phase="decode"):
             x, nc = jax.lax.scan(body, x, (sp, cache_seg))
         new_caches.append(nc)
     x = (layernorm(x, stacked["lnf"]["w"], stacked["lnf"]["b"], cfg.norm_eps)

@@ -38,6 +38,15 @@ in one multi-token forward — greedy output is token-identical to plain
 decoding; the report gains acceptance-rate and tokens/step fields.
 (The "tiered" draft preset needs calibration data; use
 ``LLM.enable_spec`` from Python.)
+
+Observability (docs/observability.md): ``--metrics-json PATH`` writes
+the run's metric snapshot (TTFT/TPOT/queue-wait histograms, SPD
+drop/quant gauges, comm hidden/exposed time) as a flat dict plus a
+Prometheus text exposition; ``--trace PATH`` writes a Chrome/Perfetto
+trace (load it at https://ui.perfetto.dev) with per-slot request
+lifecycle, scheduler step, spec round, cluster, and comm-ledger tracks.
+Either flag turns the instrumentation on; greedy outputs stay
+bit-identical with it on or off.
 """
 import argparse
 import json
@@ -96,6 +105,14 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--sample-seed", type=int, default=0)
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics snapshot (flat dict + "
+                         "Prometheus text) to this path "
+                         "(docs/observability.md)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace_event JSON of "
+                         "the run (request lifecycle, scheduler steps, "
+                         "spec rounds, comm ledger) to this path")
     args = ap.parse_args()
 
     n_dev = args.tp * args.dp
@@ -104,6 +121,14 @@ def main():
 
     import numpy as np
     from repro.api import LLM, SamplingParams, SpecConfig
+
+    # observability (docs/observability.md): an isolated registry +
+    # wall-clock tracer, wired through every scheduler / pool / router
+    # the facade builds.  obs=None keeps the zero-overhead null recorder.
+    obs = None
+    if args.metrics_json or args.trace:
+        from repro.obs import MetricsRegistry, Recorder, Tracer
+        obs = Recorder(MetricsRegistry(), Tracer())
 
     paged = args.page_size > 0 and args.num_pages > 0
     llm = LLM.load(
@@ -116,7 +141,7 @@ def main():
         prefill_chunk=args.prefill_chunk or None, q_chunk=64,
         dp_replicas=args.replicas, router=args.router,
         spec=(SpecConfig(k=args.spec_k, draft=args.spec_draft)
-              if args.spec_k > 0 else None))
+              if args.spec_k > 0 else None), obs=obs)
 
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, llm.cfg.vocab_size,
@@ -125,7 +150,18 @@ def main():
     sampling = SamplingParams(
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         seed=args.sample_seed, max_new=args.max_new)
-    outs = llm.generate(prompts, sampling)
+    if obs is not None:
+        # comm entries record at TRACE time (first compilation), so the
+        # ledger must be open around generate's first forward passes
+        from repro.parallel.collectives import (LatencyModel,
+                                                collective_ledger)
+        lat = LatencyModel()
+        with collective_ledger(latency=lat, tp=args.tp) as comm_entries:
+            outs = llm.generate(prompts, sampling)
+        comm_agg = obs.record_comm(comm_entries, lat, tp=args.tp,
+                                   overlap=(args.engine == "overlap"))
+    else:
+        outs = llm.generate(prompts, sampling)
     sched = llm.serve()
     out = {
         "completed": sum(o.finished for o in outs),
@@ -154,9 +190,36 @@ def main():
                         "preemptions": sum(s.n_preemptions
                                            for s in scheds),
                         "free_pages": sum(s.pool.num_free
-                                          for s in scheds)}
+                                          for s in scheds),
+                        "pool_high_water": max(s.pool.high_water
+                                               for s in scheds),
+                        "prefix_hits": sum(s.kv.prefix_hits
+                                           for s in scheds)}
     if cluster:
         out["cluster"] = sched.stats()
+
+    if obs is not None:
+        # SPD plan shape as gauges, so the Prometheus snapshot carries
+        # the drop/quant configuration next to the comm-time counters
+        plan = llm.plan
+        qm = plan.qmodes or ("exact",) * len(plan.drop_mask)
+        obs.gauge("spd_dropped_syncs", plan.n_dropped)
+        obs.gauge("spd_quant_syncs",
+                  sum(1 for d, m in zip(plan.drop_mask, qm)
+                      if not d and m != "exact"))
+        obs.gauge("spd_drop_ratio", plan.fraction)
+        out["obs"] = {"comm": {k: round(v, 2) if isinstance(v, float)
+                               else v for k, v in comm_agg.items()},
+                      "tracks": obs.tracer.tracks()}
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as f:
+                json.dump({"metrics": obs.snapshot(),
+                           "prometheus": obs.metrics.to_prometheus()},
+                          f, indent=1)
+            out["obs"]["metrics_json"] = args.metrics_json
+        if args.trace:
+            obs.tracer.save(args.trace)
+            out["obs"]["trace"] = args.trace
     print(json.dumps(out))
 
 

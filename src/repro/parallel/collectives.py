@@ -71,6 +71,18 @@ class CommEntry(NamedTuple):
                          body traced once but executed k times without
                          knowing k).  Launches never hide — they are the
                          floor under the exposed time.
+    block / phase        attribution labels set by the active
+                         `comm_context` when the collective traced:
+                         `block` is the model block index the sync
+                         belongs to (-1 = unattributed; a scanned
+                         segment's entries carry the segment's FIRST
+                         block index, since the body traces once at
+                         `ledger_scale`-multiplied cost), `phase` is
+                         the forward flavor ("prefill" | "decode" |
+                         "verify" | "", set by core/model.py).  Both
+                         default to the unattributed values, so every
+                         pre-existing positional construction and
+                         6-field unpacking keeps working.
     """
 
     op: str
@@ -79,6 +91,8 @@ class CommEntry(NamedTuple):
     overlappable: bool = False
     est_us: float = 0.0
     fixed_us: float = 0.0
+    block: int = -1
+    phase: str = ""
 
 
 def ring_wire_bytes(op: str, payload_bytes: float, n: int) -> float:
@@ -219,6 +233,42 @@ def ledger_scale(k: int):
         _LEDGER.scale = prev
 
 
+class _CommCtx(threading.local):
+    """Trace-time attribution labels for ledger entries (CommEntry
+    block/phase)."""
+
+    def __init__(self):
+        self.block: int = -1
+        self.phase: str = ""
+
+_COMM_CTX = _CommCtx()
+
+
+@contextmanager
+def comm_context(block: Optional[int] = None, phase: Optional[str] = None):
+    """Label every collective traced inside with a block index and/or a
+    phase name (CommEntry.block / .phase).  The model wraps each
+    segment scan in `comm_context(block=start)` and each forward flavor
+    in `comm_context(phase=...)` (core/model.py), so bench curves and
+    the obs comm track can attribute wire bytes per layer and per
+    serving phase instead of per run.  None leaves the outer value in
+    place (contexts nest)."""
+    prev = (_COMM_CTX.block, _COMM_CTX.phase)
+    if block is not None:
+        _COMM_CTX.block = int(block)
+    if phase is not None:
+        _COMM_CTX.phase = str(phase)
+    try:
+        yield
+    finally:
+        _COMM_CTX.block, _COMM_CTX.phase = prev
+
+
+def comm_phase(phase: str):
+    """Shorthand: `comm_context(phase=...)`."""
+    return comm_context(phase=phase)
+
+
 def _append(op: str, axis, nbytes: int, overlappable: bool) -> None:
     name = axis if isinstance(axis, str) else "+".join(axis)
     est = fixed = 0.0
@@ -227,7 +277,8 @@ def _append(op: str, axis, nbytes: int, overlappable: bool) -> None:
             op, nbytes, _LEDGER.tp)
         fixed = _LEDGER.scale * _LEDGER.latency.launch_us
     _LEDGER.active.append(CommEntry(op, name, int(nbytes) * _LEDGER.scale,
-                                    overlappable, est, fixed))
+                                    overlappable, est, fixed,
+                                    _COMM_CTX.block, _COMM_CTX.phase))
 
 
 def _log(op: str, axis, x, *, overlappable: bool = False) -> None:

@@ -63,6 +63,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.recorder import NULL_RECORDER
+
 
 def pages_for(n_tokens: int, page_size: int) -> int:
     """Pages needed to hold n_tokens cache entries."""
@@ -196,6 +198,13 @@ class PagePool:
     max_slots: int
     pages_per_slot: int
 
+    # plain class attributes (not dataclass fields): the observability
+    # recorder the scheduler wires in (repro.obs — the default null
+    # recorder makes every hook a no-op) and the occupancy high-water
+    # mark (pages referenced at peak, reported by replica stats)
+    obs = NULL_RECORDER
+    high_water = 0
+
     def __post_init__(self):
         assert self.num_pages > 0 and self.page_size > 0
         self.reset()
@@ -234,6 +243,7 @@ class PagePool:
             return self.free.pop()
         p, _ = self.cached.popitem(last=False)
         self._deregister(p)
+        self.obs.inc("prefix_cache_evictions_total")
         return p
 
     def _unref(self, p: int):
@@ -272,6 +282,7 @@ class PagePool:
             self.table[slot, i] = p
             self.refs[p] += 1
         self.owned[slot] = target
+        self._note_occupancy()
         return True
 
     def shrink(self, slot: int, n_tokens: int) -> int:
@@ -317,6 +328,15 @@ class PagePool:
         self.cached: "OrderedDict[int, None]" = OrderedDict()
         self.page_hash: Dict[int, bytes] = {}
         self.prefix_index: Dict[bytes, int] = {}
+        self.high_water = 0
+
+    def _note_occupancy(self):
+        """Track peak referenced pages; mirror the live value as a gauge
+        (no-op under the default null recorder)."""
+        used = self.num_pages - len(self.free) - len(self.cached)
+        if used > self.high_water:
+            self.high_water = used
+        self.obs.gauge("pool_pages_used", used)
 
     # ---------------- prefix cache ----------------
 
@@ -350,6 +370,9 @@ class PagePool:
             self.table[slot, i] = p
             self.refs[p] += 1
         self.owned[slot] = len(pages)
+        if pages:
+            self.obs.inc("pages_shared_total", len(pages))
+            self._note_occupancy()
 
     def register_prefix(self, slot: int, tokens,
                         hashes: Optional[List[bytes]] = None):
@@ -390,6 +413,7 @@ class PagePool:
             self.refs[p] -= 1
             self.table[slot, page_idx] = dst
             self.refs[dst] += 1
+            self.obs.inc("cow_copies_total")
             return p, dst
         self._deregister(p)
         return None

@@ -31,6 +31,7 @@ from typing import Optional
 import numpy as np
 
 from repro.config.base import ModelConfig, SPDPlanConfig
+from repro.obs.recorder import NULL_RECORDER
 
 __all__ = ["SpecConfig", "SpecError", "SpecState", "DRAFT_PRESETS",
            "derive_draft_plan", "Drafter", "spec_supported"]
@@ -135,6 +136,9 @@ class Drafter:
     prefix, same KV).
     """
 
+    # observability recorder, wired by Scheduler.set_obs (repro.obs)
+    obs = NULL_RECORDER
+
     def __init__(self, engine, params, max_batch: int, cache_len: int,
                  prefill_chunk: Optional[int] = None):
         self.engine = engine
@@ -156,6 +160,7 @@ class Drafter:
                                  self.cache_len, self.prefill_chunk)
         self.caches = self.engine.insert_slot(self.caches, c1, b)
         self.pos[b] = s
+        self.obs.inc("spec_draft_prefills_total")
 
     def draft(self, ctx, start, k: int, sample_fn, greedy: bool = False):
         """Propose k tokens per row.
@@ -175,6 +180,7 @@ class Drafter:
         None when greedy).
         """
         import jax.numpy as jnp
+        self.obs.inc("spec_draft_rounds_total")
         ctx = np.asarray(ctx, np.int32)
         start = np.asarray(start, np.int32)
         c = ctx.shape[1]

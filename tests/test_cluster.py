@@ -272,3 +272,50 @@ def test_elastic_device_budget_caps_replicas():
     with pytest.raises(ClusterConfigError):
         ElasticScaler(router, mk_replica,
                       ElasticConfig(min_replicas=4), n_devices=4, tp=2)
+
+
+def test_elastic_scale_events_traced():
+    """Scale operations surface as structured cluster-track instants in
+    the SAME order as `ElasticScaler.events`, carrying the decision
+    context (rid, reason, backlog signal) — docs/observability.md."""
+    from repro.obs import MetricsRegistry, Recorder, Tracer, VirtualClock
+
+    obs = Recorder(MetricsRegistry(), Tracer(clock=VirtualClock(tick=1e-3)))
+    router = ClusterRouter([mk_replica(0)], warmup=False, obs=obs)
+    sc = ElasticScaler(router, mk_replica,
+                       ElasticConfig(max_replicas=3, scale_up_backlog=20,
+                                     scale_down_idle=3, cooldown=1),
+                       warmup=False)                 # obs inherited
+    assert sc.obs is obs
+    for r in mk_requests(20, seed=9, max_new=6):
+        router.submit(r)
+    while router.has_work():
+        router.step()
+        sc.observe()
+    for _ in range(12):
+        router.step()
+        sc.observe()
+    ups = [e for e in sc.events if e.action == "up"]
+    downs = [e for e in sc.events if e.action == "down"]
+    assert ups and downs                             # both paths fired
+    marks = [e for e in obs.tracer.events
+             if e["ph"] == "i" and e["name"].startswith("scale_")]
+    # one instant per ScaleEvent, in emission order, args matching
+    assert len(marks) == len(sc.events)
+    for m, ev in zip(marks, sc.events):
+        assert m["name"] == f"scale_{ev.action}"
+        assert m["args"]["rid"] == ev.rid
+        assert m["args"]["reason"] == ev.reason
+        assert m["args"]["n_replicas"] == ev.n_replicas
+        assert m["args"]["backlog"] == round(ev.backlog, 2)
+    for ev in ups:                                   # why it scaled
+        assert ev.reason == "backlog"
+        assert ev.backlog >= sc.cfg.scale_up_backlog
+    for ev in downs:
+        assert ev.reason == "idle" and ev.backlog == 0.0
+    snap = obs.snapshot()
+    assert snap['cluster_scale_ops_total{action="up"}'] == len(ups)
+    assert snap['cluster_scale_ops_total{action="down"}'] == len(downs)
+    # the router's routing instants share the cluster track
+    assert any(e["ph"] == "i" and e["name"] == "route"
+               for e in obs.tracer.events)

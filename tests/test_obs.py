@@ -1,0 +1,344 @@
+"""Unit tests for `repro.obs`: metrics-registry semantics, the
+Chrome/Perfetto tracer under an injected virtual clock, comm-ledger
+re-emission, and the scheduler instrumentation — including the two
+contracts everything else rides on:
+
+  * deterministic snapshots: the same workload under the same
+    VirtualClock produces byte-identical trace events;
+  * on/off parity: greedy token streams are bit-identical with a live
+    Recorder attached or the default NULL_RECORDER (observability can
+    never perturb serving).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from test_scheduler_soak import FakeDrafter, FakeEngine, V, reference_stream
+
+from repro.api.scheduler import CacheConfig, Request, Scheduler
+from repro.obs import (DEFAULT_BUCKETS, MetricsRegistry, NULL_RECORDER,
+                       Recorder, Tracer, VirtualClock, default_registry,
+                       emit_comm, set_default_registry)
+from repro.parallel.collectives import (CommEntry, LatencyModel,
+                                        collective_ledger, comm_context,
+                                        comm_phase, log_collective)
+
+
+def mk_requests(n, seed=0, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, V, int(rng.integers(2, 10))
+                                        ).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_and_gauge_series():
+    reg = MetricsRegistry()
+    reg.inc("reqs_total")
+    reg.inc("reqs_total", 2.0)
+    reg.inc("reqs_total", reason="stop")
+    reg.set("depth", 7, queue="main")
+    reg.set("depth", 3, queue="main")            # last write wins
+    snap = reg.snapshot()
+    assert snap["reqs_total"] == 3.0
+    assert snap['reqs_total{reason="stop"}'] == 1.0
+    assert snap['depth{queue="main"}'] == 3.0
+    assert reg.get("reqs_total").get(reason="stop") == 1.0
+    with pytest.raises(ValueError):
+        reg.inc("reqs_total", -1.0)              # counters are monotonic
+
+
+def test_histogram_buckets_sum_count():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v)
+    key = ()
+    assert h.cumulative(key) == [1, 2, 3, 4]
+    assert h.count() == 4 and h.sum() == pytest.approx(55.55)
+    snap = reg.snapshot()
+    assert snap['lat_bucket{le="0.1"}'] == 1
+    assert snap['lat_bucket{le="10"}'] == 3      # cumulative
+    assert snap['lat_bucket{le="+Inf"}'] == 4    # 50.0 lands past the top
+    assert snap["lat_count"] == 4
+    assert snap["lat_sum"] == pytest.approx(55.55)
+
+
+def test_metric_type_and_bucket_conflicts():
+    reg = MetricsRegistry()
+    reg.inc("m")
+    with pytest.raises(TypeError):
+        reg.set("m", 1.0)                        # counter vs gauge
+    reg.histogram("h", buckets=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        reg.histogram("h", buckets=(1.0, 3.0))   # layout is fixed
+    with pytest.raises(ValueError):
+        reg.histogram("bad", buckets=(2.0, 1.0))  # must increase
+    assert reg.observe("auto", 0.01) is None     # auto-registers defaults
+    assert reg.get("auto").buckets == DEFAULT_BUCKETS
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", help="requests accepted").inc(3, kind="a")
+    reg.observe("lat", 0.3)
+    text = reg.to_prometheus()
+    assert "# HELP reqs_total requests accepted" in text
+    assert "# TYPE reqs_total counter" in text
+    assert 'reqs_total{kind="a"} 3' in text
+    assert "# TYPE lat histogram" in text
+    assert 'lat_bucket{le="+Inf"} 1' in text
+
+
+def test_default_registry_swap_roundtrip():
+    mine = MetricsRegistry()
+    prev = set_default_registry(mine)
+    try:
+        assert default_registry() is mine
+        Recorder().inc("x")                      # metrics=None binds it
+        assert mine.snapshot()["x"] == 1.0
+    finally:
+        set_default_registry(prev)
+    assert default_registry() is prev
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+
+def _virtual_trace():
+    tr = Tracer(clock=VirtualClock(start=5.0, tick=0.5))
+    with tr.span("sched", "step", round=1) as s:
+        s["active"] = 2
+    tr.instant("cluster", "scale_up", {"rid": 1})
+    tr.counter("sched", "active_slots", 2)
+    return tr
+
+
+def test_tracer_virtual_clock_deterministic():
+    a, b = _virtual_trace(), _virtual_trace()
+    assert a.events == b.events                  # byte-identical snapshot
+    assert a.tracks() == ["sched", "cluster"]
+    x = [e for e in a.events if e["ph"] == "X"][0]
+    # t0 = 5.0; span enter reads 5.5 -> ts 0.5s, exit reads 6.0 -> 0.5s
+    assert x["ts"] == pytest.approx(0.5e6) and x["dur"] == pytest.approx(
+        0.5e6)
+    assert x["args"] == {"round": 1, "active": 2}
+
+
+def test_tracer_chrome_schema(tmp_path):
+    tr = _virtual_trace()
+    d = tr.to_dict()
+    assert set(d) == {"traceEvents", "displayTimeUnit"}
+    names = [e["name"] for e in d["traceEvents"] if e["ph"] == "M"]
+    assert names.count("thread_name") == 2       # one per track
+    for e in d["traceEvents"]:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        if e["ph"] == "i":
+            assert e["s"] == "t"
+    p = tmp_path / "trace.json"
+    tr.save(str(p))
+    assert json.loads(p.read_text())["traceEvents"] == d["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# Comm-ledger re-emission
+# ---------------------------------------------------------------------------
+
+
+def test_emit_comm_hidden_exposed_split_and_metrics():
+    lat, tp = LatencyModel(), 4
+    def priced(op, nbytes, overlappable, block=-1, phase=""):
+        return CommEntry(op, "tp", nbytes, overlappable,
+                         lat.collective_us(op, nbytes, tp), lat.launch_us,
+                         block, phase)
+    entries = [
+        priced("all-reduce", 4096, True, 3, "prefill"),   # kept exact sync
+        priced("reduce-scatter", 2048, True, 5, "decode"),  # quant 2-hop
+        priced("all-gather", 1024, True, 5, "decode"),
+        priced("all-gather", 8192, False),                # logits gather
+    ]
+    tr = Tracer(clock=VirtualClock())
+    reg = MetricsRegistry()
+    agg = emit_comm(tr, entries, lat, tp=tp, overlap=True, metrics=reg)
+    assert agg["entries"] == 4
+    assert agg["total_us"] == pytest.approx(sum(e.est_us for e in entries))
+    # split_us contract: hidden + exposed == est_us exactly, per entry
+    assert agg["hidden_us"] + agg["exposed_us"] == pytest.approx(
+        agg["total_us"])
+    assert agg["hidden_us"] > 0.0
+    assert agg["kept_sync_us"] == pytest.approx(
+        sum(e.est_us for e in entries if e.overlappable))
+    assert agg["quant_bytes"] == 2048 + 1024     # overlappable non-AR
+    snap = reg.snapshot()
+    assert snap['comm_entries_total{op="all-gather"}'] == 2.0
+    assert snap["comm_hidden_us_total"] == pytest.approx(agg["hidden_us"])
+    assert snap["spd_quant_bytes_total"] == 3072.0
+    # slices lie end to end on one "comm" track, phase-suffixed names
+    xs = [e for e in tr.events if e["ph"] == "X"]
+    assert [e["name"] for e in xs] == [
+        "all-reduce[prefill]", "reduce-scatter[decode]",
+        "all-gather[decode]", "all-gather"]
+    assert xs[0]["args"]["block"] == 3
+    cursor = 0.0
+    for e in xs:
+        assert e["ts"] == pytest.approx(cursor, abs=0.01)
+        cursor += e["dur"]
+
+
+def test_emit_comm_prices_byte_only_entries():
+    lat = LatencyModel()
+    raw = [CommEntry("all-reduce", "tp", 1 << 20, True)]   # est_us == 0
+    agg = emit_comm(Tracer(clock=VirtualClock()), raw, lat, tp=8)
+    assert agg["total_us"] == pytest.approx(
+        lat.collective_us("all-reduce", 1 << 20, 8))
+    # no latency model -> stays pure byte accounting
+    agg0 = emit_comm(Tracer(clock=VirtualClock()), raw)
+    assert agg0["total_us"] == 0.0
+
+
+def test_comm_context_labels_ledger_entries():
+    with collective_ledger() as led:
+        log_collective("all-reduce", "tp", 100)
+        with comm_context(block=3, phase="prefill"):
+            log_collective("all-reduce", "tp", 100)
+            with comm_phase("verify"):           # phase-only override
+                log_collective("all-gather", "tp", 50)
+            log_collective("all-reduce", "tp", 100)
+        log_collective("all-reduce", "tp", 100)
+    assert [(e.block, e.phase) for e in led] == [
+        (-1, ""), (3, "prefill"), (3, "verify"), (3, "prefill"), (-1, "")]
+    # backward compat: pre-PR 6-field positional construction still binds
+    e = CommEntry("all-reduce", "tp", 10, True, 1.0, 0.1)
+    assert e.block == -1 and e.phase == ""
+
+
+# ---------------------------------------------------------------------------
+# Scheduler instrumentation (FakeEngine: host-side, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _run(obs=None, n=6, max_new=6, num_pages=8):
+    cc = CacheConfig(cache_len=32, max_batch=2, page_size=4,
+                     num_pages=num_pages)
+    sched = Scheduler(FakeEngine(), None, cc, obs=obs)
+    reqs = mk_requests(n, seed=3, max_new=max_new)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    return sched, reqs
+
+
+def test_scheduler_metrics_and_trace():
+    obs = Recorder(MetricsRegistry(), Tracer(clock=VirtualClock(tick=1e-3)))
+    sched, reqs = _run(obs)
+    snap = obs.snapshot()
+    n = len(reqs)
+    assert snap["requests_submitted_total"] == n
+    assert snap["ttft_seconds_count"] == n       # one TTFT per request
+    assert snap["tpot_seconds_count"] == n
+    assert snap["queue_wait_seconds_count"] >= n  # re-admits re-observe
+    assert sum(v for k, v in snap.items()
+               if k.startswith("requests_finished_total")) == n
+    assert snap["tokens_generated_total"] == sum(len(r.out) for r in reqs)
+    if sched.n_preemptions:
+        assert snap["preemptions_total"] == sched.n_preemptions
+    # pool occupancy gauge + high-water mark moved
+    assert snap["pool_pages_used"] >= 0 and sched.pool.high_water > 0
+    # trace: scheduler step spans + per-slot queue/serve slices
+    tr = obs.tracer
+    assert "scheduler" in tr.tracks() and "slot0" in tr.tracks()
+    names = [e["name"] for e in tr.events if e["ph"] == "X"]
+    steps = names.count("step")
+    assert steps > 0
+    # one active_slots counter sample per scheduler step
+    assert sum(1 for e in tr.events if e["ph"] == "C") == steps
+    for want in ("step", "queue", "prefill", "serve"):
+        assert want in names
+    serve_done = [e for e in tr.events if e["ph"] == "X"
+                  and e["name"] == "serve" and "reason" in e.get("args", {})]
+    assert len(serve_done) == n                  # one final slice each
+    # Scheduler.metrics() bundles native stats + the registry snapshot
+    m = sched.metrics()
+    assert m["completed"] == n and m["registry"] == snap
+
+
+def test_scheduler_preemption_instrumented():
+    obs = Recorder(MetricsRegistry(), Tracer(clock=VirtualClock(tick=1e-3)))
+    # max_new larger than the per-slot page budget forces pool pressure
+    sched, reqs = _run(obs, n=4, max_new=12, num_pages=6)
+    assert sched.n_preemptions > 0               # the scenario preempts
+    snap = obs.snapshot()
+    assert snap["preemptions_total"] == sched.n_preemptions
+    marks = [e for e in obs.tracer.events
+             if e["ph"] == "i" and e["name"] == "preempt"]
+    assert len(marks) == sched.n_preemptions
+    # greedy streams stay exact under instrumentation + preemption
+    for r in reqs:
+        assert r.out == reference_stream(r.prompt, len(r.out))
+
+
+def test_obs_on_off_token_parity():
+    obs = Recorder(MetricsRegistry(), Tracer(clock=VirtualClock(tick=1e-3)))
+    on, reqs_on = _run(obs, n=5, max_new=10, num_pages=6)
+    off, reqs_off = _run(None, n=5, max_new=10, num_pages=6)
+    assert [r.out for r in reqs_on] == [r.out for r in reqs_off]
+    assert on.n_preemptions == off.n_preemptions
+    assert off.obs is NULL_RECORDER and off.metrics().get("registry") is None
+
+
+def test_spec_round_instrumentation():
+    from repro.spec import SpecState
+    obs = Recorder(MetricsRegistry(), Tracer(clock=VirtualClock(tick=1e-3)))
+    cc = CacheConfig(cache_len=32, max_batch=2, page_size=4, num_pages=12)
+    sched = Scheduler(FakeEngine(), None, cc,
+                      spec=SpecState(k=3, drafter=FakeDrafter(cc.max_batch)),
+                      obs=obs)
+    reqs = mk_requests(4, seed=7, max_new=6)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    snap = obs.snapshot()
+    assert snap["spec_drafted_total"] == sched.spec_drafted
+    assert snap["spec_accepted_total"] == sched.spec_accepted
+    assert snap["spec_acceptance_ratio_count"] == sched.spec_row_rounds
+    names = [e["name"] for e in obs.tracer.events if e["ph"] == "X"]
+    assert "draft" in names and "verify" in names
+    for r in reqs:                               # committed streams exact
+        assert r.out == reference_stream(r.prompt, len(r.out))
+
+
+def test_null_recorder_is_inert():
+    assert not NULL_RECORDER.enabled
+    assert NULL_RECORDER.now() == 0.0
+    NULL_RECORDER.inc("x")
+    NULL_RECORDER.gauge("x", 1)
+    NULL_RECORDER.observe("x", 1)
+    NULL_RECORDER.instant("t", "n")
+    with NULL_RECORDER.span("t", "n") as s:
+        s["k"] = "v"                             # writable throwaway dict
+    assert NULL_RECORDER.snapshot() == {}
+    assert NULL_RECORDER.record_comm([], None) == {}
+
+
+def test_warmup_is_obs_invisible():
+    from repro.cluster import Replica
+    obs = Recorder(MetricsRegistry(), Tracer(clock=VirtualClock(tick=1e-3)))
+    cc = CacheConfig(cache_len=32, max_batch=2, page_size=4, num_pages=12)
+    rep = Replica(0, Scheduler(FakeEngine(), None, cc, obs=obs))
+    rep.start(warmup=True)
+    assert obs.snapshot() == {}                  # throwaway request unseen
+    assert obs.tracer.events == []
+    assert rep.sched.obs is obs                  # recorder restored
+    assert rep.sched.pool.obs is obs
+    assert rep.sched.pool.high_water == 0        # canonical restore
