@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-cov test-soak lint bench-smoke example-smoke spec-smoke \
-	backend-parity paged-parity cluster-smoke overlap-smoke obs-smoke
+	spec-gate backend-parity paged-parity cluster-smoke overlap-smoke \
+	obs-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +42,13 @@ example-smoke:
 # token-equivalence, dense + paged (docs/speculative.md)
 spec-smoke:
 	$(PY) scripts/spec_smoke.py
+
+# speculation perf gate: regenerate BENCH_spec.json (calibrated /
+# adaptive / tree serve ladder + TP{2,4,8} wire pricing) and gate on
+# tokens/round >= 1.8 and acceptance >= 0.45 for the calibrated draft
+spec-gate:
+	$(PY) -m benchmarks.run --only spec
+	$(PY) scripts/check_spec_bench.py
 
 # cluster-serving smoke: 2 replicas x TP2 on CPU host devices, bursty
 # mini-trace, streams identical to 1 replica, rounds-based scaling

@@ -4,20 +4,28 @@ and the ledger-measured wire bytes the SPD draft saves.
 Two sections (docs/speculative.md has the model):
 
   * serve: reduced-smollm greedy serving through the facade with spec on
-    (`all-drop` and `drop+quant4` drafts) vs plain decoding — reports
-    the measured acceptance rate and tokens/verify-round (> 1.0 means
-    each multi-token verify replaces more than one sequential decode
-    step, which is the latency win: one sync ROUND per block instead of
-    one per token).
+    vs plain decoding, across the ladder the subsystem grew —
+      all-drop                       the paper's 100% SPD point (chain)
+      calibrated                     the measured cheapest-qualifying
+                                     draft policy (spec/calibrate.py)
+      calibrated+adaptive            + per-request k in [1, K_MAX]
+      calibrated+adaptive+tree       + depth-1 tree verification
+    Every variant is asserted token-identical to plain greedy; reported
+    acceptance and tokens/verify-round (> 1.0 means each multi-token
+    verify replaces more than one sequential decode step — the latency
+    win: one sync ROUND per block instead of one per token).  The
+    calibrated rows are what scripts/check_spec_bench.py gates
+    (tokens/step >= 1.8, acceptance >= 0.45).
 
   * wire at TP in {2, 4, 8}: trace-time collective-ledger bytes of one
-    draft decode step under each preset vs the same step at exact comm.
-    Speculation's extra forwards are the k draft passes; SPD is what
-    makes them nearly free on the wire, and `draft_wire_saved_bytes_per
-    _tok` prices that: k * (exact_step - draft_step bytes) amortized
-    over the measured tokens/round.  (Total spec bytes per token exceed
-    plain decoding — the win is fewer sequential sync rounds, not fewer
-    bytes; the draft saving is the part SPD contributes.)
+    draft decode step under each policy (presets + the calibrated
+    winner) vs the same step at exact comm.  Speculation's extra
+    forwards are the k draft passes; SPD is what makes them nearly free
+    on the wire, and `draft_wire_saved_bytes_per_tok` prices that:
+    k * (exact_step - draft_step bytes) amortized over the measured
+    tokens/round.  (Total spec bytes per token exceed plain decoding —
+    the win is fewer sequential sync rounds, not fewer bytes; the draft
+    saving is the part SPD contributes.)
 """
 import jax.numpy as jnp
 import numpy as np
@@ -31,7 +39,8 @@ from repro.runtime.engines import SimEngine
 
 TPS = (2, 4, 8)
 K = 3
-DRAFTS = ("all-drop", "drop+quant4")
+K_MAX = 5
+PRESET_DRAFTS = ("all-drop", "drop+quant4")
 BENCH_JSON_ROOT = None      # repo root by default; tests redirect it
 
 
@@ -47,30 +56,54 @@ def decode_step_ledger(cfg, canonical, plan, tp):
     return led
 
 
+def _serve_variants():
+    """(row name, SpecConfig kwargs) for the serve ladder."""
+    return [
+        ("all-drop", dict(k=K, draft="all-drop")),
+        ("calibrated", dict(k=K, draft="calibrated")),
+        ("calibrated+adaptive",
+         dict(k=K, draft="calibrated", adaptive=True, k_min=1,
+              k_max=K_MAX)),
+        ("calibrated+adaptive+tree",
+         dict(k=K, draft="calibrated", adaptive=True, k_min=1,
+              k_max=K_MAX, tree_width=2)),
+    ]
+
+
 def run(csv):
-    from repro.api import LLM, SamplingParams, SpecConfig
+    from repro.api import LLM, Request, SamplingParams, SpecConfig
     from repro.spec import derive_draft_plan
+    from repro.spec.calibrate import clear_cache
 
     cfg, canonical = train_reduced(steps=0)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
                for n in rng.integers(4, 16, 8)]
+    # held-out prompts for the policy search — disjoint from the served
+    # set so measured acceptance is not fit to the serving workload
+    crng = np.random.default_rng(1_000_003)
+    calib = [crng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+             for _ in range(3)]
     sp = SamplingParams(max_new=16)
     rows = []
 
-    # ---- measured serving: spec vs plain greedy (sim, tp=2) ----
+    # ---- measured serving: spec ladder vs plain greedy (sim, tp=2) ----
     plain = LLM.load(cfg, tp=2, engine="sim", params=canonical,
                      cache_len=64, max_batch=4, q_chunk=64)
     ref = [o.token_ids for o in plain.generate(prompts, sp)]   # warm + ref
+    clear_cache()           # measure THIS canonical tree, not a stale run
+    cal = None
     tps_meas = {}
-    for draft in DRAFTS:
+    for name, kw in _serve_variants():
         llm = LLM.load(cfg, tp=2, engine="sim", params=canonical,
-                       cache_len=64, max_batch=4, q_chunk=64,
-                       spec=SpecConfig(k=K, draft=draft))
+                       cache_len=64, max_batch=4, q_chunk=64)
+        llm.enable_spec(SpecConfig(**kw), calib_prompts=calib)
+        if llm.spec_calibration is not None:
+            cal = llm.spec_calibration     # cached across the variants
         outs = llm.generate(prompts, sp)                        # warm
-        assert [o.token_ids for o in outs] == ref, "greedy spec must be exact"
+        assert [o.token_ids for o in outs] == ref, \
+            f"greedy spec must be exact ({name})"
         # timed run on a fresh scheduler over the already-compiled steps
-        from repro.api import Request
         sched = llm.serve(max_batch=4)
         for uid, p in enumerate(prompts):
             sched.submit(Request(uid=uid, prompt=p, max_new=sp.max_new))
@@ -79,37 +112,53 @@ def run(csv):
         us = t.us()
         acc = sched.spec_acceptance
         tps = sched.spec_tokens_per_step
-        tps_meas[draft] = tps
-        assert tps > 1.0, (draft, tps)
-        rows.append({"kind": "serve", "draft": draft, "k": K,
-                     "acceptance": acc, "tokens_per_step": tps,
-                     "rounds": sched.spec_rounds})
-        csv(f"spec/serve/{draft}", us,
+        tps_meas[name] = tps
+        assert tps > 1.0, (name, tps)
+        row = {"kind": "serve", "draft": name, "k": K,
+               "acceptance": acc, "tokens_per_step": tps,
+               "rounds": sched.spec_rounds,
+               "adaptive": bool(kw.get("adaptive", False)),
+               "tree_width": kw.get("tree_width", 1),
+               "alt_commits": sched.spec_alt_commits}
+        if llm.spec_calibration is not None:
+            row["policy"] = llm.spec_calibration.name
+        rows.append(row)
+        csv(f"spec/serve/{name}", us,
             f"accept={acc:.3f} tok_per_step={tps:.3f} "
             f"rounds={sched.spec_rounds}")
 
-    # ---- wire bytes: SPD draft step vs exact-comm step, TP 2/4/8 ----
+    # ---- wire bytes: draft step vs exact-comm step, TP 2/4/8 ----
+    wire_plans = [(d, derive_draft_plan(cfg, SpecConfig(k=K, draft=d)))
+                  for d in PRESET_DRAFTS]
+    wire_plans.append(("calibrated", cal.policy))
     for tp in TPS:
         exact_led = decode_step_ledger(
             cfg, canonical, SPDPlanConfig.none(cfg.n_layers), tp)
         exact_b = ledger_wire_bytes(exact_led, tp)
-        for draft in DRAFTS:
-            dplan = derive_draft_plan(cfg, SpecConfig(k=K, draft=draft))
+        for draft, dplan in wire_plans:
             draft_b = ledger_wire_bytes(
                 decode_step_ledger(cfg, canonical, dplan, tp), tp)
             assert draft_b < exact_b, (tp, draft, draft_b, exact_b)
-            saved_tok = K * (exact_b - draft_b) / tps_meas[draft]
-            rows.append({"kind": "wire", "tp": tp, "draft": draft,
-                         "exact_step_bytes": exact_b,
-                         "draft_step_bytes": draft_b,
-                         "draft_vs_exact": exact_b / max(draft_b, 1.0),
-                         "draft_wire_saved_bytes_per_tok": saved_tok})
+            tps_ref = tps_meas.get(draft, tps_meas["calibrated"])
+            saved_tok = K * (exact_b - draft_b) / tps_ref
+            row = {"kind": "wire", "tp": tp, "draft": draft,
+                   "exact_step_bytes": exact_b,
+                   "draft_step_bytes": draft_b,
+                   "draft_vs_exact": exact_b / max(draft_b, 1.0),
+                   "draft_wire_saved_bytes_per_tok": saved_tok}
+            if draft == "calibrated":
+                row["policy"] = cal.name
+            rows.append(row)
             csv(f"spec/wire/tp{tp}/{draft}", 0.0,
                 f"draft_bytes={draft_b:.0f} exact_bytes={exact_b:.0f} "
                 f"saved_per_tok={saved_tok:.0f}")
 
-    emit_json("spec", {"arch": cfg.name, "k": K, "drafts": list(DRAFTS),
-                       "tps": list(TPS), "requests": len(prompts),
-                       "max_new": sp.max_new},
+    emit_json("spec",
+              {"arch": cfg.name, "k": K, "k_max": K_MAX,
+               "drafts": [n for n, _ in _serve_variants()],
+               "calibrated_policy": cal.name,
+               "calib_trials": [list(t) for t in cal.trials],
+               "tps": list(TPS), "requests": len(prompts),
+               "max_new": sp.max_new},
               rows, root=BENCH_JSON_ROOT)
     return rows

@@ -1,0 +1,72 @@
+"""CI gate over BENCH_spec.json (`make spec-gate`): self-speculation
+must actually pay.  Gates (docs/speculative.md):
+
+  * every calibrated serve variant accepts >= 0.45 of its drafts — the
+    calibration search's own qualifying bar, re-checked on the SERVED
+    workload (held-out from the calibration prompts);
+  * the best calibrated variant commits >= 1.8 tokens per verify round
+    (vs 1.0 for plain decoding) with greedy outputs asserted
+    token-identical inside the bench itself;
+  * the draft's wire bytes are ledger-priced at every TP in {2, 4, 8}
+    and strictly below the exact-comm step — the SPD saving speculation
+    banks on, including for the calibrated policy that won the search.
+
+    PYTHONPATH=src python scripts/check_spec_bench.py
+"""
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+MIN_TOKENS_PER_STEP = 1.8
+MIN_ACCEPTANCE = 0.45
+WIRE_TPS = {2, 4, 8}
+
+
+def main():
+    with open(os.path.join(ROOT, "BENCH_spec.json")) as f:
+        rec = json.load(f)
+    rows = rec["metrics"]
+    serve = [r for r in rows if r["kind"] == "serve"]
+    cal = [r for r in serve if r["draft"].startswith("calibrated")]
+    assert cal, "no calibrated serve rows in BENCH_spec.json"
+    for r in cal:
+        assert r["acceptance"] >= MIN_ACCEPTANCE, \
+            f"{r['draft']}: acceptance {r['acceptance']:.3f} < " \
+            f"{MIN_ACCEPTANCE} (calibration target not met when serving)"
+    best = max(cal, key=lambda r: r["tokens_per_step"])
+    assert best["tokens_per_step"] >= MIN_TOKENS_PER_STEP, \
+        f"best calibrated variant ({best['draft']}) commits " \
+        f"{best['tokens_per_step']:.3f} tokens/round < " \
+        f"{MIN_TOKENS_PER_STEP} — self-speculation is not paying"
+    # an adaptive/tree variant must never commit fewer tokens per round
+    # than the fixed-k chain it extends
+    base = next(r for r in cal if not r["adaptive"]
+                and r.get("tree_width", 1) == 1)
+    for r in cal:
+        assert r["tokens_per_step"] >= base["tokens_per_step"] - 1e-9, \
+            f"{r['draft']} ({r['tokens_per_step']:.3f} tok/round) " \
+            f"regressed below plain calibrated " \
+            f"({base['tokens_per_step']:.3f})"
+    wire = [r for r in rows if r["kind"] == "wire"]
+    assert {r["tp"] for r in wire} == WIRE_TPS, \
+        f"wire rows must cover TP {sorted(WIRE_TPS)}"
+    cal_wire = [r for r in wire if r["draft"] == "calibrated"]
+    assert {r["tp"] for r in cal_wire} == WIRE_TPS, \
+        "the calibrated policy must be ledger-priced at every TP"
+    for r in wire:
+        assert r["draft_step_bytes"] < r["exact_step_bytes"], \
+            f"tp{r['tp']}/{r['draft']}: draft step moves no fewer bytes " \
+            f"than exact comm"
+        assert r["draft_wire_saved_bytes_per_tok"] > 0, \
+            f"tp{r['tp']}/{r['draft']}: no priced wire saving"
+    print(f"spec bench ok: best={best['draft']} "
+          f"tok/round={best['tokens_per_step']:.2f} "
+          f"accept={best['acceptance']:.2f} "
+          f"policy={rec['config'].get('calibrated_policy', '?')} "
+          f"wire priced at TP{sorted(WIRE_TPS)}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -109,6 +109,7 @@ class LLM:
         self.draft_plan = None
         self.draft_engine = None
         self.draft_params = None
+        self.spec_calibration = None  # CalibrationResult ("calibrated")
         self._sched: Optional[Scheduler] = None
         # facade-internal uids are negative so they never collide with
         # user-chosen uids of Requests submitted directly to serve()
@@ -257,32 +258,77 @@ class LLM:
     # ---------------- speculative decoding ----------------
 
     def enable_spec(self, spec, calib_batches=None, *, sensitivity=None,
-                    ranking=None):
+                    ranking=None, calib_prompts=None,
+                    calib_target: float = 0.45,
+                    force_calibration: bool = False):
         """Turn on self-speculative decoding (or switch its config).
 
         The "tiered" draft preset reuses Algorithm-1's ISB/SB/ESB tiers,
         which need the block sensitivity profile: pass `calib_batches`
         to run the sweep here, or a precomputed `sensitivity`/`ranking`
-        pair.  Drops any cached scheduler (its draft state is per-
-        scheduler).  Returns self for chaining."""
-        from repro.spec import SpecConfig, derive_draft_plan
+        pair.
+
+        The "calibrated" preset goes further: it SEARCHES draft
+        CommPolicies (uniform drop/quant ladders, plus the sensitivity
+        tier mixes when a profile is available) and picks the cheapest
+        one whose MEASURED acceptance on held-out prompts clears
+        `calib_target` (repro.spec.calibrate).  Prompts come from
+        `calib_prompts` (token sequences) or are sliced out of
+        `calib_batches`; results are cached per (arch, engine, tp) —
+        `force_calibration` re-measures.  The winning
+        `CalibrationResult` lands on `self.spec_calibration`.
+
+        Drops any cached scheduler (its draft state is per-scheduler).
+        Returns self for chaining."""
+        from repro.spec import SpecConfig, SpecError, derive_draft_plan
 
         if not isinstance(spec, SpecConfig):
             raise TypeError(f"spec must be a repro.spec.SpecConfig, "
                             f"got {spec!r}")
-        if (spec.draft == "tiered" and sensitivity is None
+        needs_tiers = spec.draft in ("tiered", "calibrated")
+        if (needs_tiers and sensitivity is None
                 and calib_batches is not None):
             from repro.core.spd import sweep_sensitivity
             res, _ = sweep_sensitivity(self.cfg, self.canonical,
                                        calib_batches, self.tp,
                                        q_chunk=self.q_chunk)
             sensitivity, ranking = res.sensitivity, res.ranking
+        policy = None
+        if spec.draft == "calibrated":
+            from repro.spec import calibrate_draft
+            prompts = calib_prompts
+            if prompts is None and calib_batches is not None:
+                prompts = self._calib_prompts(calib_batches)
+            if prompts is None or not len(prompts):
+                raise SpecError(
+                    'draft="calibrated" needs held-out prompts: pass '
+                    "calib_prompts=[token seqs] or calib_batches to "
+                    "enable_spec")
+            cal = calibrate_draft(self, prompts, k=spec.k,
+                                  target=calib_target,
+                                  sensitivity=sensitivity,
+                                  force=force_calibration)
+            self.spec_calibration = cal
+            policy = cal.policy
         self.spec = spec
         self.draft_plan = derive_draft_plan(self.cfg, spec,
                                             sensitivity=sensitivity,
-                                            ranking=ranking)
+                                            ranking=ranking,
+                                            policy=policy)
         self._build_spec()
         return self
+
+    def _calib_prompts(self, calib_batches, *, n: int = 3) -> list:
+        """Held-out prompts for draft calibration, sliced from ppl
+        calibration batches: the first row of each of the first `n`
+        batches, trimmed so prompt + measured decode fit the cache."""
+        lim = max(4, min(16, self.cache.cache_len // 4))
+        out = []
+        for b in calib_batches[:n]:
+            arr = np.asarray(b, np.int32)
+            row = arr.reshape(-1, arr.shape[-1])[0] if arr.ndim > 1 else arr
+            out.append(row[:lim])
+        return out
 
     def disable_spec(self):
         """Back to plain decoding (drops the cached scheduler)."""
@@ -307,7 +353,10 @@ class LLM:
         drafter = Drafter(self.draft_engine, self.draft_params,
                           cache.max_batch, cache.cache_len,
                           prefill_chunk=cache.prefill_chunk)
-        return SpecState(k=self.spec.k, drafter=drafter)
+        return SpecState(k=self.spec.k, drafter=drafter,
+                         adaptive=self.spec.adaptive,
+                         k_min=self.spec.k_min, k_max=self.spec.k_max,
+                         tree_width=self.spec.tree_width)
 
     # ---------------- serving ----------------
 

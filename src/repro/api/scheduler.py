@@ -61,8 +61,8 @@ from repro.api.sampling import SamplingParams
 from repro.obs.recorder import NULL_RECORDER
 from repro.runtime import sampling as RS
 from repro.runtime.paging import PagePool
-from repro.spec.verify import (accept_greedy, accept_speculative,
-                               filtered_probs, spec_rng)
+from repro.spec.verify import (accept_greedy_tree, accept_speculative_tree,
+                               filtered_probs, spec_rng, tree_layout)
 
 __all__ = ["CacheConfig", "Request", "Scheduler", "InvalidRequestError",
            "SchedulerError", "DenseKVCacheManager", "PagedKVCacheManager"]
@@ -205,12 +205,29 @@ class DenseKVCacheManager:
             params, cur, pos, self.caches, t, k, p, keys)
         return nxt
 
-    def verify(self, params, toks, pos):
-        """Multi-token speculative verify -> full logits (B, k+1, V),
+    def verify(self, params, toks, pos, tree=None):
+        """Multi-token speculative verify -> full logits (B, C, V),
         returned as the engine's device array (callers fetch only what
-        they need — all-greedy rounds pull just the argmax ids)."""
-        lg, self.caches = self.engine.verify(params, toks, pos, self.caches)
+        they need — all-greedy rounds pull just the argmax ids).
+        `tree=(depths, anc)` verifies a draft tree chunk (kept off the
+        call when None so chain rounds hit the same compiled step as
+        before, and stub engines never see the kwarg)."""
+        if tree is None:
+            lg, self.caches = self.engine.verify(params, toks, pos,
+                                                 self.caches)
+        else:
+            lg, self.caches = self.engine.verify(params, toks, pos,
+                                                 self.caches, tree=tree)
         return lg
+
+    def copy_pos(self, src, dst):
+        """Per-row cache position copy src[b] -> dst[b] (tree rounds
+        relocate an accepted alternative's KV from its chunk slot to the
+        committed stream position).  No-op on engines without the step
+        (test stubs track tokens, not KV)."""
+        cp = getattr(self.engine, "copy_pos", None)
+        if cp is not None:
+            self.caches = cp(self.caches, src, dst)
 
     def truncate(self, slot: int, n_tokens: int):
         # dense rollback of a rejected speculative suffix is free: the
@@ -398,11 +415,25 @@ class PagedKVCacheManager:
             t, k, p, keys)
         return nxt
 
-    def verify(self, params, toks, pos):
+    def verify(self, params, toks, pos, tree=None):
         self._cow(np.asarray(pos), int(toks.shape[1]))
-        lg, self.pcaches = self.engine.verify_paged(
-            params, toks, pos, self._table(), self.pcaches)
+        if tree is None:
+            lg, self.pcaches = self.engine.verify_paged(
+                params, toks, pos, self._table(), self.pcaches)
+        else:
+            lg, self.pcaches = self.engine.verify_paged(
+                params, toks, pos, self._table(), self.pcaches, tree=tree)
         return lg
+
+    def copy_pos(self, src, dst):
+        """Tree alt-KV relocation through the page table; MUST run
+        before `truncate` frees the pages holding the chunk slots.  The
+        destination page sits inside the verify chunk's write region, so
+        this round's COW barrier already made it privately owned."""
+        cp = getattr(self.engine, "copy_pos_paged", None)
+        if cp is not None:
+            self.pcaches = cp(self.pcaches, self._table(), src, dst,
+                              page_size=self.cc.page_size)
 
     def truncate(self, slot: int, n_tokens: int):
         # paged rollback: pages past the committed length drop their
@@ -445,6 +476,11 @@ class Scheduler:
         self.spec_drafted = 0
         self.spec_accepted = 0
         self.spec_committed = 0       # tokens committed by spec rounds
+        self.spec_alt_commits = 0     # tree rounds committed via an alt
+        # per-slot adaptive draft budget + zero-acceptance streak
+        # (SpecConfig adaptive/k_min/k_max; reset at admission)
+        self._spec_kb = np.zeros(cache.max_batch, np.int32)
+        self._spec_rej = np.zeros(cache.max_batch, np.int32)
         # observability (repro.obs): the default NULL_RECORDER makes
         # every hook below a no-op — timestamps are only read and
         # request metadata only kept when a live Recorder is attached,
@@ -490,6 +526,7 @@ class Scheduler:
             out["spec_rounds"] = self.spec_rounds
             out["spec_acceptance"] = self.spec_acceptance
             out["spec_tokens_per_step"] = self.spec_tokens_per_step
+            out["spec_alt_commits"] = self.spec_alt_commits
         if self.obs.enabled:
             out["registry"] = self.obs.snapshot()
         return out
@@ -646,9 +683,20 @@ class Scheduler:
                 self.kv.insert(caches1, b)
             self.kv.register_prefix(b, toks)
             if self.spec is not None:
-                # the draft shares weights, not caches: it prefills the
-                # same tokens into its own per-slot dense cache
-                self.spec.drafter.insert(b, toks)
+                # the draft shares weights, not caches — but a COLD
+                # admission just prefilled this exact prompt, and the
+                # drafter can restack that KV onto its own plan instead
+                # of re-prefilling (Drafter.insert documents the
+                # adoption contract; warm admissions have no dense
+                # caches1, so the drafter prefills itself)
+                self._spec_kb[b] = self.spec.k
+                self._spec_rej[b] = 0
+                try:
+                    self.spec.drafter.insert(
+                        b, toks, caches1=None if m else caches1)
+                except TypeError:
+                    # legacy drafter stubs without the adoption kwarg
+                    self.spec.drafter.insert(b, toks)
             if self._stopping(req, first):
                 self._finish(b)
 
@@ -681,6 +729,14 @@ class Scheduler:
             reason = req.finish_reason or "stop"
             self.obs.inc("requests_finished_total", reason=reason)
             self.obs.inc("tokens_generated_total", len(req.out))
+            if req.n_drafted:
+                # per-request draft acceptance over the whole lifetime
+                # (the round-level spec_acceptance_ratio histogram sees
+                # every round; this one sees every request)
+                self.obs.metrics.observe(
+                    "spec_request_acceptance",
+                    req.n_draft_accepted / req.n_drafted,
+                    buckets=_ACCEPT_BUCKETS)
             if meta is not None:
                 if meta.get("first") is not None and len(req.out) > 1:
                     # time-per-output-token over the decode tail (the
@@ -810,26 +866,66 @@ class Scheduler:
         req = self.slots[b]
         return len(np.asarray(req.prompt)) + self._max_new(req)
 
-    def _spec_step(self, active: List[int], k: int) -> bool:
-        """One draft-k / verify-once round for every active slot.
+    def _spec_round_k(self, active: List[int]) -> Dict[int, int]:
+        """Per-row draft budget this round: fixed spec.k, or — adaptive
+        mode — the slot's walked budget (grown on fully accepted rounds,
+        shrunk after two consecutive zero-acceptance rounds; see
+        `SpecConfig` and docs/speculative.md)."""
+        if getattr(self.spec, "adaptive", False):
+            return {b: int(self._spec_kb[b]) for b in active}
+        return {b: self.spec.k for b in active}
 
-        k is FIXED at spec.k so the verify forward keeps one compiled
-        shape; rows whose remaining budget is tighter than k just have
-        their surplus commits clamped host-side (their surplus verify
-        rows score positions that can never be committed — dense writes
-        past the slot are dropped by the scatter, paged writes land in
-        the trash page — so the surplus logits are garbage-but-discarded
-        by construction, never acted on).
+    def _spec_adapt(self, b: int, k_b: int, n_acc: int, used_alt: int):
+        """Walk slot b's budget from this round's outcome."""
+        if n_acc >= k_b:
+            self._spec_kb[b] = min(k_b + 1, self.spec.k_cap)
+            self._spec_rej[b] = 0
+        elif n_acc == 0 and not used_alt:
+            self._spec_rej[b] += 1
+            if self._spec_rej[b] >= 2:
+                self._spec_kb[b] = max(self.spec.k_min, k_b - 1)
+                self._spec_rej[b] = 0
+        else:
+            self._spec_rej[b] = 0
 
-        Verify writes KV at positions pos..pos+k, so paged slots must
-        own pages through pos+k+1 up front (same preemption-by-eviction
-        rule as decode growth), capped at the request's validated
-        capacity; after acceptance the rejected suffix rolls back —
-        position rewind on dense, page truncation on paged."""
+    def _spec_step(self, active: List[int]) -> bool:
+        """One draft / verify-once round for every active slot.
+
+        The round budget k is the max of the per-row budgets (fixed
+        spec.k, or adaptive — `_spec_round_k`), so the verify forward
+        compiles one shape per distinct k in [k_min, k_max]; a row with
+        a smaller budget k_b clamps its acceptance to its own first k_b
+        drafts (its surplus verify rows score positions that can never
+        be committed — dense writes past the slot are dropped by the
+        scatter, paged writes land in the trash page — so the surplus
+        logits are garbage-but-discarded by construction, never acted
+        on).  Rows whose remaining decode budget is tighter than k_b
+        clamp their commits the same way.
+
+        With tree_width w > 1 the chunk is [cur, d_1..d_k, a_1..a_
+        {w-1}]: the draft's first-position runners-up verify as depth-1
+        tree branches in the SAME forward (spec/verify.tree_layout), and
+        a row whose first chain draft is rejected still commits two
+        tokens when the target's correction matches an alternative —
+        after relocating the alternative's KV from its chunk slot to the
+        committed stream position (copy_pos, BEFORE rollback frees the
+        chunk pages).
+
+        Verify writes KV at positions pos..pos+C-1 (C = k + w), so
+        paged slots must own pages through pos+C up front (same
+        preemption-by-eviction rule as decode growth), capped at the
+        request's validated capacity; after acceptance the rejected
+        suffix rolls back — position rewind on dense, page truncation on
+        paged (`PagePool.shrink`)."""
+        adaptive = getattr(self.spec, "adaptive", False)
+        w = getattr(self.spec, "tree_width", 1)
+        kb = self._spec_round_k(active)
+        k = max(kb.values())
+        chunk = k + w                 # verify width: cur + chain + alts
         if self.kv.paged:
             active = self._grow_active(
                 active,
-                lambda b: min(int(self.pos[b]) + k + 1,
+                lambda b: min(int(self.pos[b]) + chunk,
                               self._spec_cap(b) - 1))
             if not active:
                 return bool(self.queue)
@@ -846,7 +942,7 @@ class Scheduler:
         ctx = np.zeros((n, width), np.int32)
         start = np.zeros(n, np.int32)
         rngs: Dict[int, object] = {}
-        qs: Dict[int, list] = {}
+        alt_ok: Dict[int, bool] = {}
         for b in active:
             stream = self._resume_tokens(self.slots[b])
             p = int(self.pos[b])
@@ -854,32 +950,54 @@ class Scheduler:
             ctx[b] = stream[start[b]: p + 1]
             sp = self.slots[b].sampling or _GREEDY
             rngs[b] = spec_rng(sp.seed, len(self.slots[b].out))
-            qs[b] = [None] * k
-
-        def sample_fn(logits, i):
-            # per-request draft draw; records the exact distribution q
-            # each sampled draft came from (the rejection scheme's q)
-            toks = np.zeros(n, np.int32)
+            # an alternative is only usable when its chunk slot
+            # (pos+k+1..pos+C-1) really holds its KV — inside the dense
+            # slot / the grown page coverage — and the row may still
+            # commit two tokens; otherwise the row falls back to chain
+            # acceptance (committing fewer tokens never changes the
+            # greedy stream, so this guard preserves token identity)
+            cap = (self._spec_cap(b) - 1 if self.kv.paged
+                   else self.cache_len)
+            alt_ok[b] = (w > 1 and p + chunk <= cap
+                         and self._max_new(self.slots[b])
+                         - len(self.slots[b].out) >= 2)
+        if all_greedy:
+            sampling = None
+        else:
+            # per-request SamplingParams arrays + per-draft-index keys
+            # for the fused sampled draft (temp <= 0 rows draft greedy,
+            # mirroring decode_sampled)
+            t = np.zeros(n, np.float32)
+            tk = np.zeros(n, np.int32)
+            tp_ = np.ones(n, np.float32)
+            seeds = np.zeros(n, np.int32)
+            counts = np.zeros(n, np.int32)
             for b in active:
                 sp = self.slots[b].sampling or _GREEDY
-                if sp.greedy:
-                    toks[b] = int(np.argmax(logits[b]))
-                else:
-                    q = filtered_probs(logits[b], sp.temperature,
-                                       sp.top_k, sp.top_p)
-                    qs[b][i] = q
-                    toks[b] = int(rngs[b].choice(q.shape[0], p=q))
-            return toks
-
-        with self.obs.span("spec", "draft", k=k, rows=len(active)):
-            draft_toks, _ = dr.draft(ctx, start, k, sample_fn,
-                                     greedy=all_greedy)
+                t[b], tk[b], tp_[b] = sp.temperature, sp.top_k, sp.top_p
+                seeds[b] = sp.seed
+                counts[b] = len(self.slots[b].out)
+            # draft draw i folds in a count disjoint from the committed-
+            # token stream's fold_in counter (which is just len(out))
+            keys = jnp.stack([RS.make_keys(seeds, counts * 131 + 17 + i)
+                              for i in range(k)], axis=1)
+            sampling = (t, tk, tp_, keys)
+        with self.obs.span("spec", "draft", k=k, rows=len(active),
+                           tree=w):
+            draft_toks, draft_logits, alts = dr.draft(
+                ctx, start, k, greedy=all_greedy,
+                tree_width=w, sampling=sampling)
         ver = np.concatenate([self.cur, draft_toks], axis=1)   # (n, k+1)
-        with self.obs.span("spec", "verify", rows=len(active)):
+        tree = None
+        if w > 1:
+            ver = np.concatenate(
+                [ver, np.asarray(alts, np.int32)], axis=1)     # (n, k+w)
+            tree = tree_layout(k, w)
+        with self.obs.span("spec", "verify", rows=len(active), tree=w):
             lg = self.kv.verify(self.params, jnp.asarray(ver),
-                                jnp.asarray(self.pos))
+                                jnp.asarray(self.pos), tree=tree)
         if all_greedy:
-            # mirror the fused-greedy decode path: only the (n, k+1)
+            # mirror the fused-greedy decode path: only the (n, C)
             # argmax ids come to host, never the full-vocab logits
             argmax = np.asarray(jnp.argmax(lg, axis=-1))
             logits = None
@@ -887,28 +1005,53 @@ class Scheduler:
             logits = np.asarray(lg)
             argmax = None
         self.spec_rounds += 1
+        relocs: List[int] = []        # rows committing via an alt
+        post = []                     # deferred rollback/finish work
         for b in active:
             req = self.slots[b]
             sp = req.sampling or _GREEDY
+            k_b = kb[b]
+            row_alts = alts[b] if alt_ok[b] else None
             if logits is None:
-                committed, n_acc = accept_greedy(draft_toks[b], argmax[b])
+                committed, n_acc, used_alt = accept_greedy_tree(
+                    draft_toks[b][:k_b], row_alts, argmax[b][:k_b + 1],
+                    argmax[b][k + 1:])
             else:
-                committed, n_acc = accept_speculative(
-                    draft_toks[b], None if sp.greedy else np.stack(qs[b]),
-                    logits[b], temperature=sp.temperature, top_k=sp.top_k,
+                if sp.greedy:
+                    dp = None
+                else:
+                    # reconstruct each draft draw's exact distribution q
+                    # from the returned logits (filtered_probs mirrors
+                    # the on-device sampling core's filtering)
+                    dp = np.stack([
+                        filtered_probs(draft_logits[b, i], sp.temperature,
+                                       sp.top_k, sp.top_p)
+                        for i in range(k_b)])
+                committed, n_acc, used_alt = accept_speculative_tree(
+                    draft_toks[b][:k_b], dp, logits[b][:k_b + 1],
+                    row_alts, logits[b][k + 1:],
+                    temperature=sp.temperature, top_k=sp.top_k,
                     top_p=sp.top_p, rng=rngs[b])
             old_pos = int(self.pos[b])
-            req.n_drafted += k
+            req.n_drafted += k_b
             req.n_draft_accepted += n_acc
-            self.spec_drafted += k
+            self.spec_drafted += k_b
             self.spec_accepted += n_acc
             self.spec_row_rounds += 1
+            if used_alt:
+                self.spec_alt_commits += 1
             if self.obs.enabled:
-                self.obs.inc("spec_drafted_total", k)
+                self.obs.inc("spec_drafted_total", k_b)
                 self.obs.inc("spec_accepted_total", n_acc)
+                if used_alt:
+                    self.obs.inc("spec_tree_alt_commits_total")
+                if adaptive:
+                    self.obs.gauge("spec_k", k_b, slot=str(b))
                 self.obs.metrics.observe("spec_acceptance_ratio",
-                                         n_acc / k,
+                                         n_acc / k_b,
                                          buckets=_ACCEPT_BUCKETS)
+            if adaptive:
+                self._spec_adapt(b, k_b, n_acc, used_alt)
             budget = self._max_new(req) - len(req.out)
             done_b = False
             for tok in committed[:budget]:
@@ -919,14 +1062,35 @@ class Scheduler:
                 if self._stopping(req, tok):
                     done_b = True
                     break
+            # the alt's KV needs relocating only if the row keeps
+            # generating (a finishing row's slot is released whole)
+            if used_alt and not done_b:
+                relocs.append((b, old_pos + k + used_alt, old_pos + 1))
+            post.append((b, done_b, used_alt, old_pos))
+        if relocs:
+            # relocate BEFORE any rollback below: truncate/shrink frees
+            # the pages holding the chunk slots the alts live in
+            src = np.zeros(n, np.int32)
+            dst = np.zeros(n, np.int32)
+            for b, s_, d_ in relocs:
+                src[b], dst[b] = s_, d_
+            self.kv.copy_pos(src, dst)
+        for b, done_b, used_alt, old_pos in post:
             if done_b:
                 self._finish(b)
                 continue
             self.kv.truncate(b, int(self.pos[b]))
-            # draft cache validity: it wrote positions old_pos..old_pos+
-            # k-1 for [cur, d_1..d_{k-1}]; the accepted prefix keeps it
-            # in sync up to min(committed end, old_pos + k)
-            dr.pos[b] = min(int(self.pos[b]), old_pos + k)
+            if used_alt:
+                # the draft cache's position old_pos+1 holds the CHAIN
+                # draft's KV, not the committed alternative's — next
+                # round's catch-up context rewrites it
+                dr.pos[b] = old_pos + 1
+            else:
+                # draft cache validity: it wrote positions old_pos..
+                # old_pos+k-1 for [cur, d_1..d_{k-1}]; the accepted
+                # prefix keeps it in sync up to min(committed end,
+                # old_pos + k)
+                dr.pos[b] = min(int(self.pos[b]), old_pos + k)
         return True
 
     # ---------------- main loop (continued) ----------------
@@ -953,7 +1117,7 @@ class Scheduler:
         if not active:
             return False
         if self.spec is not None:
-            return self._spec_step(active, self.spec.k)
+            return self._spec_step(active)
         if self.kv.paged:
             # growth: each slot writes position pos[b] this step — make
             # sure its page exists (preemption rules: _grow_active)

@@ -947,40 +947,52 @@ def block_dec(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
 # ---------------------------------------------------------------------------
 
 
-def gqa_mixer_ext(cfg, kind, a, h, pos, cache, lay, axis, *, q_chunk=1024):
+def gqa_mixer_ext(cfg, kind, a, h, pos, cache, lay, axis, *, q_chunk=1024,
+                  spos=None, anc=None):
     """Extension attention: h (B,C,d); pos (B,C) absolute positions of the
-    chunk; cache k/v span the full per-slot buffer (non-windowed)."""
+    chunk; cache k/v span the full per-slot buffer (non-windowed).
+
+    Tree mode (speculative tree verification): `spos` (B,C) overrides
+    the SCATTER positions (distinct cache slots pos+chunk-index) while
+    `pos` keeps the tree positions (RoPE), and `anc` (C,C) switches
+    chunk-internal visibility to the ancestor matrix (A.tree_mask)."""
     q, k, v = _qkv(cfg, a, h, lay, axis)
     q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_fraction)
     k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_fraction)
     b, c = h.shape[:2]
     bi = jnp.arange(b)[:, None]
+    wpos = pos if spos is None else spos
     if cfg.kv_dtype == "int8":
         kq, ks = A.kv_quantize(k)
         vq, vs = A.kv_quantize(v)
-        cache = {"k": cache["k"].at[bi, pos].set(kq),
-                 "k_s": cache["k_s"].at[bi, pos].set(ks),
-                 "v": cache["v"].at[bi, pos].set(vq),
-                 "v_s": cache["v_s"].at[bi, pos].set(vs)}
+        cache = {"k": cache["k"].at[bi, wpos].set(kq),
+                 "k_s": cache["k_s"].at[bi, wpos].set(ks),
+                 "v": cache["v"].at[bi, wpos].set(vq),
+                 "v_s": cache["v_s"].at[bi, wpos].set(vs)}
     else:
-        cache = {"k": cache["k"].at[bi, pos].set(k),
-                 "v": cache["v"].at[bi, pos].set(v)}
+        cache = {"k": cache["k"].at[bi, wpos].set(k),
+                 "v": cache["v"].at[bi, wpos].set(v)}
     kc, vc = _unpack_kv(cfg, cache, h.dtype)
     s_kv = kc.shape[1]
     kv_pos = jnp.broadcast_to(jnp.arange(s_kv)[None], (b, s_kv))
-    o = A.attention_any(q, kc, vc, pos, kv_pos, window=0, q_chunk=q_chunk)
+    if anc is None:
+        o = A.attention_any(q, kc, vc, pos, kv_pos, window=0,
+                            q_chunk=q_chunk)
+    else:
+        o = A.attend(q, kc, vc, A.tree_mask(wpos[:, 0], anc, kv_pos))
     part = _mm(o.reshape(b, c, -1), a["wo"])
     return part, cache
 
 
 def block_ext(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
-              shard_idx, axis=MODEL_AXIS, q_chunk=1024, comm=None):
+              shard_idx, axis=MODEL_AXIS, q_chunk=1024, comm=None,
+              spos=None, anc=None):
     """Chunked-prefill block: x (B,C,d), pos (B,C). Returns (out, cache)."""
     assert kind.mixer == "gqa" and kind.window == 0, kind
     h = _norm(x, p["ln1"], cfg, shared=False, axis=axis)
     h = column_entry(h, axis)
     part, cache = gqa_mixer_ext(cfg, kind, p["attn"], h, pos, cache, lay,
-                                axis, q_chunk=q_chunk)
+                                axis, q_chunk=q_chunk, spos=spos, anc=anc)
     out = _wire_post_mixer(cfg, kind, p, x, part, p["attn"].get("bo"),
                            drop=drop, tp=tp, shard_idx=shard_idx, axis=axis,
                            comm=comm)
@@ -1000,37 +1012,51 @@ def block_ext(cfg, kind, lay, p, x, pos, cache, *, drop: bool, tp: int,
 # ---------------------------------------------------------------------------
 
 
-def gqa_mixer_page(cfg, kind, a, h, pos, cache, page_table, lay, axis):
+def gqa_mixer_page(cfg, kind, a, h, pos, cache, page_table, lay, axis,
+                   depths=None, anc=None):
     """Paged attention over a chunk: h (B,C,d); pos (B,) absolute start
-    position of each slot's chunk; cache {"k","v"} page pools."""
+    position of each slot's chunk; cache {"k","v"} page pools.
+
+    Tree mode: `depths` (C,) replaces the contiguous chunk offsets for
+    RoPE (token j sits at tree position pos+depths[j]) and `anc` (C,C)
+    switches chunk-internal visibility to the ancestor matrix; the
+    SCATTER stays chunk-contiguous (slot pos+j), matching the dense
+    tree layout.  Tree chunks are tiny, so the XLA paged_attend path is
+    used even under attn_backend="pallas"."""
     from repro.kernels import ops as KOPS
     q, k, v = _qkv(cfg, a, h, lay, axis)
-    pos2 = pos[:, None] + jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+    if depths is None:
+        pos2 = pos[:, None] + jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+    else:
+        pos2 = pos[:, None] + depths[None]
     q = apply_rope(q, pos2, cfg.rope_theta, cfg.rope_fraction)
     k = apply_rope(k, pos2, cfg.rope_theta, cfg.rope_fraction)
     cache = {"k": KOPS.scatter_tokens_pages(cache["k"], k, page_table, pos),
              "v": KOPS.scatter_tokens_pages(cache["v"], v, page_table, pos)}
-    if cfg.attn_backend == "pallas":
+    if cfg.attn_backend == "pallas" and anc is None:
         import jax as _jax
         interp = _jax.default_backend() != "tpu"
         o = KOPS.paged_attention(q, cache["k"], cache["v"], page_table, pos,
                                  interpret=interp)
     else:
-        o = A.paged_attend(q, cache["k"], cache["v"], page_table, pos)
+        o = A.paged_attend(q, cache["k"], cache["v"], page_table, pos,
+                           anc=anc)
     b, c = h.shape[:2]
     part = _mm(o.reshape(b, c, -1), a["wo"])
     return part, cache
 
 
 def block_page(cfg, kind, lay, p, x, pos, cache, page_table, *, drop: bool,
-               tp: int, shard_idx, axis=MODEL_AXIS, comm=None):
+               tp: int, shard_idx, axis=MODEL_AXIS, comm=None, depths=None,
+               anc=None):
     """Paged-cache block (decode C=1 or chunked-prefill extension C>1):
     x (B,C,d), pos (B,) chunk starts.  Returns (out, cache)."""
     assert kind.mixer == "gqa" and kind.window == 0, kind
     h = _norm(x, p["ln1"], cfg, shared=False, axis=axis)
     h = column_entry(h, axis)
     part, cache = gqa_mixer_page(cfg, kind, p["attn"], h, pos, cache,
-                                 page_table, lay, axis)
+                                 page_table, lay, axis, depths=depths,
+                                 anc=anc)
     out = _wire_post_mixer(cfg, kind, p, x, part, p["attn"].get("bo"),
                            drop=drop, tp=tp, shard_idx=shard_idx, axis=axis,
                            comm=comm)

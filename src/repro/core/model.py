@@ -594,7 +594,7 @@ def supports_spec_decode(cfg) -> bool:
 
 
 def verify_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
-                axis=MODEL_AXIS, q_chunk=1024):
+                axis=MODEL_AXIS, q_chunk=1024, tree=None):
     """Multi-token verify forward for speculative decoding.
 
     tokens (B, C): the last accepted token followed by C-1 drafted
@@ -605,6 +605,13 @@ def verify_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
     ((B, C, Vl) fp32 shard-local) plus the updated caches: logits[:, j]
     scores the token after tokens[:, j], which is what acceptance needs.
 
+    `tree=(depths, anc)` verifies a draft TREE instead of a chain:
+    token j keeps cache slot pos+j (distinct scatter positions) but
+    sits at tree position pos+depths[j] (RoPE + logits semantics), and
+    attends committed history plus its in-chunk ancestors anc[j]
+    (spec/verify.tree_layout builds the layout; docs/speculative.md).
+    tree=None is bit-identical to the pre-tree chain path.
+
     Rollback contract: rejected-suffix KV entries stay in the cache but
     are never causally visible (attention masks kv_pos <= q_pos) and are
     overwritten as soon as the position counter passes them again — so
@@ -613,7 +620,14 @@ def verify_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
     shard_idx = jax.lax.axis_index(axis)
     lay = _gqa_layout_or_none(cfg, tp)
     b, c = tokens.shape
-    pos2 = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None]     # (B, C)
+    spos2 = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None]    # (B, C)
+    if tree is None:
+        pos2, spos, anc = spos2, None, None
+    else:
+        depths, anc = tree
+        pos2 = pos[:, None] + jnp.asarray(depths, pos.dtype)[None]
+        spos = spos2
+        anc = jnp.asarray(anc, bool)
     x = embed_tokens(stacked["emb"], tokens, axis, shard_idx)
     if cfg.pos_emb == "learned":
         x = x + jnp.take(stacked["pos"], pos2, axis=0)
@@ -628,7 +642,8 @@ def verify_step(cfg, stacked, plan, tokens, pos, caches, *, tp,
             layer_p, cache = xs_i
             out, nc = B.block_ext(cfg, kind, lay, layer_p, xc, pos2, cache,
                                   drop=dropped, tp=tp, shard_idx=shard_idx,
-                                  axis=axis, q_chunk=q_chunk, comm=comm)
+                                  axis=axis, q_chunk=q_chunk, comm=comm,
+                                  spos=spos, anc=anc)
             return out, nc
 
         with ledger_scale(length), comm_context(block=s0, phase="verify"):
@@ -651,9 +666,11 @@ def supports_paged_attention(cfg) -> bool:
 
 
 def paged_step(cfg, stacked, plan, tokens, pos, caches, page_table, *, tp,
-               axis=MODEL_AXIS):
+               axis=MODEL_AXIS, tree=None):
     """Fused paged forward: decode (C=1), chunked-prefill extension, and
-    speculative verify all in one shape family.
+    speculative verify all in one shape family.  `tree=(depths, anc)`
+    switches the chunk to tree verification exactly as in verify_step
+    (scatter stays chunk-contiguous; RoPE/visibility follow the tree).
 
     tokens (B, C) at per-row absolute positions pos (B,); caches per
     segment hold paged K/V pools (length, P+1, ps, HkvL, dh) shared
@@ -672,7 +689,14 @@ def paged_step(cfg, stacked, plan, tokens, pos, caches, page_table, *, tp,
     shard_idx = jax.lax.axis_index(axis)
     lay = _gqa_layout_or_none(cfg, tp)
     b, c = tokens.shape
-    pos2 = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None]     # (B, C)
+    if tree is None:
+        depths, anc = None, None
+        pos2 = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None]  # (B, C)
+    else:
+        depths, anc = tree
+        depths = jnp.asarray(depths, pos.dtype)
+        anc = jnp.asarray(anc, bool)
+        pos2 = pos[:, None] + depths[None]
     x = embed_tokens(stacked["emb"], tokens, axis, shard_idx)
     if cfg.pos_emb == "learned":
         x = x + jnp.take(stacked["pos"], pos2, axis=0)
@@ -687,7 +711,8 @@ def paged_step(cfg, stacked, plan, tokens, pos, caches, page_table, *, tp,
             layer_p, cache = xs_i
             out, nc = B.block_page(cfg, kind, lay, layer_p, xc, pos, cache,
                                    page_table, drop=dropped, tp=tp,
-                                   shard_idx=shard_idx, axis=axis, comm=comm)
+                                   shard_idx=shard_idx, axis=axis, comm=comm,
+                                   depths=depths, anc=anc)
             return out, nc
 
         with ledger_scale(length), comm_context(block=s0, phase="decode"):

@@ -69,3 +69,15 @@ def classify(sens: np.ndarray, tau1: float, tau2: float) -> List[str]:
 def plan_from_ranking(res: SensitivityResult, n_spd: int,
                       n_layers: int) -> SPDPlanConfig:
     return SPDPlanConfig.from_ranking(res.ranking, n_spd, n_layers)
+
+
+def tier_modes(sens: np.ndarray, tau1: float, tau2: float, *,
+               isb: str, sb: str, esb: str) -> tuple:
+    """Per-layer block comm modes from Algorithm-1 tiers: ISB blocks get
+    the `isb` level, SB `sb`, ESB `esb` (levels are SPDPlanConfig.
+    from_modes block strings: "exact" | "quant8" | "quant4" | "drop" |
+    "drop+quant4" ...).  The draft-policy calibration search
+    (spec/calibrate.py) uses this to turn one measured sensitivity
+    profile into a family of candidate draft CommPolicies."""
+    table = {ISB: isb, SB: sb, ESB: esb}
+    return tuple(table[c] for c in classify(sens, tau1, tau2))

@@ -88,11 +88,27 @@ def main():
                     help="quantization level for the logits all-gather")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: tokens drafted per "
-                         "verify round (0 = off)")
-    ap.add_argument("--spec-draft", choices=["all-drop", "drop+quant4"],
+                         "verify round (0 = off); with --spec-adaptive "
+                         "this is each request's STARTING budget")
+    ap.add_argument("--spec-draft",
+                    choices=["all-drop", "drop+quant4", "calibrated"],
                     default="all-drop",
                     help="draft comm preset (same weights, cheaper "
-                         "syncs; see docs/speculative.md)")
+                         "syncs); 'calibrated' searches drop/quant "
+                         "policies for the cheapest one clearing the "
+                         "acceptance target on synthetic held-out "
+                         "prompts (see docs/speculative.md)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="per-request adaptive draft budget: k grows on "
+                         "fully accepted rounds (cap --spec-k-max) and "
+                         "shrinks on rejection streaks (floor 1)")
+    ap.add_argument("--spec-k-max", type=int, default=0,
+                    help="adaptive budget ceiling (0 = --spec-k)")
+    ap.add_argument("--spec-tree-width", type=int, default=1,
+                    help="tree speculation: also verify the draft's "
+                         "top-2..top-W first-position candidates as "
+                         "depth-1 branches in the same forward (1 = "
+                         "chain)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="DP-over-TP cluster serving: number of "
                          "weight-shared replicas behind the cluster "
@@ -131,6 +147,13 @@ def main():
         obs = Recorder(MetricsRegistry(), Tracer())
 
     paged = args.page_size > 0 and args.num_pages > 0
+    spec = None
+    if args.spec_k > 0:
+        spec = SpecConfig(
+            k=args.spec_k, draft=args.spec_draft,
+            adaptive=args.spec_adaptive,
+            k_max=(args.spec_k_max or None) if args.spec_adaptive
+            else None, tree_width=args.spec_tree_width)
     llm = LLM.load(
         args.arch, tp=args.tp, dp=args.dp, engine=args.engine,
         spd=args.spd, dtype=args.dtype, seed=args.seed,
@@ -140,8 +163,14 @@ def main():
         num_pages=args.num_pages if paged else None,
         prefill_chunk=args.prefill_chunk or None, q_chunk=64,
         dp_replicas=args.replicas, router=args.router,
-        spec=(SpecConfig(k=args.spec_k, draft=args.spec_draft)
-              if args.spec_k > 0 else None), obs=obs)
+        spec=spec if args.spec_draft != "calibrated" else None, obs=obs)
+    if spec is not None and args.spec_draft == "calibrated":
+        # held-out synthetic prompts (disjoint seed from the serving
+        # prompts below) drive the cheapest-qualifying policy search
+        crng = np.random.default_rng(args.seed + 1_000_003)
+        calib = [crng.integers(0, llm.cfg.vocab_size, 12).astype(np.int32)
+                 for _ in range(3)]
+        llm.enable_spec(spec, calib_prompts=calib)
 
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, llm.cfg.vocab_size,
@@ -184,6 +213,19 @@ def main():
                            sum(s.spec_committed for s in scheds)
                            / max(sum(s.spec_row_rounds
                                      for s in scheds), 1), 4)}
+        if args.spec_adaptive:
+            out["spec"]["adaptive"] = {"k_max": args.spec_k_max
+                                       or args.spec_k}
+        if args.spec_tree_width > 1:
+            out["spec"]["tree"] = {
+                "width": args.spec_tree_width,
+                "alt_commits": sum(s.spec_alt_commits for s in scheds)}
+        if llm.spec_calibration is not None:
+            cal = llm.spec_calibration
+            out["spec"]["calibrated"] = {
+                "policy": cal.name,
+                "calib_acceptance": round(cal.acceptance, 4),
+                "trials": len(cal.trials)}
     if paged:
         out["paged"] = {"page_size": args.page_size,
                         "num_pages": args.num_pages,

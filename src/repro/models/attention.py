@@ -45,6 +45,25 @@ def causal_mask(q_pos, kv_pos, window: int = 0):
     return m
 
 
+def tree_mask(pos, anc, kv_pos):
+    """Attention mask for a speculative TREE chunk (docs/speculative.md).
+
+    The chunk's C tokens occupy DISTINCT cache slots pos..pos+C-1
+    (scattered by chunk index) but sit at tree positions pos+depth
+    (RoPE); visibility follows the tree, not the slot order: kv slot m
+    is visible to chunk token i iff it holds committed history
+    (m < pos) or an in-chunk ancestor of i (anc[i, m - pos], diagonal
+    True).  pos (B,) chunk starts; anc (C, C) bool; kv_pos (B, Sk) slot
+    indices.  Returns bool (B, C, Sk); True = attend.
+    """
+    c = anc.shape[0]
+    rel = kv_pos - pos[:, None]                          # (B, Sk)
+    in_chunk = (rel >= 0) & (rel < c)
+    within = jnp.take(anc, jnp.clip(rel, 0, c - 1), axis=1)   # (C, B, Sk)
+    within = jnp.moveaxis(within, 0, 1)                  # (B, C, Sk)
+    return (rel < 0)[:, None, :] | (in_chunk[:, None, :] & within)
+
+
 def attend(q, k, v, mask, scale: float | None = None):
     """Dense softmax attention oracle.
 
@@ -119,7 +138,7 @@ def attention_any(q, k, v, q_pos, kv_pos, *, window: int = 0,
 # ---------------------------------------------------------------------------
 
 def paged_attend(q, k_pool, v_pool, page_table, pos, *,
-                 scale: float | None = None):
+                 scale: float | None = None, anc=None):
     """Paged-KV attention, XLA path: gather ONLY the table's pages.
 
     q (B,C,Hq,Dh) at absolute positions pos[b]..pos[b]+C-1; k_pool/v_pool
@@ -130,17 +149,24 @@ def paged_attend(q, k_pool, v_pool, page_table, pos, *,
     power-of-two table widths (runtime bucketing) keep XLA's balanced
     reduction trees associating the valid prefix identically.  The fused
     Pallas kernel (kernels/ops.paged_attention) is the TPU path that
-    skips even this bucketed gather."""
+    skips even this bucketed gather.
+
+    `anc` (C, C) bool switches the chunk to TREE visibility (tree_mask):
+    the C slots at pos..pos+C-1 attend per the ancestor matrix instead
+    of slot order (speculative tree verification)."""
     b, c = q.shape[:2]
     pn1, ps, hkv, dh = k_pool.shape
     n = page_table.shape[1]
     pt = jnp.where(page_table < 0, pn1 - 1, page_table)
     kg = jnp.take(k_pool, pt.reshape(-1), axis=0).reshape(b, n * ps, hkv, dh)
     vg = jnp.take(v_pool, pt.reshape(-1), axis=0).reshape(b, n * ps, hkv, dh)
-    q_pos = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
     kv_pos = jnp.broadcast_to(jnp.arange(n * ps)[None], (b, n * ps))
-    mask = causal_mask(q_pos, kv_pos) \
-        & (jnp.repeat(page_table, ps, axis=1) >= 0)[:, None, :]
+    if anc is None:
+        q_pos = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+        mask = causal_mask(q_pos, kv_pos)
+    else:
+        mask = tree_mask(pos, anc, kv_pos)
+    mask &= (jnp.repeat(page_table, ps, axis=1) >= 0)[:, None, :]
     return attend(q, kg, vg, mask, scale)
 
 

@@ -171,23 +171,85 @@ class Engine:
         return F.drive_pipelined_decode(self._decode(False), params,
                                         groups, depth=depth)
 
-    def verify(self, params, tokens, pos, caches):
+    def verify(self, params, tokens, pos, caches, tree=None):
         """Speculative verify on dense caches: tokens (B, C) — the last
         accepted token + C-1 drafts — scored in ONE forward; returns
         (full logits (B, C, V), new caches).  See M.verify_step for the
-        per-row position + rollback contract."""
-        step = self._step(("verify", tokens.shape), lambda: F.verify_step(
-            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk))
+        per-row position + rollback contract.  `tree=(depths, anc)` —
+        static tuples from spec/verify.tree_layout — verifies a draft
+        TREE chunk (chain + alternative branches) instead of a chain."""
+        step = self._step(("verify", tokens.shape, tree),
+                          lambda: F.verify_step(
+            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk,
+            tree=tree))
         return step(params, tokens, pos, caches)
 
-    def verify_paged(self, params, tokens, pos, page_table, pcaches):
+    def verify_paged(self, params, tokens, pos, page_table, pcaches,
+                     tree=None):
         """Paged speculative verify: gather pages -> dense verify math ->
-        scatter every newly written token back into its page."""
-        key = ("verify_paged", tokens.shape)
+        scatter every newly written token back into its page.  `tree` as
+        in `verify` (tree chunks scatter contiguously, so paged rollback
+        is identical to chains)."""
+        key = ("verify_paged", tokens.shape, tree)
         step = self._step(key, lambda: F.paged_verify_step(
             self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk,
-            n_tokens=int(tokens.shape[1])))
+            n_tokens=int(tokens.shape[1]), tree=tree))
         return step(params, tokens, pos, page_table, pcaches)
+
+    # ---- fused self-draft steps (spec/draft.py Drafter) ----
+
+    def draft(self, params, ctx, start, caches, *, k: int):
+        """Fused greedy k-token self-draft: catch-up verify + a scanned
+        k-1 decode chain in ONE jitted dispatch (F.draft_step).  Returns
+        (draft tokens (B, k) int32, new caches); caches donated."""
+        key = ("draft", ctx.shape, int(k))
+        step = self._step(key, lambda: F.draft_step(
+            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk, k=k))
+        return step(params, ctx, start, caches)
+
+    def draft_tree(self, params, ctx, start, caches, *, k: int,
+                   width: int):
+        """Fused greedy draft that also surfaces the first position's
+        top-2..top-`width` candidates as tree alternatives.  Returns
+        (toks (B, k), alts (B, width-1), caches)."""
+        key = ("draft_tree", ctx.shape, int(k), int(width))
+        step = self._step(key, lambda: F.draft_step(
+            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk, k=k,
+            tree_width=width))
+        return step(params, ctx, start, caches)
+
+    def draft_sampled(self, params, ctx, start, caches, temperature,
+                      top_k, top_p, keys, *, k: int):
+        """Fused sampled draft: per-request temperature / top-k / top-p
+        and per-draft-index keys (B, k, 2) drive the shared jitted
+        sampling core inside the scan.  Returns (toks (B, k), full
+        logits (B, k, V), caches) — the logits become the rejection
+        scheme's q distributions host-side."""
+        key = ("draft_sampled", ctx.shape, int(k))
+        step = self._step(key, lambda: F.draft_step(
+            self.cfg, self.plan, tp=self.tp, q_chunk=self.q_chunk, k=k,
+            sampled=True))
+        return step(params, ctx, start, caches, temperature, top_k,
+                    top_p, keys)
+
+    def copy_pos(self, caches, src, dst):
+        """Per-row cache position copy src[b] -> dst[b] on dense caches
+        (tree speculation relocates an accepted alternative branch's KV
+        to its true stream position; src == dst rows are no-ops)."""
+        step = self._step(("copy_pos",),
+                          lambda: F.copy_pos_step(self.cfg, self.plan))
+        return step(caches, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))[0]
+
+    def copy_pos_paged(self, pcaches, page_table, src, dst, *,
+                       page_size: int):
+        """copy_pos through the page table (unallocated pages resolve to
+        the trash page, so padded rows are harmless)."""
+        step = self._step(("copy_pos_paged", int(page_size)),
+                          lambda: F.copy_pos_paged_step(
+            self.cfg, self.plan, page_size=page_size))
+        return step(pcaches, page_table, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))[0]
 
     def _decode_paged(self, with_logits: bool):
         return self._step(

@@ -193,30 +193,35 @@ def paged_decode_step(cfg, plan, *, tp, with_logits=False, sampled=False):
                            donate=(4,), shard_batch=False)
 
 
-def verify_step(cfg, plan, *, tp, q_chunk):
+def verify_step(cfg, plan, *, tp, q_chunk, tree=None):
     """Speculative verify on dense caches: tokens (B, C) — the last
     accepted token + C-1 drafts — scored in ONE forward, full-vocab
     logits of EVERY chunk position gathered out (host-side acceptance
     needs all of them; M.verify_step has the per-row position +
-    rollback contract)."""
+    rollback contract).  `tree=(depths, anc)` — static tuples from
+    spec/verify.tree_layout — verifies a draft TREE chunk instead of a
+    chain (M.verify_step documents the layout)."""
     def local(p, toks, pos, cs):
         lg, ncs = M.verify_step(cfg, p, plan, toks, pos, cs, tp=tp,
-                                q_chunk=q_chunk)
+                                q_chunk=q_chunk, tree=tree)
         return full_logits_seq(cfg, lg), ncs
 
     return local, StepSpec(("params", "batch", "batch", "cache"),
                            ("batch", "cache"), donate=(3,))
 
 
-def paged_verify_step(cfg, plan, *, tp, q_chunk, n_tokens):
+def paged_verify_step(cfg, plan, *, tp, q_chunk, n_tokens, tree=None):
     """Paged speculative verify (and paged SUFFIX PREFILL: admission
     through the prefix cache feeds the uncached prompt tail through this
     step with other rows' tables masked to -1).  Fused on covered archs,
     legacy gather -> dense verify -> scatter elsewhere (batch
-    replicated, like paged_decode_step)."""
+    replicated, like paged_decode_step).  `tree` as in verify_step —
+    both paths scatter the chunk's KV contiguously at pos..pos+C-1, so
+    tree chunks page-roll back exactly like chains."""
     if M.supports_paged_attention(cfg):
         def local(p, toks, pos, pt, pc):
-            lg, pc2 = M.paged_step(cfg, p, plan, toks, pos, pc, pt, tp=tp)
+            lg, pc2 = M.paged_step(cfg, p, plan, toks, pos, pc, pt, tp=tp,
+                                   tree=tree)
             return full_logits_seq(cfg, lg), pc2
 
         return local, StepSpec(("params", "rep", "rep", "rep", "cache"),
@@ -229,7 +234,7 @@ def paged_verify_step(cfg, plan, *, tp, q_chunk, n_tokens):
         dense = _map_paged(flags, lambda c: KOPS.gather_pages(c, pt),
                            lambda c: c, pc)
         lg, new_dense = M.verify_step(cfg, p, plan, toks, pos, dense,
-                                      tp=tp, q_chunk=q_chunk)
+                                      tp=tp, q_chunk=q_chunk, tree=tree)
         pc2 = _map_paged(
             flags,
             lambda c, nd: KOPS.scatter_chunk_pages(c, nd, pt, pos, n_tokens),
@@ -238,6 +243,147 @@ def paged_verify_step(cfg, plan, *, tp, q_chunk, n_tokens):
 
     return local, StepSpec(("params", "rep", "rep", "rep", "cache"),
                            ("rep", "cache"), donate=(4,), shard_batch=False)
+
+
+def draft_step(cfg, plan, *, tp, q_chunk, k, sampled=False, tree_width=1):
+    """FUSED k-token self-draft: ONE jitted dispatch replaces the
+    drafter's per-token Python loop (k-1 decode dispatches + a verify).
+
+    The catch-up context ctx (B, C) runs through M.verify_step (writing
+    its KV at start..start+C-1), then a jax.lax.scan of k-1 decode
+    steps carries (token, caches) forward — greedy via the gather-free
+    greedy_token, sampled via the shared RS.sample_core with
+    per-draft-index keys (B, k, 2).  KV caches are donated like every
+    decode step.
+
+    Greedy returns (toks (B, k), caches); with tree_width > 1 the first
+    position also yields its top-2..top-w alternatives, (toks, alts
+    (B, w-1), caches).  Sampled returns (toks, full logits (B, k, V),
+    caches) — the scheduler turns the logits into the rejection
+    scheme's q distributions host-side (spec/verify.filtered_probs
+    mirrors sample_core's filtering exactly).
+    """
+    def chain(p, ctx, start, cs, draw0, draw):
+        lg, cs = M.verify_step(cfg, p, plan, ctx, start, cs, tp=tp,
+                               q_chunk=q_chunk)
+        base = start + ctx.shape[1] - 1   # each row's current position
+        first = draw0(lg[:, -1])
+        tok0 = first[0]
+
+        def body(carry, i):
+            tok, cs = carry
+            lg_i, cs = M.decode_step(cfg, p, plan, tok[:, None], base + i,
+                                     cs, tp=tp)
+            nxt, rec = draw(lg_i, i)
+            return (nxt, cs), rec
+
+        (_, cs), rest = jax.lax.scan(body, (tok0, cs),
+                                     jnp.arange(1, k))
+        return first, tok0, rest, cs
+
+    def stack_toks(tok0, rest_toks):
+        return jnp.concatenate(
+            [tok0[:, None], jnp.moveaxis(rest_toks, 0, 1)], axis=1)
+
+    if sampled:
+        def local(p, ctx, start, cs, t, kk, pp, keys):
+            def draw0(lg_last):
+                full = full_logits(cfg, lg_last)
+                return (RS.sample_core(full, t, kk, pp, keys[:, 0]), full)
+
+            def draw(lg_i, i):
+                full = full_logits(cfg, lg_i)
+                nxt = RS.sample_core(full, t, kk, pp, keys[:, i])
+                return nxt, (nxt, full)
+
+            (tok0, full0), _, (rest, fulls), cs = chain(
+                p, ctx, start, cs, draw0, draw)
+            logits = jnp.concatenate(
+                [full0[:, None], jnp.moveaxis(fulls, 0, 1)], axis=1)
+            return stack_toks(tok0, rest), logits, cs
+
+        return local, StepSpec(
+            ("params", "batch", "batch", "cache",
+             "batch", "batch", "batch", "batch"),
+            ("batch", "batch", "cache"), donate=(3,))
+
+    if tree_width > 1:
+        def local(p, ctx, start, cs):
+            def draw0(lg_last):
+                # top-w candidates at the FIRST draft position: the
+                # chain continues from top-1, the runners-up become the
+                # tree's alternative branches (verified, never drafted
+                # past depth 1, never written to the draft cache)
+                _, top = jax.lax.top_k(full_logits(cfg, lg_last),
+                                       tree_width)
+                top = top.astype(jnp.int32)
+                return (top[:, 0], top[:, 1:])
+
+            def draw(lg_i, i):
+                nxt = greedy_token(cfg, lg_i)
+                return nxt, nxt
+
+            (tok0, alts), _, rest, cs = chain(p, ctx, start, cs, draw0,
+                                              draw)
+            return stack_toks(tok0, rest), alts, cs
+
+        return local, StepSpec(("params", "batch", "batch", "cache"),
+                               ("batch", "batch", "cache"), donate=(3,))
+
+    def local(p, ctx, start, cs):
+        def draw0(lg_last):
+            tok = greedy_token(cfg, lg_last)
+            return (tok,)
+
+        def draw(lg_i, i):
+            nxt = greedy_token(cfg, lg_i)
+            return nxt, nxt
+
+        (tok0,), _, rest, cs = chain(p, ctx, start, cs, draw0, draw)
+        return stack_toks(tok0, rest), cs
+
+    return local, StepSpec(("params", "batch", "batch", "cache"),
+                           ("batch", "cache"), donate=(3,))
+
+
+def copy_pos_step(cfg, plan):
+    """Per-row single-position cache copy on dense caches: slot
+    src[b] -> dst[b] on every sequence-axis leaf.  Tree speculation
+    uses it to relocate an accepted alternative branch's KV from its
+    chunk slot to its true stream position before rollback; rows with
+    src == dst are no-ops (callers pad inactive rows with 0 -> 0)."""
+    def local(cs, src, dst):
+        def one(c):
+            bi = jnp.arange(c.shape[1])
+            return c.at[:, bi, dst].set(c[:, bi, src])
+
+        return (jax.tree.map(one, cs),)
+
+    return local, StepSpec(("cache", "batch", "batch"), ("cache",),
+                           donate=(0,))
+
+
+def copy_pos_paged_step(cfg, plan, *, page_size):
+    """copy_pos_step for page pools: resolve each row's src/dst slot
+    through its page table and copy within the pool.  Unallocated pages
+    resolve to the trash page, so padded rows copy trash -> trash."""
+    flags = M.cache_pageable_tree(cfg, plan)
+
+    def local(pc, pt, src, dst):
+        def one(c):
+            trash = c.shape[1] - 1
+            bi = jnp.arange(pt.shape[0])
+            sp = pt[bi, src // page_size]
+            dp = pt[bi, dst // page_size]
+            sp = jnp.where(sp < 0, trash, sp)
+            dp = jnp.where(dp < 0, trash, dp)
+            return c.at[:, dp, dst % page_size].set(
+                c[:, sp, src % page_size])
+
+        return (_map_paged(flags, one, lambda c: c, pc),)
+
+    return local, StepSpec(("cache", "rep", "rep", "rep"), ("cache",),
+                           donate=(0,), shard_batch=False)
 
 
 def copy_pages_step(cfg, plan):

@@ -13,12 +13,16 @@ docs/speculative.md; the scheduler loop lives in `repro.api.scheduler`.
                    spec=SpecConfig(k=4, draft="all-drop"))
     outs = llm.generate(prompts, SamplingParams(max_new=16))
 """
+from repro.spec.calibrate import (CalibrationResult, calibrate_draft,
+                                  candidate_policies)
 from repro.spec.draft import (DRAFT_PRESETS, Drafter, SpecConfig, SpecError,
                               SpecState, derive_draft_plan, spec_supported)
-from repro.spec.verify import accept_speculative, filtered_probs, spec_rng
+from repro.spec.verify import (accept_speculative, filtered_probs, spec_rng,
+                               tree_layout)
 
 __all__ = [
     "SpecConfig", "SpecError", "SpecState", "DRAFT_PRESETS", "Drafter",
     "derive_draft_plan", "spec_supported",
-    "accept_speculative", "filtered_probs", "spec_rng",
+    "accept_speculative", "filtered_probs", "spec_rng", "tree_layout",
+    "CalibrationResult", "calibrate_draft", "candidate_policies",
 ]

@@ -17,6 +17,11 @@ lightweight dense KV cache.  Presets (`DRAFT_PRESETS`):
                blocks drop, sensitive ones keep an int8 or exact sync.
                Needs a measured sensitivity profile (LLM.enable_spec
                runs the sweep from calibration batches).
+  calibrated   spec/calibrate.py searches drop/quant policy candidates
+               (including sensitivity-tiered mixes) for the cheapest one
+               whose MEASURED acceptance on held-out prompts clears the
+               target — the recommended preset; needs calibration data
+               (LLM.enable_spec runs and caches the search per arch).
 
 `Drafter` is the runtime half: it owns the draft engine + placed params
 + a dense per-slot cache, mirrors the committed stream position by
@@ -36,7 +41,7 @@ from repro.obs.recorder import NULL_RECORDER
 __all__ = ["SpecConfig", "SpecError", "SpecState", "DRAFT_PRESETS",
            "derive_draft_plan", "Drafter", "spec_supported"]
 
-DRAFT_PRESETS = ("all-drop", "drop+quant4", "tiered")
+DRAFT_PRESETS = ("all-drop", "drop+quant4", "tiered", "calibrated")
 
 
 class SpecError(ValueError):
@@ -48,13 +53,32 @@ class SpecConfig:
     """How to speculate.
 
     k        drafted tokens per verify round (the verify forward scores
-             k+1 positions at once).
+             k+1 positions at once).  With `adaptive=True` this is only
+             the INITIAL per-request budget.
     draft    one of DRAFT_PRESETS, or an explicit SPDPlanConfig to use
-             as the draft plan directly.
+             as the draft plan directly.  "calibrated" searches
+             drop/quant draft policies for the one maximizing measured
+             acceptance on held-out prompts (spec/calibrate.py; needs
+             calibration data — LLM.enable_spec runs it).
     n_spd / tau1 / tau2
              Algorithm-1 tiering knobs for the "tiered" preset (n_spd
              defaults to every layer being drop-eligible; the taus split
              ISB / SB / ESB exactly as `apply_spd` does).
+    adaptive / k_min / k_max
+             per-request adaptive draft budget (docs/speculative.md):
+             each request's k starts at `k`, grows by one on a fully
+             accepted round (cap k_max, default k), and shrinks after
+             two consecutive zero-acceptance rounds (floor k_min) — so
+             weak-draft requests degrade toward plain decode instead of
+             burning verify slots.  The round's verify width is the max
+             over active requests; rows with a smaller budget clamp
+             acceptance to their own first k_b drafts.
+    tree_width
+             1 = chain speculation; w > 1 additionally verifies the
+             draft's top-2..top-w candidates at the FIRST position as
+             depth-1 tree branches in the same forward, committing the
+             alternative + its bonus token when the chain's first draft
+             is rejected but the target's correction matches.
     """
 
     k: int = 4
@@ -62,6 +86,10 @@ class SpecConfig:
     n_spd: Optional[int] = None
     tau1: float = 0.05
     tau2: float = 0.5
+    adaptive: bool = False
+    k_min: int = 1
+    k_max: Optional[int] = None
+    tree_width: int = 1
 
     def __post_init__(self):
         if self.k < 1:
@@ -70,6 +98,34 @@ class SpecConfig:
                 and self.draft not in DRAFT_PRESETS):
             raise SpecError(f"draft must be an SPDPlanConfig or one of "
                             f"{DRAFT_PRESETS}, got {self.draft!r}")
+        if self.k_min < 1:
+            raise SpecError(f"spec k_min must be >= 1, got {self.k_min}")
+        k_max = self.k if self.k_max is None else self.k_max
+        if k_max < self.k_min:
+            raise SpecError(
+                f"spec k_max={k_max} < k_min={self.k_min}: the adaptive "
+                "budget window is empty")
+        if not (self.k_min <= self.k <= k_max):
+            raise SpecError(
+                f"spec k={self.k} outside the adaptive window "
+                f"[{self.k_min}, {k_max}]")
+        if self.tree_width < 1:
+            raise SpecError(
+                f"spec tree_width must be >= 1, got {self.tree_width}")
+        if self.tree_width > self.k_min + 1:
+            # a width-w round's verify chunk is [cur, chain(k_b), alts
+            # (w-1)]; once adaptive k shrinks a row to k_min the
+            # alternatives would outnumber the chain positions they are
+            # meant to rescue — reject the configuration up front
+            raise SpecError(
+                f"spec tree_width={self.tree_width} exceeds the verify "
+                f"chunk capacity k_min+1={self.k_min + 1} (alternatives "
+                "may not outnumber chain positions)")
+
+    @property
+    def k_cap(self) -> int:
+        """Effective upper draft budget (k_max defaulting to k)."""
+        return self.k if self.k_max is None else self.k_max
 
 
 def spec_supported(cfg: ModelConfig) -> bool:
@@ -78,14 +134,18 @@ def spec_supported(cfg: ModelConfig) -> bool:
 
 
 def derive_draft_plan(cfg: ModelConfig, spec: SpecConfig, *,
-                      sensitivity=None, ranking=None) -> SPDPlanConfig:
+                      sensitivity=None, ranking=None,
+                      policy: Optional[SPDPlanConfig] = None
+                      ) -> SPDPlanConfig:
     """Draft plan for `spec` on `cfg` (see module docstring).
 
     The tiered preset needs the Algorithm-1 sensitivity profile
     (`core.sensitivity.measure_sensitivity`); pass its `sensitivity` and
-    `ranking`.  Raises SpecError when the arch cannot self-draft (pure
-    SSM: no droppable sync; non-GQA/windowed stacks: no multi-token
-    verify forward yet)."""
+    `ranking`.  The calibrated preset needs a measured policy from
+    `spec/calibrate.py` (LLM.enable_spec runs the search and passes it
+    as `policy`).  Raises SpecError when the arch cannot self-draft
+    (pure SSM: no droppable sync; non-GQA/windowed stacks: no
+    multi-token verify forward yet)."""
     if not spec_supported(cfg):
         raise SpecError(
             f"{cfg.name}: self-speculative decoding needs an SPD-droppable "
@@ -97,6 +157,17 @@ def derive_draft_plan(cfg: ModelConfig, spec: SpecConfig, *,
             raise SpecError(f"draft plan covers {len(spec.draft.drop_mask)} "
                             f"layers, model has {n}")
         return spec.draft
+    if spec.draft == "calibrated":
+        if policy is None:
+            raise SpecError(
+                "the 'calibrated' draft preset needs a measured policy: "
+                "call LLM.enable_spec(spec, calib_batches=...) (or "
+                "calib_prompts=...) so spec/calibrate.py can search one, "
+                "or pass an explicit SPDPlanConfig as spec.draft")
+        if len(policy.drop_mask) != n:
+            raise SpecError(f"calibrated policy covers "
+                            f"{len(policy.drop_mask)} layers, model has {n}")
+        return policy
     if spec.draft == "all-drop":
         return SPDPlanConfig.full(n)
     if spec.draft == "drop+quant4":
@@ -118,11 +189,24 @@ def derive_draft_plan(cfg: ModelConfig, spec: SpecConfig, *,
 @dataclass
 class SpecState:
     """Runtime bundle handed to `api.scheduler.Scheduler(spec=...)`:
-    the per-round draft budget plus a Drafter (or any object with the
-    same `pos` / `insert` / `draft` surface — the soak tests stub it)."""
+    the draft budget knobs plus a Drafter (or any object with the same
+    `pos` / `insert` / `draft` surface — the soak tests stub it).
+
+    `k` is the fixed round budget, or the initial per-request budget
+    when `adaptive` — the scheduler then walks each request's k within
+    [k_min, k_max] from its running acceptance (SpecConfig docs).
+    `tree_width` > 1 turns rounds into depth-1 tree verification."""
 
     k: int
     drafter: object
+    adaptive: bool = False
+    k_min: int = 1
+    k_max: Optional[int] = None
+    tree_width: int = 1
+
+    @property
+    def k_cap(self) -> int:
+        return self.k if self.k_max is None else self.k_max
 
 
 class Drafter:
@@ -149,59 +233,124 @@ class Drafter:
         self.caches = engine.blank_caches(max_batch, cache_len)
         self.pos = np.zeros(max_batch, np.int32)
 
-    def insert(self, b: int, toks):
-        """Draft-prefill one admitted request into slot b (the draft
-        needs its own KV for the prompt — that is the price of sharing
-        weights instead of sharing caches)."""
-        from repro.runtime.engines import bucketed_prefill
+    def insert(self, b: int, toks, caches1=None):
+        """Draft-prefill one admitted request into slot b.
+
+        When the scheduler hands over its own admission prefill
+        (`caches1`, built under the TARGET plan), the drafter ADOPTS it
+        instead of re-prefilling the full prompt: the canonical weights
+        are shared and the layer-wise KV layout is identical between the
+        plans — only the stacked segmentation differs — so the target's
+        exact prompt KV restacks onto the draft plan's segment
+        boundaries with one device concat/slice pass.  Exact prompt KV
+        is at least as good a draft context as the cheap-policy KV the
+        drafter would compute itself (measurably better on aggressive
+        policies), and admission stops paying a second full prefill.
+        Falls back to its own prefill when the layouts cannot restack
+        (heterogeneous segments, windowed KV, stub engines)."""
         toks = np.asarray(toks, np.int32)
         s = len(toks)
+        if caches1 is not None and self._adopt(b, caches1):
+            self.pos[b] = s
+            self.obs.inc("spec_draft_adoptions_total")
+            return
+        from repro.runtime.engines import bucketed_prefill
         _, c1 = bucketed_prefill(self.engine, self.params, toks, s,
                                  self.cache_len, self.prefill_chunk)
         self.caches = self.engine.insert_slot(self.caches, c1, b)
         self.pos[b] = s
         self.obs.inc("spec_draft_prefills_total")
 
-    def draft(self, ctx, start, k: int, sample_fn, greedy: bool = False):
-        """Propose k tokens per row.
+    def _adopt(self, b: int, caches1) -> bool:
+        try:
+            c1 = self._resegment(caches1)
+            self.caches = self.engine.insert_slot(self.caches, c1, b)
+            return True
+        except Exception:
+            return False
+
+    def _resegment(self, caches1):
+        """Restack a target-plan cache tree (list of per-segment trees,
+        batch 1) onto the draft plan's segmentation: concat every leaf
+        along the layer axis, re-split at the draft segment lengths.
+        Raises when the segments are not layer-axis homogeneous."""
+        import jax
+        import jax.numpy as jnp
+        from repro.core import model as M
+        axis = self.engine.backend.cache_batch_axis - 1
+        td = jax.tree.structure(caches1[0])
+        if any(jax.tree.structure(s) != td for s in caches1[1:]):
+            raise ValueError("heterogeneous cache segments")
+        cat = (caches1[0] if len(caches1) == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=axis), *caches1))
+        segs = M.plan_segments(self.engine.cfg,
+                               self.engine.plan.drop_mask,
+                               self.engine.plan.qmodes)
+        lens = [ln for (_, ln, _, _) in segs]
+        total = jax.tree.leaves(cat)[0].shape[axis]
+        if total != sum(lens):
+            raise ValueError(f"layer count mismatch: {total} vs {lens}")
+        out, off = [], 0
+        for ln in lens:
+            out.append(jax.tree.map(
+                lambda c, o=off, n=ln: jax.lax.slice_in_dim(
+                    c, o, o + n, axis=axis), cat))
+            off += ln
+        return out
+
+    def draft(self, ctx, start, k: int, *, greedy: bool = False,
+              tree_width: int = 1, sampling=None):
+        """Propose k tokens per row through ONE fused draft dispatch
+        (runtime/forward.draft_step: catch-up verify + scanned decode —
+        the per-token Python loop this replaces cost one jitted dispatch
+        per drafted token).
 
         ctx (B, C): committed tokens ending at each row's current token;
         start (B,): absolute position of ctx[:, 0] (the catch-up prefix
         re-syncs rows whose draft cache trails the target — see class
-        docstring).  sample_fn(full_logits (B, V), i) -> (B,) tokens is
-        the scheduler's per-request draw (it records the distribution
-        used, which the rejection scheme needs as q).
+        docstring).
 
-        `greedy=True` (every active request greedy) skips sample_fn and
-        drafts by argmax through the engines' fused greedy decode —
-        only token ids cross to host, mirroring the verify fast path.
+        greedy=True (every active request greedy) drafts by argmax; with
+        tree_width > 1 the first position's top-2..top-w runners-up come
+        back as tree alternatives.  Otherwise `sampling` must be the
+        scheduler's (temperature, top_k, top_p, keys (B, k, 2)) arrays:
+        drafts are drawn on device by the shared sampling core and the
+        full per-draft logits return so the scheduler can reconstruct
+        each draw's exact q distribution (spec/verify.filtered_probs).
 
-        Returns (draft_toks (B, k) int32, draft_logits (B, k, V) fp32 —
-        None when greedy).
+        Returns (draft_toks (B, k) int32,
+                 draft_logits (B, k, V) fp32 — None when greedy,
+                 alts (B, tree_width-1) int32 — None when tree_width=1).
         """
         import jax.numpy as jnp
         self.obs.inc("spec_draft_rounds_total")
-        ctx = np.asarray(ctx, np.int32)
-        start = np.asarray(start, np.int32)
-        c = ctx.shape[1]
-        lg, self.caches = self.engine.verify(
-            self.params, jnp.asarray(ctx), jnp.asarray(start), self.caches)
-        base = start + c - 1            # each row's current-token position
-        last = lg[:, -1]                # device-side slice of (B, C, V)
+        jctx = jnp.asarray(np.asarray(ctx, np.int32))
+        jstart = jnp.asarray(np.asarray(start, np.int32))
+        if greedy and tree_width > 1:
+            toks, alts, self.caches = self.engine.draft_tree(
+                self.params, jctx, jstart, self.caches, k=k,
+                width=tree_width)
+            return (np.asarray(toks, np.int32), None,
+                    np.asarray(alts, np.int32))
         if greedy:
-            toks = [np.asarray(jnp.argmax(last, -1), np.int32)]
-            for i in range(1, k):
-                nxt, self.caches = self.engine.decode(
-                    self.params, jnp.asarray(toks[-1][:, None]),
-                    jnp.asarray(base + i), self.caches)
-                toks.append(np.asarray(nxt, np.int32)[:, 0])
-            return np.stack(toks, 1), None
-        logits = [np.asarray(last)]
-        toks = [np.asarray(sample_fn(logits[0], 0), np.int32)]
-        for i in range(1, k):
-            _, full, self.caches = self.engine.decode_with_logits(
-                self.params, jnp.asarray(toks[-1][:, None]),
-                jnp.asarray(base + i), self.caches)
-            logits.append(np.asarray(full))
-            toks.append(np.asarray(sample_fn(logits[-1], i), np.int32))
-        return np.stack(toks, 1), np.stack(logits, 1)
+            toks, self.caches = self.engine.draft(
+                self.params, jctx, jstart, self.caches, k=k)
+            return np.asarray(toks, np.int32), None, None
+        t, top_k, top_p, keys = sampling
+        toks, logits, self.caches = self.engine.draft_sampled(
+            self.params, jctx, jstart, self.caches,
+            jnp.asarray(t), jnp.asarray(top_k), jnp.asarray(top_p),
+            keys, k=k)
+        toks = np.asarray(toks, np.int32)
+        logits = np.asarray(logits)
+        alts = None
+        if tree_width > 1:
+            # host-side mirror of the tree draft's device top-k: the
+            # sampled path already pays for full logits, so the
+            # alternatives are free
+            from repro.spec.verify import alt_candidates
+            alts = np.stack([
+                np.asarray(alt_candidates(logits[b, 0], toks[b, 0],
+                                          tree_width), np.int32)
+                for b in range(toks.shape[0])])
+        return toks, logits, alts

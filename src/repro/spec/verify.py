@@ -37,7 +37,8 @@ from typing import List, Tuple
 import numpy as np
 
 __all__ = ["filtered_probs", "accept_greedy", "accept_speculative",
-           "spec_rng"]
+           "spec_rng", "tree_layout", "alt_candidates",
+           "accept_greedy_tree", "accept_speculative_tree"]
 
 _TINY = 1e-12
 
@@ -154,3 +155,104 @@ def accept_speculative(draft_toks, draft_probs, target_logits, *,
         p = filtered_probs(target_logits[k], temperature, top_k, top_p)
         committed.append(int(rng.choice(p.shape[0], p=p)))
     return committed, k
+
+
+# ---------------------------------------------------------------------------
+# tree speculation (docs/speculative.md "Tree verification")
+# ---------------------------------------------------------------------------
+#
+# The verify chunk for a width-w tree round is
+#
+#     [cur, d_1 .. d_k, a_1 .. a_{w-1}]        (C = k + w positions)
+#
+# where d_1..d_k is the greedy draft CHAIN and a_j are the draft's
+# top-2..top-w candidates at the FIRST position only (the cheapest tree
+# that can help: position 0 is where rejection is most likely, and a
+# depth-1 alternative needs no extra draft forwards).  Chunk token KV
+# scatters to DISTINCT cache slots pos..pos+C-1 but attends at its TREE
+# position pos+depth (RoPE), seeing committed history plus its in-chunk
+# ancestors only — tree_layout builds the static (depths, anc) masks the
+# runtime threads through verify_step.
+
+
+def tree_layout(k: int, width: int):
+    """Static (depths, anc) tuples for a k-chain + (width-1)-alternative
+    verify chunk; hashable, so one compiled verify serves each (k, w).
+
+    depths[i]  tree depth of chunk token i (cur=0, d_i=i, alts=1) —
+               token i attends/encodes at stream position pos+depths[i].
+    anc[i][j]  chunk token i may attend chunk token j (self included):
+               chain tokens see the chain prefix, each alternative sees
+               only cur and itself.
+    """
+    c = k + width
+    depths = [0] + list(range(1, k + 1)) + [1] * (width - 1)
+    anc = [[False] * c for _ in range(c)]
+    for i in range(k + 1):
+        for j in range(i + 1):
+            anc[i][j] = True
+    for j in range(1, width):
+        anc[k + j][0] = anc[k + j][k + j] = True
+    return tuple(depths), tuple(tuple(r) for r in anc)
+
+
+def alt_candidates(logits_row, d1: int, width: int) -> List[int]:
+    """Top width-1 first-position candidates excluding the chain draft
+    d1 (host-side mirror of the fused tree draft's device top-k, used by
+    the sampled path where the draft returns full logits)."""
+    order = np.argsort(np.asarray(logits_row))[::-1]
+    return [int(t) for t in order if int(t) != int(d1)][:width - 1]
+
+
+def accept_greedy_tree(draft_toks, alts, target_argmax, alt_argmax
+                       ) -> Tuple[List[int], int, int]:
+    """Greedy tree acceptance from argmax ids alone.
+
+    Runs the chain scheme first; if the FIRST draft is rejected and the
+    target's correction equals one of the verified alternatives, the
+    round still commits TWO tokens — the alternative plus the target's
+    argmax after it (alt_argmax[j], already scored by the same verify
+    forward).  Returns (committed, n_accepted_chain, used_alt) with
+    used_alt the 1-based alternative index, 0 when unused — the caller
+    must then relocate the alternative's KV from its chunk slot to the
+    committed stream position (scheduler copy_pos contract)."""
+    committed, n_acc = accept_greedy(draft_toks, target_argmax)
+    if n_acc == 0 and alts is not None:
+        for j, a in enumerate(np.asarray(alts).tolist()):
+            if committed[0] == int(a):
+                return [int(a), int(alt_argmax[j])], 0, j + 1
+    return committed, n_acc, 0
+
+
+def accept_speculative_tree(draft_toks, draft_probs, target_logits,
+                            alts, alt_logits, *,
+                            temperature: float = 0.0, top_k: int = 0,
+                            top_p: float = 1.0,
+                            rng: np.random.Generator | None = None,
+                            ) -> Tuple[List[int], int, int]:
+    """Tree acceptance for sampled rows — distribution-preserving.
+
+    The chain runs the standard rejection scheme untouched, so the
+    position-0 commit keeps its exact distribution.  Only when the
+    residual replacement happens to EQUAL a verified alternative does
+    the round commit a second token, drawn from the target's filtered
+    distribution after that alternative (alt_logits[j] — exact
+    conditional, scored in the same verify forward).  Position 1's
+    marginal is the exact conditional either way: committed now from
+    alt_logits, or next round by plain decode — so the committed stream
+    remains distributed exactly as target-only sampling."""
+    committed, n_acc = accept_speculative(
+        draft_toks, draft_probs, target_logits, temperature=temperature,
+        top_k=top_k, top_p=top_p, rng=rng)
+    if n_acc == 0 and alts is not None:
+        for j, a in enumerate(np.asarray(alts).tolist()):
+            if committed[0] != int(a):
+                continue
+            if temperature <= 0.0:
+                bonus = int(np.argmax(alt_logits[j]))
+            else:
+                p = filtered_probs(alt_logits[j], temperature, top_k,
+                                   top_p)
+                bonus = int(rng.choice(p.shape[0], p=p))
+            return [int(a), bonus], 0, j + 1
+    return committed, n_acc, 0

@@ -318,6 +318,47 @@ def test_spec_round_instrumentation():
         assert r.out == reference_stream(r.prompt, len(r.out))
 
 
+def test_adaptive_tree_spec_obs_schema():
+    """The adaptive/tree round instrumentation: per-slot `spec_k`
+    gauges, the per-request `spec_request_acceptance` histogram (one
+    observation per finished request that drafted), the tree
+    alt-commit counter, and tree-labeled draft/verify spans."""
+    from repro.spec import SpecState
+    obs = Recorder(MetricsRegistry(), Tracer(clock=VirtualClock(tick=1e-3)))
+    cc = CacheConfig(cache_len=32, max_batch=2, page_size=4, num_pages=12)
+    sched = Scheduler(FakeEngine(), None, cc,
+                      spec=SpecState(k=3, drafter=FakeDrafter(cc.max_batch),
+                                     adaptive=True, k_min=1, k_max=4,
+                                     tree_width=2),
+                      obs=obs)
+    reqs = mk_requests(4, seed=7, max_new=8)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    snap = obs.snapshot()
+    # per-slot adaptive budget gauge, labeled — within the window
+    ks = {k: v for k, v in snap.items() if k.startswith('spec_k{')}
+    assert ks and all(k.startswith('spec_k{slot="') for k in ks)
+    assert all(1 <= v <= 4 for v in ks.values())
+    # per-request acceptance histogram: one observation per finished
+    # request that drafted, values are ratios in [0, 1]
+    drafted = [r for r in reqs if r.n_drafted]
+    assert snap["spec_request_acceptance_count"] == len(drafted)
+    assert snap["spec_request_acceptance_sum"] == pytest.approx(
+        sum(r.n_draft_accepted / r.n_drafted for r in drafted))
+    assert snap['spec_request_acceptance_bucket{le="+Inf"}'] == len(drafted)
+    # tree recovery counter mirrors the scheduler's native stat
+    assert snap.get("spec_tree_alt_commits_total", 0.0) \
+        == sched.spec_alt_commits
+    # draft/verify spans are tree-labeled
+    spans = [e for e in obs.tracer.events
+             if e["ph"] == "X" and e["name"] in ("draft", "verify")]
+    assert spans and all(e["args"]["tree"] == 2 for e in spans)
+    assert sched.metrics()["spec_alt_commits"] == sched.spec_alt_commits
+    for r in reqs:
+        assert r.out == reference_stream(r.prompt, len(r.out))
+
+
 def test_null_recorder_is_inert():
     assert not NULL_RECORDER.enabled
     assert NULL_RECORDER.now() == 0.0

@@ -106,19 +106,23 @@ class FakeEngine:
         return self._dec(cur, pos), pcaches
 
     # speculative verify: one-hot next-token logits for every chunk
-    # position (token toks[:, j] sits at absolute position pos + j)
-    def verify(self, params, toks, pos, caches):
+    # position (chain token toks[:, j] sits at absolute position pos + j;
+    # a tree chunk's column j sits at pos + depths[j] instead, which is
+    # what makes a depth-1 alternative score like a second position-1)
+    def verify(self, params, toks, pos, caches, tree=None):
         toks = np.asarray(toks)
         pos = np.asarray(pos)
         b, c = toks.shape
+        depths = tree[0] if tree is not None else tuple(range(c))
         logits = np.full((b, c, V), -1.0, np.float32)
         for j in range(c):
-            nxt = (toks[:, j] * 31 + pos + j + 2) % V
+            nxt = (toks[:, j] * 31 + pos + depths[j] + 2) % V
             logits[np.arange(b), j, nxt] = 1.0
         return jnp.asarray(logits), caches
 
-    def verify_paged(self, params, toks, pos, page_table, pcaches):
-        lg, _ = self.verify(params, toks, pos, None)
+    def verify_paged(self, params, toks, pos, page_table, pcaches,
+                     tree=None):
+        lg, _ = self.verify(params, toks, pos, None, tree=tree)
         return lg, pcaches
 
 
@@ -128,35 +132,39 @@ class FakeDrafter:
     WRONG token.  The verify round must reject exactly there, so spec
     scheduling exercises partial acceptance, rollback/truncation, and
     preemption/cancel of requests carrying unverified draft tokens —
-    while the committed greedy streams stay equal to the reference."""
+    while the committed greedy streams stay equal to the reference.
+
+    With `tree_width` > 1 the first-position ALTERNATIVE is the correct
+    token exactly when the chain draft is corrupted (and a wrong token
+    otherwise), so tree rounds deterministically exercise BOTH the
+    alt-commit recovery path (rejected chain -> alt + bonus) and plain
+    alt-miss rejections."""
 
     def __init__(self, max_batch):
         self.pos = np.zeros(max_batch, np.int32)
 
-    def insert(self, b, toks):
+    def insert(self, b, toks, caches1=None):
         self.pos[b] = len(toks)
 
-    def draft(self, ctx, start, k, sample_fn, greedy=False):
-        # greedy=True permits skipping sample_fn; calling it is also
-        # valid (it draws argmax for greedy rows), which keeps this stub
-        # on the one code path
+    def draft(self, ctx, start, k, *, greedy=False, tree_width=1,
+              sampling=None):
         ctx = np.asarray(ctx)
         start = np.asarray(start)
-        b, c = ctx.shape
-        base = start + c - 1
+        base = start + ctx.shape[1] - 1
         cur = ctx[:, -1].copy()
-        toks, logits = [], []
+        toks = []
+        alts = None
         for i in range(k):
             p = base + i
             nxt = (cur * 31 + p + 2) % V
             prop = np.where(p % 3 == 0, (nxt + 1) % V, nxt)
-            lg = np.full((b, V), -1.0, np.float32)
-            lg[np.arange(b), prop] = 1.0
-            chosen = np.asarray(sample_fn(lg, i))
-            toks.append(chosen)
-            logits.append(lg)
-            cur = chosen
-        return np.stack(toks, 1), np.stack(logits, 1)
+            if i == 0 and tree_width > 1:
+                alt = np.where(p % 3 == 0, nxt, (nxt + 1) % V)
+                alts = np.stack([alt] * (tree_width - 1),
+                                1).astype(np.int32)
+            toks.append(prop.astype(np.int32))
+            cur = prop
+        return np.stack(toks, 1), None, alts
 
 
 def _check_invariants(sched: Scheduler):
@@ -289,6 +297,81 @@ def test_scheduler_spec_soak(data):
     if sched.spec_row_rounds:
         # every verify round commits at least one target-approved token
         assert sched.spec_tokens_per_step >= 1.0
+
+
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(st.data())
+def test_scheduler_adaptive_tree_soak(data):
+    """The spec soak with ADAPTIVE per-request budgets and (when the
+    window allows it) depth-1 TREE rounds: per-slot k oscillates as
+    FakeDrafter's corruption pattern alternates full-accept and
+    zero-accept rounds, tree alt-commits trigger the paged alt-KV
+    relocation + `PagePool.shrink` rollback, and requests are cancelled
+    or preempted mid-round — all while every committed greedy stream
+    still equals the closed-form reference and the free-list invariants
+    hold after every op."""
+    from repro.spec import SpecState
+
+    cc = CacheConfig(cache_len=32, max_batch=3, page_size=4, num_pages=9)
+    k_min = data.draw(st.integers(1, 2), label="k_min")
+    k_max = data.draw(st.integers(k_min, 4), label="k_max")
+    k0 = data.draw(st.integers(k_min, k_max), label="k0")
+    width = data.draw(st.integers(1, min(2, k_min + 1)), label="width")
+    sched = Scheduler(FakeEngine(), None, cc,
+                      spec=SpecState(k=k0, drafter=FakeDrafter(cc.max_batch),
+                                     adaptive=True, k_min=k_min,
+                                     k_max=k_max, tree_width=width))
+    submitted, cancelled = [], []
+    uid = 0
+    kb_seen = set()
+    for _ in range(data.draw(st.integers(4, 14), label="n_ops")):
+        op = data.draw(st.sampled_from(["submit", "step", "steps",
+                                        "cancel"]), label="op")
+        if op == "submit":
+            plen = data.draw(st.integers(1, 12), label="plen")
+            max_new = data.draw(st.integers(1, 8), label="max_new")
+            prompt = np.asarray(
+                data.draw(st.lists(st.integers(0, V - 1), min_size=plen,
+                                   max_size=plen), label="prompt"),
+                np.int32)
+            req = Request(uid=uid, prompt=prompt, max_new=max_new)
+            uid += 1
+            try:
+                sched.submit(req)
+                submitted.append(req)
+            except InvalidRequestError:
+                assert plen + max_new > cc.cache_len \
+                    or not sched.kv.pool.fits_alone(plen + max_new)
+        elif op == "cancel" and submitted:
+            req = submitted.pop(
+                data.draw(st.integers(0, len(submitted) - 1), label="ci"))
+            sched.cancel([req])
+            cancelled.append(req)
+        else:
+            for _ in range(1 if op == "step"
+                           else data.draw(st.integers(2, 4), label="k2")):
+                sched.step()
+        # adaptive budgets never escape [k_min, k_max]
+        for b, r in enumerate(sched.slots):
+            if r is not None:
+                kb = int(sched._spec_kb[b])
+                assert k_min <= kb <= k_max, (kb, k_min, k_max)
+                kb_seen.add(kb)
+        _check_invariants(sched)
+
+    sched.run(max_steps=500)
+    _check_invariants(sched)
+    for req in submitted:
+        assert req.done, req.uid
+        assert req.out == reference_stream(req.prompt, req.max_new), \
+            (req.uid, req.n_preempted, req.n_drafted, req.n_draft_accepted)
+    for req in cancelled:
+        assert req.uid not in sched.completed
+    assert sched.kv.pool.num_free == cc.num_pages
+    if width > 1 and sched.spec_rounds >= 4:
+        # the corruption pattern guarantees first-position rejections;
+        # with the correct-token alt those recover through the tree
+        assert sched.spec_alt_commits > 0 or sched.spec_accepted == 0
 
 
 @settings(max_examples=max(5, EXAMPLES // 5), deadline=None)

@@ -67,15 +67,46 @@ def test_greedy_spec_token_identical(engine, paged, greedy_ref):
     assert sched.spec_tokens_per_step >= 1.0
 
 
-def test_greedy_spec_identical_under_preemption(greedy_ref):
+@pytest.mark.parametrize("engine,paged", ENGINE_MATRIX, ids=ENGINE_IDS)
+def test_greedy_adaptive_tree_token_identical(engine, paged, greedy_ref):
+    """Adaptive per-request k AND depth-1 tree verification change how
+    many tokens commit per round, never which tokens commit: the greedy
+    stream stays identical on every engine x cache layout."""
+    prompts, sp, ref = greedy_ref
+    llm = _load(engine, paged,
+                spec=SpecConfig(k=3, draft="all-drop", adaptive=True,
+                                k_min=1, k_max=5, tree_width=2))
+    outs = llm.generate(prompts, sp)
+    assert [o.token_ids for o in outs] == ref
+    sched = llm.serve()
+    assert sched.spec_rounds > 0
+
+
+def test_tree_alt_commits_fire_on_all_drop():
+    """The all-drop draft is wrong often enough that some first-position
+    rejections recover through the tree alternative (the mechanism the
+    tree pays for — and the counter the bench gates on)."""
+    llm = _load("sim", paged=False,
+                spec=SpecConfig(k=3, draft="all-drop", adaptive=True,
+                                k_min=1, k_max=5, tree_width=2))
+    llm.generate(_prompts(llm.cfg), SamplingParams(max_new=MAXNEW))
+    assert llm.serve().spec_alt_commits > 0
+
+
+@pytest.mark.parametrize("spec", [
+    SpecConfig(k=3, draft="all-drop"),
+    SpecConfig(k=3, draft="all-drop", adaptive=True, k_min=1, k_max=5,
+               tree_width=2),
+], ids=["chain", "adaptive-tree"])
+def test_greedy_spec_identical_under_preemption(spec, greedy_ref):
     """A pool small enough to force eviction mid-speculation: requests
     carrying unverified draft state are preempted, resumed, and still
-    produce the exact greedy streams."""
+    produce the exact greedy streams — with fixed k and with adaptive
+    budgets + tree rounds (whose wider chunks stress page growth)."""
     prompts, sp, ref = greedy_ref
     llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim",
                    dtype="float32", cache_len=64, max_batch=3, q_chunk=64,
-                   page_size=4, num_pages=10,
-                   spec=SpecConfig(k=3, draft="all-drop"))
+                   page_size=4, num_pages=10, spec=spec)
     outs = llm.generate(prompts, sp)
     sched = llm.serve()
     sched.pool.check()
@@ -128,15 +159,20 @@ def test_rejection_scheme_preserves_target_distribution():
     pos = sched.pos.copy()
     ctx = np.zeros((sched.max_batch, 1), np.int32)
     ctx[0, 0] = sched.cur[0, 0]
-    qs = {}
-
-    def sample_fn(logits, i):
-        qs[i] = logits.copy()
-        return np.argmax(logits, -1).astype(np.int32)
-
-    draft_toks, draft_logits = dr.draft(ctx, pos, k, sample_fn)
-    ver = np.concatenate([sched.cur, draft_toks], 1)
+    # the fused sampled draft at temperature 0 argmaxes on device (same
+    # drafts the greedy path picks) AND returns the full per-draft
+    # logits the rejection scheme needs
     import jax.numpy as jnp
+    from repro.runtime import sampling as RS
+    n = sched.max_batch
+    keys = jnp.stack([RS.make_keys(np.zeros(n, np.int32),
+                                   np.full(n, 131 + 17 + i, np.int32))
+                      for i in range(k)], axis=1)
+    draft_toks, draft_logits, _ = dr.draft(
+        ctx, pos, k, greedy=False,
+        sampling=(np.zeros(n, np.float32), np.zeros(n, np.int32),
+                  np.ones(n, np.float32), keys))
+    ver = np.concatenate([sched.cur, draft_toks], 1)
     target_logits = sched.kv.verify(llm.params, jnp.asarray(ver),
                                     jnp.asarray(pos))[0]
     dlg = draft_logits[0]
@@ -160,6 +196,77 @@ def test_rejection_scheme_preserves_target_distribution():
     # and the scheme really was exercised: drafts disagree with the
     # target sometimes (all-drop draft) but not always
     assert 0 < (counts > 0).sum() <= 16
+
+
+def test_tree_rejection_preserves_target_distribution():
+    """Same statistical lock as above but through the TREE acceptance
+    path with a CLAMPED draft budget (k_b=2 of k=3 — exactly what an
+    adaptive row mid-shrink sees) and a real depth-1 alternative scored
+    by a tree verify forward.  The alt branch only relabels the path a
+    rejected first draft was taking anyway, so the first committed
+    token's marginal must still match the filtered target distribution
+    FOR ANY alt choice (same N and tolerance as the chain test) — here
+    the alt is the target's filtered mode, which maximizes how often the
+    branch actually fires under the all-drop draft."""
+    from repro.spec.verify import accept_speculative_tree, tree_layout
+
+    llm = _load("sim", paged=False, spec=SpecConfig(k=3, draft="all-drop"))
+    prompts = _prompts(llm.cfg, n=1)
+    sched = llm.serve()
+    sched.submit(Request(uid=0, prompt=prompts[0], max_new=4))
+    sched._admit()
+    dr = sched.spec.drafter
+    k, w, kb = 3, 2, 2
+    pos = sched.pos.copy()
+    ctx = np.zeros((sched.max_batch, 1), np.int32)
+    ctx[0, 0] = sched.cur[0, 0]
+    import jax.numpy as jnp
+    from repro.runtime import sampling as RS
+    n = sched.max_batch
+    keys = jnp.stack([RS.make_keys(np.zeros(n, np.int32),
+                                   np.full(n, 17 + i, np.int32))
+                      for i in range(k)], axis=1)
+    draft_toks, draft_logits, _ = dr.draft(
+        ctx, pos, k, greedy=False,
+        sampling=(np.zeros(n, np.float32), np.zeros(n, np.int32),
+                  np.ones(n, np.float32), keys))
+    dlg = draft_logits[0]
+    temp, top_k, top_p = 0.8, 16, 0.95
+    # pass 1 (chain verify): target logits at position 0 pick the alt —
+    # the highest-target-probability token that differs from the greedy
+    # chain draft, i.e. the token a rejected first draft most often
+    # resolves to
+    ver0 = np.concatenate([sched.cur, draft_toks], 1)
+    t0 = np.asarray(sched.kv.verify(llm.params, jnp.asarray(ver0),
+                                    jnp.asarray(pos))[0, 0])
+    order = np.argsort(-filtered_probs(t0, temp, top_k, top_p))
+    alt = int(order[0] if order[0] != draft_toks[0, 0] else order[1])
+    alts = np.full((n, w - 1), alt, np.int32)
+    # pass 2 (tree verify): score the alt branch in the same forward
+    ver = np.concatenate([sched.cur, draft_toks, alts], 1)
+    sched.kv.truncate(0, int(pos[0]))
+    tlg = np.asarray(sched.kv.verify(llm.params, jnp.asarray(ver),
+                                     jnp.asarray(pos),
+                                     tree=tree_layout(k, w))[0])
+    q = np.stack([filtered_probs(dlg[i], temp, top_k, top_p)
+                  for i in range(kb)])
+    p0 = filtered_probs(tlg[0], temp, top_k, top_p)
+    V = p0.shape[0]
+    N = 30_000
+    counts = np.zeros(V)
+    alt_commits = 0
+    for t in range(N):
+        rng = np.random.default_rng(20_000 + t)
+        drafts = np.asarray([rng.choice(V, p=q[i]) for i in range(kb)])
+        committed, _, used_alt = accept_speculative_tree(
+            drafts, q, tlg[:kb + 1], alts[0], tlg[k + 1:],
+            temperature=temp, top_k=top_k, top_p=top_p, rng=rng)
+        counts[committed[0]] += 1
+        alt_commits += bool(used_alt)
+    tv = 0.5 * np.abs(counts / N - p0).sum()
+    assert tv < 0.03, tv
+    # the alt branch really fired (otherwise this is just the chain test)
+    assert alt_commits > 0
 
 
 def test_greedy_acceptance_is_argmax_chain():
@@ -202,6 +309,25 @@ def test_sampled_spec_runs_and_respects_budget():
                for o in outs for t in o.token_ids)
 
 
+def test_drafter_adopts_admission_prefill(greedy_ref):
+    """Cold admissions hand the target-plan prompt KV to the drafter,
+    which restacks it onto the draft plan's segmentation instead of
+    paying a second full prefill — same tokens out, zero draft prefill
+    dispatches, and the adoption counter proves the fused path ran."""
+    from repro.obs import MetricsRegistry, Recorder
+
+    prompts, sp, ref = greedy_ref
+    obs = Recorder(MetricsRegistry())
+    llm = LLM.load("smollm-360m-reduced", tp=2, engine="sim",
+                   dtype="float32", cache_len=64, max_batch=3, q_chunk=64,
+                   spec=SpecConfig(k=3, draft="all-drop"), obs=obs)
+    outs = llm.generate(prompts, sp)
+    assert [o.token_ids for o in outs] == ref
+    snap = obs.snapshot()
+    assert snap["spec_draft_adoptions_total"] == len(prompts)
+    assert snap.get("spec_draft_prefills_total", 0.0) == 0.0
+
+
 # ---------------------------------------------------------------------------
 # Draft presets
 # ---------------------------------------------------------------------------
@@ -231,11 +357,63 @@ def test_tiered_draft_accepts_at_least_all_drop():
     assert r_tiered >= r_all, (r_tiered, r_all)
 
 
+def test_calibrated_draft_search():
+    """calibrate_draft walks candidates cheapest-first, stops at the
+    acceptance target, caches per (arch, engine, tp), and wires into
+    enable_spec as the 'calibrated' preset."""
+    from repro.spec import SpecConfig as SC
+    from repro.spec import calibrate_draft, candidate_policies
+    from repro.spec.calibrate import _policy_cost, clear_cache
+
+    llm = _load("sim", paged=False)
+    cands = candidate_policies(llm.cfg)
+    # cheapest-wire-first ordering, tier mixes only with a profile
+    costs = [_policy_cost(nm, pl) for nm, pl in cands]
+    assert costs == sorted(costs)
+    assert len(candidate_policies(
+        llm.cfg, sensitivity=np.linspace(0, 1, llm.cfg.n_layers))) \
+        == len(cands) + 3
+    clear_cache()
+    prompts = _prompts(llm.cfg, n=2)
+    trimmed = cands[:2]        # keep the test cheap: two candidates
+    res = calibrate_draft(llm, prompts, k=3, target=0.01,
+                          candidates=trimmed, max_new=8)
+    assert res.name in {nm for nm, _ in trimmed}
+    assert 0.0 <= res.acceptance <= 1.0 and res.trials
+    # process cache: the second call never re-measures
+    assert calibrate_draft(llm, prompts, k=3, candidates=trimmed) is res
+    # enable_spec end-to-end (hits the cache above)
+    llm.enable_spec(SC(k=3, draft="calibrated"), calib_prompts=prompts)
+    assert llm.spec_calibration is res
+    assert llm.draft_plan is res.policy
+    outs = llm.generate(prompts[:1], SamplingParams(max_new=4))
+    assert len(outs[0].token_ids) == 4
+    with pytest.raises(SpecError):
+        calibrate_draft(llm, [], k=3)
+    clear_cache()
+
+
 def test_spec_config_validation():
     with pytest.raises(SpecError):
         SpecConfig(k=0)
     with pytest.raises(SpecError):
         SpecConfig(draft="nope")
+    # adaptive window: empty, or k outside it
+    with pytest.raises(SpecError):
+        SpecConfig(k=2, adaptive=True, k_min=3, k_max=2)
+    with pytest.raises(SpecError):
+        SpecConfig(k=5, adaptive=True, k_min=2, k_max=4)
+    with pytest.raises(SpecError):
+        SpecConfig(k=3, k_min=0)
+    # tree width: bounded by the verify chunk the smallest budget builds
+    with pytest.raises(SpecError):
+        SpecConfig(k=3, tree_width=0)
+    with pytest.raises(SpecError):
+        SpecConfig(k=3, tree_width=3)          # k_min=1 -> capacity 2
+    SpecConfig(k=3, adaptive=True, k_min=2, k_max=5, tree_width=3)
+    # calibrated without calibration data
+    with pytest.raises(SpecError):
+        _load("sim", paged=False, spec=SpecConfig(draft="calibrated"))
     # tiered without a sensitivity profile
     with pytest.raises(SpecError):
         _load("sim", paged=False, spec=SpecConfig(draft="tiered"))
